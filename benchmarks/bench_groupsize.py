@@ -1,0 +1,56 @@
+"""Fig 11: tile+group size combinations (8+16 ... 32+64), cost-model speedup
+normalized to the 16-tile baseline, accounting for BGM||GSM overlap."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import PROFILE_SCENES, emit, scene_and_camera
+from repro.core.cost_model import GSTG_ASIC, estimate
+from repro.core.pipeline import RenderConfig, render
+
+COMBOS = [(8, 16), (8, 32), (16, 32), (16, 64), (32, 64)]
+
+
+def _crop(cam, px):
+    return dataclasses.replace(
+        cam, width=(cam.width // px) * px, height=(cam.height // px) * px
+    )
+
+
+def run() -> dict:
+    results = {}
+    for name in PROFILE_SCENES:
+        scene, cam = scene_and_camera(name)
+        base_cfg = RenderConfig(
+            mode="tile_baseline", tile=16, group=64,
+            tile_capacity=1024, group_capacity=1024, span=6,
+        )
+        base = render(scene, _crop(cam, 64), base_cfg).stats
+        t_base = estimate(base, GSTG_ASIC, mode="tile_baseline").total_s
+        row = {}
+        for tile, group in COMBOS:
+            cfg = RenderConfig(
+                mode="gstg", tile=tile, group=group,
+                tile_capacity=1024, group_capacity=1024, span=6,
+            )
+            s = render(scene, _crop(cam, group), cfg).stats
+            c = estimate(s, GSTG_ASIC, mode="gstg", execution="asic")
+            row[f"{tile}+{group}"] = t_base / c.total_s
+        results[name] = row
+    avg = {
+        k: float(np.mean([results[s][k] for s in PROFILE_SCENES]))
+        for k in results[PROFILE_SCENES[0]]
+    }
+    results["average"] = avg
+    best = max(avg, key=avg.get)
+    emit("fig11_group_size_sweep", 0.0,
+         f"best={best} speedup={avg[best]:.2f}x vs 16px baseline")
+    return results
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,36 @@
+"""Wall-time microbenchmark of the actual JAX renderer on this host (CPU):
+GS-TG vs per-tile baseline vs large-tile baseline, jit-compiled.
+
+This measures the ALGORITHM on the XLA substrate (sorting-key reduction shows
+up directly in the binning time); the accelerator-level speedups are the cost
+model's job (bench_accel)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, scene_and_camera, timed
+from repro.core.pipeline import RenderConfig, render
+
+
+def run() -> dict:
+    scene, cam = scene_and_camera("train", n_gaussians=12_000)
+    out = {}
+    for mode in ("tile_baseline", "gstg", "group_baseline"):
+        cfg = RenderConfig(
+            mode=mode, tile=16, group=64,
+            tile_capacity=1024, group_capacity=1024, span=6,
+        )
+        fn = jax.jit(lambda s: render(s, cam, cfg).image)
+        us, _ = timed(fn, scene, reps=3)
+        out[mode] = us
+    emit(
+        "render_walltime_cpu",
+        out["gstg"],
+        f"gstg={out['gstg']/1e3:.1f}ms tile_baseline={out['tile_baseline']/1e3:.1f}ms "
+        f"group_baseline={out['group_baseline']/1e3:.1f}ms",
+    )
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

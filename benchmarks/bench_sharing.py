@@ -1,0 +1,53 @@
+"""Table I: % of Gaussians shared with adjacent tiles, per tile size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PROFILE_SCENES, emit, scene_and_camera, timed
+from repro.core.grouping import GridSpec, identify
+from repro.core.projection import project
+
+TILE_SIZES = (8, 16, 32, 64)
+
+
+def shared_fraction(scene, cam, tile: int) -> float:
+    """Fraction of visible Gaussians intersecting >= 2 tiles of size `tile`."""
+    proj = project(scene, cam)
+    grid = GridSpec(
+        width=(cam.width // tile) * tile or tile,
+        height=(cam.height // tile) * tile or tile,
+        tile=tile,
+        group=tile * 4,
+        span=8,
+    )
+    pairs = identify(proj, grid, "tile", "aabb")
+    counts = jnp.zeros((scene.num_gaussians,), jnp.int32).at[
+        pairs.gauss_idx
+    ].add(pairs.valid.astype(jnp.int32))
+    vis = counts > 0
+    shared = counts >= 2
+    return float(jnp.sum(shared) / jnp.maximum(jnp.sum(vis), 1))
+
+
+def run() -> dict:
+    rows = {}
+    for scene_name in PROFILE_SCENES:
+        scene, cam = scene_and_camera(scene_name)
+        row = {}
+        for t in TILE_SIZES:
+            us, frac = timed(lambda: shared_fraction(scene, cam, t), reps=1)
+            row[t] = frac
+        rows[scene_name] = row
+    avg = {t: float(np.mean([rows[s][t] for s in rows])) for t in TILE_SIZES}
+    rows["average"] = avg
+    derived = ";".join(f"{t}px={100*avg[t]:.1f}%" for t in TILE_SIZES)
+    emit("table1_shared_gaussians", 0.0, derived)
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,57 @@
+"""Fig 13: stage-wise runtime breakdown (train scene): ellipse baseline at
+16/32/64 px tiles vs GS-TG (16+64), on the GPU execution model — showing
+GS-TG's sort time matches the 64px baseline while raster time matches 16px;
+plus the ASIC model where bitmask gen overlaps sorting."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, scene_and_camera
+from repro.core.cost_model import GSTG_ASIC, estimate
+from repro.core.pipeline import RenderConfig, render
+
+
+def run() -> dict:
+    scene, cam = scene_and_camera("train")
+    out = {}
+
+    for tile in (16, 32, 64):
+        cam2 = dataclasses.replace(
+            cam, width=(cam.width // tile) * tile, height=(cam.height // tile) * tile
+        )
+        cfg = RenderConfig(
+            mode="tile_baseline", tile=tile, group=tile * 2,
+            boundary_tile="ellipse", tile_capacity=1024, group_capacity=1024,
+            span=6,
+        )
+        s = render(scene, cam2, cfg).stats
+        c = estimate(s, GSTG_ASIC, mode="tile_baseline")
+        out[f"baseline_{tile}"] = c.as_dict()
+
+    cfg = RenderConfig(
+        mode="gstg", tile=16, group=64, tile_capacity=1024,
+        group_capacity=1024, span=6,
+    )
+    s = render(scene, cam, cfg).stats
+    out["gstg_gpu"] = estimate(s, GSTG_ASIC, mode="gstg", execution="gpu").as_dict()
+    out["gstg_asic"] = estimate(s, GSTG_ASIC, mode="gstg", execution="asic").as_dict()
+
+    sort_vs_64 = out["gstg_gpu"]["sort_s"] / max(out["baseline_64"]["sort_s"], 1e-12)
+    raster_vs_16 = out["gstg_gpu"]["raster_s"] / max(
+        out["baseline_16"]["raster_s"], 1e-12
+    )
+    emit(
+        "fig13_stage_breakdown",
+        0.0,
+        f"gstg sort/64px-baseline={sort_vs_64:.2f} "
+        f"raster/16px-baseline={raster_vs_16:.2f} "
+        f"asic_total/gpu_total="
+        f"{out['gstg_asic']['total_s']/out['gstg_gpu']['total_s']:.2f}",
+    )
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,84 @@
+"""Figs 3/5/7: tile-size trade-off — intersecting tiles per Gaussian (Fig 5),
+Gaussians processed per pixel (Fig 7), and stage runtime breakdown via the
+cost model (Fig 3), for tile sizes 8..64 and AABB/ellipse boundaries."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PROFILE_SCENES, emit, scene_and_camera
+from repro.core.cost_model import GSTG_ASIC, estimate
+from repro.core.pipeline import RenderConfig, render
+
+TILE_SIZES = (8, 16, 32, 64)
+
+
+def profile_scene(scene, cam, tile: int, boundary: str):
+    w = (cam.width // tile) * tile
+    h = (cam.height // tile) * tile
+    import dataclasses
+
+    cam2 = dataclasses.replace(cam, width=w, height=h)
+    cfg = RenderConfig(
+        mode="tile_baseline",
+        tile=tile,
+        group=tile * 2,
+        boundary_tile=boundary,
+        tile_capacity=1024,
+        group_capacity=1024,
+        span=6,
+    )
+    out = render(scene, cam2, cfg)
+    s = out.stats
+    n_vis = max(int(s.n_visible), 1)
+    tiles_per_gaussian = float(s.n_pairs_sort) / n_vis
+    gauss_per_pixel = float(s.tile_entries) * tile * tile / (w * h)
+    cost = estimate(s, GSTG_ASIC, boundary_group=boundary,
+                    boundary_tile=boundary, mode="tile_baseline")
+    return {
+        "tiles_per_gaussian": tiles_per_gaussian,
+        "gaussians_per_pixel": gauss_per_pixel,
+        "preprocess_s": cost.preprocess_s,
+        "sort_s": cost.sort_s,
+        "raster_s": cost.raster_s,
+        "total_s": cost.total_s,
+        "overflow": int(s.overflow),
+    }
+
+
+def run() -> dict:
+    results = {}
+    for boundary in ("aabb", "ellipse"):
+        for name in PROFILE_SCENES:
+            scene, cam = scene_and_camera(name)
+            for t in TILE_SIZES:
+                results[(boundary, name, t)] = profile_scene(scene, cam, t, boundary)
+
+    # headline: ratio of tiles/gaussian at 8px vs 64px (paper: up to 18.3x),
+    # and gaussians/pixel at 64 vs 8 (paper: up to 10.6x)
+    r8 = np.mean([results[("aabb", s, 8)]["tiles_per_gaussian"] for s in PROFILE_SCENES])
+    r64 = np.mean([results[("aabb", s, 64)]["tiles_per_gaussian"] for s in PROFILE_SCENES])
+    g8 = np.mean([results[("ellipse", s, 8)]["gaussians_per_pixel"] for s in PROFILE_SCENES])
+    g64 = np.mean([results[("ellipse", s, 64)]["gaussians_per_pixel"] for s in PROFILE_SCENES])
+    emit(
+        "fig5_tiles_per_gaussian",
+        0.0,
+        f"aabb 8px/64px ratio={r8 / max(r64, 1e-9):.1f}x",
+    )
+    emit(
+        "fig7_gaussians_per_pixel",
+        0.0,
+        f"ellipse 64px/8px ratio={g64 / max(g8, 1e-9):.1f}x",
+    )
+    best = {}
+    for name in PROFILE_SCENES:
+        totals = {t: results[("ellipse", name, t)]["total_s"] for t in TILE_SIZES}
+        best[name] = min(totals, key=totals.get)
+    emit("fig3_best_tile_size", 0.0,
+         ";".join(f"{k}={v}" for k, v in best.items()))
+    return {f"{b}/{s}/{t}": v for (b, s, t), v in results.items()}
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,52 @@
+"""Shared benchmark substrate: paper scenes (synthetic stand-ins) + helpers."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.gs_scenes import EVAL_RESOLUTION, PAPER_SCENES
+from repro.core import make_camera
+from repro.core.gaussians import scene_like_paper
+from repro.core.pipeline import RenderConfig, render
+
+# The four scenes the paper profiles in Figs 3/5/7/11/12/13 + the two
+# high-res scenes added for Figs 14/15.
+PROFILE_SCENES = ("train", "truck", "drjohnson", "playroom")
+ALL_SCENES = PROFILE_SCENES + ("rubble", "residence")
+
+
+def scene_and_camera(name: str, n_gaussians: int | None = None):
+    spec = PAPER_SCENES[name]
+    w, h = EVAL_RESOLUTION[name]
+    scene = scene_like_paper(jax.random.key(hash(name) % 2**31), name, n_gaussians)
+    cam = make_camera(
+        (0.0, spec.extent * 0.35, spec.extent * 1.5),
+        (0, 0, 0),
+        w,
+        h,
+        fov_x_deg=62.0,
+    )
+    return scene, cam
+
+
+def render_stats(scene, cam, cfg: RenderConfig):
+    out = jax.jit(lambda s: render(s, cam, cfg))(scene)
+    return jax.tree.map(np.asarray, out.stats)
+
+
+def timed(fn, *args, reps: int = 3) -> Tuple[float, object]:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / reps
+    return dt * 1e6, out  # us
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

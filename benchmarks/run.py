@@ -1,0 +1,58 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus a JSON dump per benchmark
+under results/bench/). Figures covered:
+  Table I  -> bench_sharing        Fig 11 -> bench_groupsize
+  Fig 3/5/7-> bench_tilesize       Fig 12 -> bench_boundaries
+  Fig 13   -> bench_stages         Fig 14/15 -> bench_accel
+plus the wall-time microbenchmark of the JAX renderer itself.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_accel,
+        bench_boundaries,
+        bench_groupsize,
+        bench_render_walltime,
+        bench_sharing,
+        bench_stages,
+        bench_tilesize,
+    )
+
+    os.makedirs("results/bench", exist_ok=True)
+    suites = [
+        ("table1_sharing", bench_sharing.run),
+        ("fig357_tilesize", bench_tilesize.run),
+        ("fig11_groupsize", bench_groupsize.run),
+        ("fig12_boundaries", bench_boundaries.run),
+        ("fig13_stages", bench_stages.run),
+        ("fig1415_accel", bench_accel.run),
+        ("render_walltime", bench_render_walltime.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            result = fn()
+            with open(f"results/bench/{name}.json", "w") as f:
+                json.dump(result, f, indent=1, default=str)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+        finally:
+            print(f"# {name} took {time.time()-t0:.1f}s")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Serve a small LM with batched greedy decoding (KV-cache decode path — the
+same serve_step the decode_32k/long_500k dry-run cells lower).
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch granite-3-2b]
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+    gen = serve(
+        args.arch,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen_len=args.gen_len,
+        smoke=True,
+    )
+    print("sample continuation token ids:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Train a ~100M-class LM for a few hundred steps on the synthetic token
+stream, with async checkpointing + resume (the launch/train.py driver).
+
+  PYTHONPATH=src python examples/train_lm.py [--arch smollm-360m --steps 300]
+
+The default runs the reduced smollm config; pass --full-config on a TPU fleet.
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="results/ckpt_lm")
+    args = ap.parse_args()
+
+    _, history = train(
+        args.arch,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        smoke=True,
+    )
+    first, last = history[0], history[-1]
+    print(
+        f"\nloss {first['loss']:.4f} (step {first['step']}) -> "
+        f"{last['loss']:.4f} (step {last['step']})"
+    )
+    assert last["loss"] < first["loss"], "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

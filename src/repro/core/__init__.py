@@ -1,0 +1,20 @@
+from repro.core.camera import Camera, make_camera, orbit_cameras
+from repro.core.gaussians import GaussianScene, random_scene
+from repro.core.grouping import GridSpec
+from repro.core.pipeline import RenderConfig, RenderResult, render, render_image
+from repro.core.projection import Projected, project
+
+__all__ = [
+    "Camera",
+    "make_camera",
+    "orbit_cameras",
+    "GaussianScene",
+    "random_scene",
+    "GridSpec",
+    "RenderConfig",
+    "RenderResult",
+    "render",
+    "render_image",
+    "Projected",
+    "project",
+]

@@ -1,0 +1,167 @@
+"""Bitmask generation + the RM's FIFO compaction (paper §IV-B, §V-B).
+
+For every entry of a group's (depth-sorted) table, a gf^2-bit mask marks which
+member tiles the Gaussian covers (bit set via the chosen boundary method at
+tile granularity). Rasterization then consumes, per tile, the subsequence of
+the group list whose bit is set — extracted here by a linear cumsum/scatter
+compaction, the TPU analogue of the RM's bitwise-AND + FIFO stage. Compaction
+is O(K) per group (no comparison sort), which is exactly why group-level
+sorting is shared 'for free' across the gf^2 member tiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.boundary import boundary_test
+from repro.core.grouping import BinTable, GridSpec, tile_rect_in_group
+from repro.core.projection import Projected
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GroupBitmasks:
+    masks: jnp.ndarray        # (num_groups, K) uint32 — bit t == covers member tile t
+    n_bit_tests: jnp.ndarray  # () int32 — tile-granularity boundary tests run
+
+
+def generate_bitmasks(
+    proj: Projected,
+    table: BinTable,
+    grid: GridSpec,
+    method: str,
+) -> GroupBitmasks:
+    """BGM: per (group-entry, member-tile) boundary test, packed to bits."""
+    num_groups, K = table.gauss_idx.shape
+    tpg = grid.tiles_per_group
+    group_ids = jnp.arange(num_groups, dtype=jnp.int32)
+
+    gathered = _GatheredProj(proj, table.gauss_idx)  # (G, K) views
+
+    slots = jnp.arange(tpg, dtype=jnp.int32)
+    # rects: each component (G, 1, tpg) broadcast against (G, K, 1) features.
+    rect = tile_rect_in_group(grid, group_ids[:, None, None], slots[None, None, :])
+
+    hit = boundary_test(method, _Expand(gathered), rect)  # (G, K, tpg)
+
+    # Tiles that fall outside the image (partial edge groups) are masked off.
+    gf = grid.gf
+    gx = group_ids % grid.n_groups_x
+    gy = group_ids // grid.n_groups_x
+    tx = gx[:, None] * gf + slots[None, :] % gf
+    ty = gy[:, None] * gf + slots[None, :] // gf
+    tile_in_image = (tx < grid.n_tiles_x) & (ty < grid.n_tiles_y)  # (G, tpg)
+    hit = hit & tile_in_image[:, None, :] & table.entry_valid[:, :, None]
+
+    weights = (jnp.uint32(1) << jnp.arange(tpg, dtype=jnp.uint32))
+    masks = jnp.sum(
+        hit.astype(jnp.uint32) * weights[None, None, :], axis=-1, dtype=jnp.uint32
+    )
+    n_tests = jnp.sum(table.entry_valid.astype(jnp.int32)) * tpg
+    return GroupBitmasks(masks=masks, n_bit_tests=n_tests)
+
+
+class _GatheredProj:
+    """Projected fields gathered to a (G, K) index table."""
+
+    def __init__(self, proj: Projected, idx: jnp.ndarray):
+        self._p = proj
+        self._idx = idx
+
+    def __getattr__(self, name):
+        v = getattr(self._p, name)
+        return v[self._idx]
+
+
+class _Expand:
+    """Lift (G, K[, F]) gathered fields to (G, K, 1[, F]) for tile broadcast."""
+
+    def __init__(self, g):
+        self._g = g
+
+    def __getattr__(self, name):
+        v = getattr(self._g, name)
+        if v.ndim == 2:
+            return v[:, :, None]
+        return v[:, :, None, :]
+
+
+def compact_tiles(
+    table: BinTable,
+    bitmasks: GroupBitmasks,
+    grid: GridSpec,
+    tile_capacity: int,
+) -> BinTable:
+    """RM FIFO stage: per member tile, compact the group-sorted entries whose
+    bitmask bit is set, preserving order (hence still depth-sorted).
+
+    Returns a tile-level BinTable of shape (num_tiles, tile_capacity) indexed
+    by *global* tile id.
+    """
+    num_groups, K = table.gauss_idx.shape
+    tpg = grid.tiles_per_group
+    gf = grid.gf
+
+    bits = (
+        (bitmasks.masks[:, :, None] >> jnp.arange(tpg, dtype=jnp.uint32)) & 1
+    ).astype(jnp.bool_)  # (G, K, tpg)
+    bits = bits & table.entry_valid[:, :, None]
+
+    # Stable compaction per (group, tile): position = exclusive cumsum of bits.
+    pos = jnp.cumsum(bits.astype(jnp.int32), axis=1) - 1  # (G, K, tpg)
+    lengths = jnp.sum(bits.astype(jnp.int32), axis=1)  # (G, tpg)
+
+    out_idx = jnp.where(bits, pos, tile_capacity)  # overflow & dead -> dumped
+    out_idx = jnp.minimum(out_idx, tile_capacity)  # slot tile_capacity = trash
+
+    # Scatter entries into (G, tpg, tile_capacity + 1).
+    src = jnp.broadcast_to(table.gauss_idx[:, :, None], bits.shape)
+    compact = jnp.full(
+        (num_groups, tpg, tile_capacity + 1), 0, dtype=jnp.int32
+    )
+    g_ix = jnp.broadcast_to(
+        jnp.arange(num_groups, dtype=jnp.int32)[:, None, None], bits.shape
+    )
+    t_ix = jnp.broadcast_to(jnp.arange(tpg, dtype=jnp.int32)[None, None, :], bits.shape)
+    compact = compact.at[g_ix, t_ix, out_idx].set(
+        src, mode="drop", unique_indices=False
+    )
+    compact = compact[:, :, :tile_capacity]
+
+    k = jnp.arange(tile_capacity, dtype=jnp.int32)
+    entry_valid = k[None, None, :] < jnp.minimum(lengths, tile_capacity)[:, :, None]
+
+    # Re-index (group, slot) -> global tile id.
+    group_ids = jnp.arange(num_groups, dtype=jnp.int32)
+    slots = jnp.arange(tpg, dtype=jnp.int32)
+    gx = group_ids % grid.n_groups_x
+    gy = group_ids // grid.n_groups_x
+    tx = gx[:, None] * gf + slots[None, :] % gf  # (G, tpg)
+    ty = gy[:, None] * gf + slots[None, :] // gf
+    in_image = (tx < grid.n_tiles_x) & (ty < grid.n_tiles_y)
+    gtile = jnp.where(in_image, ty * grid.n_tiles_x + tx, grid.num_tiles)
+
+    num_tiles = grid.num_tiles
+    flat_tile = gtile.reshape(-1)
+    flat_idx = compact.reshape(num_groups * tpg, tile_capacity)
+    flat_valid = (entry_valid & in_image[:, :, None]).reshape(
+        num_groups * tpg, tile_capacity
+    )
+    flat_len = jnp.where(in_image, lengths, 0).reshape(-1)
+
+    tile_gauss = jnp.zeros((num_tiles + 1, tile_capacity), jnp.int32)
+    tile_valid = jnp.zeros((num_tiles + 1, tile_capacity), jnp.bool_)
+    tile_len = jnp.zeros((num_tiles + 1,), jnp.int32)
+    tile_gauss = tile_gauss.at[flat_tile].set(flat_idx, mode="drop")
+    tile_valid = tile_valid.at[flat_tile].set(flat_valid, mode="drop")
+    tile_len = tile_len.at[flat_tile].set(flat_len, mode="drop")
+
+    overflow = jnp.sum(jnp.maximum(flat_len - tile_capacity, 0))
+    return BinTable(
+        gauss_idx=tile_gauss[:num_tiles],
+        entry_valid=tile_valid[:num_tiles],
+        lengths=tile_len[:num_tiles],
+        overflow=overflow,
+    )

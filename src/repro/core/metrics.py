@@ -1,0 +1,54 @@
+"""Image quality metrics: PSNR and SSIM (pure jnp)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psnr(img: jnp.ndarray, ref: jnp.ndarray, data_range: float = 1.0) -> jnp.ndarray:
+    mse = jnp.mean((img - ref) ** 2)
+    return 10.0 * jnp.log10(data_range**2 / jnp.maximum(mse, 1e-12))
+
+
+def _gaussian_kernel(size: int = 11, sigma: float = 1.5) -> jnp.ndarray:
+    x = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-0.5 * (x / sigma) ** 2)
+    g = g / jnp.sum(g)
+    return jnp.outer(g, g)
+
+
+def ssim(
+    img: jnp.ndarray,
+    ref: jnp.ndarray,
+    data_range: float = 1.0,
+    size: int = 11,
+    sigma: float = 1.5,
+) -> jnp.ndarray:
+    """Mean SSIM over channels. img/ref: (H, W, C) in [0, data_range]."""
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    win = _gaussian_kernel(size, sigma)[:, :, None, None]  # (s, s, 1, 1)
+
+    def filt(x):  # (H, W, C) -> valid conv per channel
+        x = x.transpose(2, 0, 1)[:, None, :, :]  # (C, 1, H, W)
+        out = jax.lax.conv_general_dilated(
+            x,
+            win.transpose(3, 2, 0, 1),  # (1, 1, s, s)
+            window_strides=(1, 1),
+            padding="VALID",
+        )
+        return out[:, 0].transpose(1, 2, 0)
+
+    mu_x = filt(img)
+    mu_y = filt(ref)
+    xx = filt(img * img) - mu_x * mu_x
+    yy = filt(ref * ref) - mu_y * mu_y
+    xy = filt(img * ref) - mu_x * mu_y
+    s = ((2 * mu_x * mu_y + c1) * (2 * xy + c2)) / (
+        (mu_x**2 + mu_y**2 + c1) * (xx + yy + c2)
+    )
+    return jnp.mean(s)
+
+
+def dssim(img, ref, data_range: float = 1.0):
+    return (1.0 - ssim(img, ref, data_range)) / 2.0

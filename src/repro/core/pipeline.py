@@ -1,0 +1,207 @@
+"""End-to-end rendering pipelines (paper Fig 1 vs Fig 9).
+
+Three modes sharing one substrate:
+
+  * ``tile_baseline``  — conventional 3D-GS: identify + sort + rasterize at
+    the small-tile level (paper Fig 1). Sorting keys = (gaussian, tile) pairs.
+  * ``group_baseline`` — 'large tile' baseline: identify + sort + rasterize at
+    the group level (what Fig 13 calls baseline 64x64).
+  * ``gstg``           — the paper's method (Fig 9): group identification,
+    group-wise sorting, per-entry tile bitmasks, FIFO compaction, small-tile
+    rasterization. Sorting keys = (gaussian, group) pairs only.
+
+Every mode returns the image plus RenderStats counters that drive the
+benchmarks and the accelerator cost model.
+
+Losslessness guarantees (tested in tests/test_pipeline_lossless.py):
+  * BITWISE image equality gstg == tile_baseline whenever the bitmask method
+    is at least as tight as the group method (ellipse bitmask under any group
+    method; matched aabb+aabb) and no capacity overflow occurs — the per-tile
+    entry tables are then identical arrays.
+  * For the remaining method combos the CONTRIBUTING Gaussian sequences are
+    still identical per tile (exact-set losslessness); images agree to fp
+    reassociation of interleaved zero-alpha entries (<=1e-6), because every
+    boundary method conservatively over-approximates the q<=9 support that
+    rasterization enforces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitmask import compact_tiles, generate_bitmasks
+from repro.core.camera import Camera
+from repro.core.gaussians import GaussianScene
+from repro.core.grouping import (
+    BinTable,
+    GridSpec,
+    bin_pairs,
+    identify,
+    sort_op_count,
+)
+from repro.core.projection import Projected, project
+from repro.core.raster import RasterOut, rasterize
+
+
+@dataclasses.dataclass(frozen=True)
+class RenderConfig:
+    tile: int = 16
+    group: int = 64
+    mode: str = "gstg"                 # gstg | tile_baseline | group_baseline
+    boundary_group: str = "ellipse"    # group-identification method (GS-TG)
+    boundary_tile: str = "ellipse"     # tile identification / bitmask method
+    group_capacity: int = 512          # K: entries per group segment
+    tile_capacity: int = 256           # K_t: entries per tile segment
+    span: int = 4                      # candidate window at group level (bins)
+    chunk: int = 32                    # raster gaussian chunk
+    early_exit: bool = True
+    use_kernels: bool = False          # route sort/bitmask/raster via Pallas
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RenderStats:
+    """Operation counters for the paper's metrics + the cost model."""
+
+    n_visible: jnp.ndarray           # gaussians surviving culling
+    n_candidate_tests: jnp.ndarray   # identification boundary tests
+    n_pairs_sort: jnp.ndarray        # sorting keys (the paper's redundancy axis)
+    sort_ops: jnp.ndarray            # comparator-model ops sum L log L
+    n_bit_tests: jnp.ndarray         # bitmask-generation tile tests (gstg only)
+    fifo_ops: jnp.ndarray            # linear compaction ops (gstg only)
+    alpha_ops: jnp.ndarray           # per-pixel alpha computations
+    blend_ops: jnp.ndarray           # contributing blends
+    tile_entries: jnp.ndarray        # total per-tile raster entries
+    overflow: jnp.ndarray            # capacity-dropped entries (must be 0)
+    span_overflow: jnp.ndarray       # candidate-window dropped bins (must be 0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RenderResult:
+    image: jnp.ndarray
+    stats: RenderStats
+
+
+def _grid(cam: Camera, cfg: RenderConfig) -> GridSpec:
+    return GridSpec(
+        width=cam.width,
+        height=cam.height,
+        tile=cfg.tile,
+        group=cfg.group,
+        span=cfg.span,
+    )
+
+
+def render(
+    scene: GaussianScene,
+    cam: Camera,
+    cfg: RenderConfig,
+    background: Optional[jnp.ndarray] = None,
+) -> RenderResult:
+    proj = project(scene, cam)
+    if cfg.mode == "gstg":
+        return _render_gstg(proj, cam, cfg, background)
+    if cfg.mode == "tile_baseline":
+        return _render_flat(proj, cam, cfg, background, level="tile")
+    if cfg.mode == "group_baseline":
+        return _render_flat(proj, cam, cfg, background, level="group")
+    raise ValueError(f"unknown mode {cfg.mode!r}")
+
+
+def _render_flat(proj, cam, cfg, background, level: str) -> RenderResult:
+    """Conventional per-bin pipeline at tile or group granularity."""
+    grid = _grid(cam, cfg)
+    if level == "tile":
+        bins_xy = grid.num_tiles
+        capacity = cfg.tile_capacity
+        raster_grid = grid
+    else:
+        bins_xy = grid.num_groups
+        capacity = cfg.group_capacity
+        # Rasterize at group granularity: treat groups as (large) tiles.
+        raster_grid = GridSpec(
+            width=grid.n_groups_x * grid.group,
+            height=grid.n_groups_y * grid.group,
+            tile=grid.group,
+            group=grid.group,
+            span=cfg.span,
+        )
+
+    pairs = identify(proj, grid, level, cfg.boundary_tile)
+    table = bin_pairs(pairs, bins_xy, capacity)
+    rast = rasterize(
+        proj,
+        table,
+        raster_grid,
+        background,
+        chunk=cfg.chunk,
+        early_exit=cfg.early_exit,
+    )
+    image = rast.image[: cam.height, : cam.width]
+    stats = RenderStats(
+        n_visible=jnp.sum(proj.valid.astype(jnp.int32)),
+        n_candidate_tests=pairs.n_candidate_tests,
+        n_pairs_sort=pairs.n_pairs,
+        sort_ops=sort_op_count(table.lengths),
+        n_bit_tests=jnp.zeros((), jnp.int32),
+        fifo_ops=jnp.zeros((), jnp.int32),
+        alpha_ops=rast.alpha_ops,
+        blend_ops=rast.blend_ops,
+        tile_entries=jnp.sum(table.lengths),
+        overflow=table.overflow,
+        span_overflow=pairs.n_span_overflow,
+    )
+    return RenderResult(image=image, stats=stats)
+
+
+def _render_gstg(proj, cam, cfg, background) -> RenderResult:
+    """The paper's pipeline: Fig 9."""
+    grid = _grid(cam, cfg)
+
+    # 1) Group identification (coarse, cheap).
+    pairs = identify(proj, grid, "group", cfg.boundary_group)
+
+    # 2) Group-wise sorting — ONE sort per group, shared by gf^2 tiles.
+    gtable = bin_pairs(pairs, grid.num_groups, cfg.group_capacity)
+
+    # 3) Bitmask generation (BGM): tile-granularity tests on group entries.
+    #    On the ASIC this overlaps GSM; in XLA the two ops have no data
+    #    dependence and schedule freely (gtable order does not affect masks:
+    #    masks are per-entry).
+    masks = generate_bitmasks(proj, gtable, grid, cfg.boundary_tile)
+
+    # 4) RM FIFO: per-tile compaction by bitmask (linear, order-preserving).
+    ttable = compact_tiles(gtable, masks, grid, cfg.tile_capacity)
+
+    # 5) Small-tile rasterization.
+    rast = rasterize(
+        proj,
+        ttable,
+        grid,
+        background,
+        chunk=cfg.chunk,
+        early_exit=cfg.early_exit,
+    )
+    stats = RenderStats(
+        n_visible=jnp.sum(proj.valid.astype(jnp.int32)),
+        n_candidate_tests=pairs.n_candidate_tests,
+        n_pairs_sort=pairs.n_pairs,
+        sort_ops=sort_op_count(gtable.lengths),
+        n_bit_tests=masks.n_bit_tests,
+        fifo_ops=jnp.sum(gtable.lengths) * grid.tiles_per_group,
+        alpha_ops=rast.alpha_ops,
+        blend_ops=rast.blend_ops,
+        tile_entries=jnp.sum(ttable.lengths),
+        overflow=gtable.overflow + ttable.overflow,
+        span_overflow=pairs.n_span_overflow,
+    )
+    return RenderResult(image=rast.image, stats=stats)
+
+
+def render_image(scene, cam, cfg, background=None) -> jnp.ndarray:
+    """Convenience: image only (used by training/loss code)."""
+    return render(scene, cam, cfg, background).image

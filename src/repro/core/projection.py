@@ -1,0 +1,162 @@
+"""Preprocessing stage of the 3D-GS pipeline (paper Fig 1, left).
+
+Computes, per Gaussian: depth D, 2D center, 2D covariance (+ its conic
+inverse), screen-space radius (3-sigma rule, as in the original 3D-GS), view
+color from SH, and the frustum-culling validity mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import Camera
+from repro.core.gaussians import GaussianScene, covariance3d, SH_C0
+
+# Low-pass filter added to the 2D covariance diagonal (anti-aliasing), exactly
+# as in the reference 3D-GS rasterizer.
+COV2D_BLUR = 0.3
+# 3-sigma rule for the Gaussian's screen extent (paper §II-B).
+SIGMA_CUT = 3.0
+# Power threshold matching alpha >= 1/255 for the *ellipse* boundary:
+# alpha = opa * exp(-q/2) >= 1/255  <=>  q <= 2*ln(255*opa).  The 3-sigma rule
+# corresponds to q <= 9; we use q<=9 (paper) and keep the opacity-aware bound
+# available as a beyond-paper optimization.
+QMAX_3SIGMA = SIGMA_CUT * SIGMA_CUT
+
+SH_C1 = 0.4886025119029199
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Projected:
+    """Per-Gaussian screen-space features (all (N, ...))."""
+
+    mean2d: jnp.ndarray      # (N, 2) pixel coords
+    cov2d: jnp.ndarray       # (N, 3) upper-triangular (a, b, c): [[a, b], [b, c]]
+    conic: jnp.ndarray       # (N, 3) inverse covariance, same packing
+    depth: jnp.ndarray       # (N,)
+    radius: jnp.ndarray      # (N,) 3-sigma screen radius (pixels)
+    axis_radius: jnp.ndarray # (N, 2) 3-sigma per screen axis (AABB half-extent)
+    eigvec: jnp.ndarray      # (N, 2) major-axis unit vector (for OBB)
+    eigval: jnp.ndarray      # (N, 2) eigenvalues (major, minor) of cov2d
+    rgb: jnp.ndarray         # (N, 3) decoded view-dependent color
+    alpha: jnp.ndarray       # (N,) sigmoid opacity
+    valid: jnp.ndarray       # (N,) bool frustum/size cull mask
+
+
+def eval_sh(sh: jnp.ndarray, dirs: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate SH color (deg 0 or 1 supported; higher coeffs ignored).
+
+    sh: (N, K, 3); dirs: (N, 3) unit view directions.
+    """
+    rgb = SH_C0 * sh[:, 0, :]
+    if sh.shape[1] >= 4:
+        x, y, z = dirs[:, 0:1], dirs[:, 1:2], dirs[:, 2:3]
+        rgb = rgb + SH_C1 * (-y * sh[:, 1, :] + z * sh[:, 2, :] - x * sh[:, 3, :])
+    return jnp.clip(rgb + 0.5, 0.0, 1.0)
+
+
+def project(scene: GaussianScene, cam: Camera) -> Projected:
+    """The preprocessing stage: features + culling (paper Fig 1)."""
+    R = jnp.asarray(cam.R)
+    t = jnp.asarray(cam.t)
+    p_cam = scene.means3d @ R.T + t[None, :]  # (N, 3)
+    x, y, z = p_cam[:, 0], p_cam[:, 1], p_cam[:, 2]
+    z_safe = jnp.maximum(z, 1e-6)
+
+    mean2d = jnp.stack(
+        [cam.fx * x / z_safe + cam.cx, cam.fy * y / z_safe + cam.cy], axis=-1
+    )
+
+    # --- 2D covariance via the projective Jacobian (EWA splatting) ---
+    cov3d = covariance3d(scene.log_scales, scene.quats)      # (N, 3, 3)
+    cov3d_cam = jnp.einsum("ij,njk,lk->nil", R, cov3d, R)     # R Σ R^T
+    inv_z = 1.0 / z_safe
+    inv_z2 = inv_z * inv_z
+    # J = [[fx/z, 0, -fx x / z^2], [0, fy/z, -fy y / z^2]]
+    j00 = cam.fx * inv_z
+    j02 = -cam.fx * x * inv_z2
+    j11 = cam.fy * inv_z
+    j12 = -cam.fy * y * inv_z2
+    zeros = jnp.zeros_like(j00)
+    J = jnp.stack(
+        [
+            jnp.stack([j00, zeros, j02], axis=-1),
+            jnp.stack([zeros, j11, j12], axis=-1),
+        ],
+        axis=-2,
+    )  # (N, 2, 3)
+    cov2d_full = J @ cov3d_cam @ jnp.swapaxes(J, -1, -2)      # (N, 2, 2)
+    a = cov2d_full[:, 0, 0] + COV2D_BLUR
+    b = cov2d_full[:, 0, 1]
+    c = cov2d_full[:, 1, 1] + COV2D_BLUR
+    cov2d = jnp.stack([a, b, c], axis=-1)
+
+    det = a * c - b * b
+    det_safe = jnp.maximum(det, 1e-12)
+    conic = jnp.stack([c / det_safe, -b / det_safe, a / det_safe], axis=-1)
+
+    # Eigen-decomposition of [[a,b],[b,c]] (closed form).
+    mid = 0.5 * (a + c)
+    disc = jnp.sqrt(jnp.maximum(mid * mid - det, 1e-12))
+    lam1 = mid + disc  # major
+    lam2 = jnp.maximum(mid - disc, 1e-12)  # minor
+    radius = SIGMA_CUT * jnp.sqrt(jnp.maximum(lam1, 1e-12))
+    # Major-axis direction: eigenvector of lam1.
+    ex = jnp.where(jnp.abs(b) > 1e-9, b, lam1 - c)
+    ey = jnp.where(jnp.abs(b) > 1e-9, lam1 - a, jnp.zeros_like(b))
+    # Degenerate (already axis-aligned): fall back to x-axis.
+    enorm = jnp.sqrt(ex * ex + ey * ey)
+    ex = jnp.where(enorm > 1e-9, ex / jnp.maximum(enorm, 1e-12), 1.0)
+    ey = jnp.where(enorm > 1e-9, ey / jnp.maximum(enorm, 1e-12), 0.0)
+    eigvec = jnp.stack([ex, ey], axis=-1)
+    eigval = jnp.stack([lam1, lam2], axis=-1)
+
+    # Tight per-axis 3-sigma extents (AABB of the ellipse, not of the circle).
+    axis_radius = SIGMA_CUT * jnp.sqrt(
+        jnp.maximum(jnp.stack([a, c], axis=-1), 1e-12)
+    )
+
+    # --- color + opacity ---
+    cam_pos = -R.T @ t
+    dirs = scene.means3d - cam_pos[None, :]
+    dirs = dirs / (jnp.linalg.norm(dirs, axis=-1, keepdims=True) + 1e-12)
+    rgb = eval_sh(scene.sh, dirs)
+    alpha = jax.nn.sigmoid(scene.opacity)
+
+    # --- culling (paper Fig 1: invisible Gaussians removed) ---
+    in_front = z > cam.znear
+    not_far = z < cam.zfar
+    on_screen = (
+        (mean2d[:, 0] + radius > 0.0)
+        & (mean2d[:, 0] - radius < cam.width)
+        & (mean2d[:, 1] + radius > 0.0)
+        & (mean2d[:, 1] - radius < cam.height)
+    )
+    big_enough = det > 1e-12
+    visible_alpha = alpha > (1.0 / 255.0)
+    valid = in_front & not_far & on_screen & big_enough & visible_alpha
+
+    # Sanitize culled Gaussians: behind-camera projections can overflow f32
+    # (inf/inf = NaN conics), and a NaN feature would poison rasterization
+    # through 0*NaN even at zero opacity (NaN fails every cutoff comparison).
+    def _clean(x, default):
+        mask = valid if x.ndim == 1 else valid[:, None]
+        return jnp.where(mask, jnp.nan_to_num(x, posinf=1e30, neginf=-1e30), default)
+
+    ident2 = jnp.array([1.0, 0.0, 1.0], jnp.float32)
+    return Projected(
+        mean2d=_clean(mean2d, 0.0),
+        cov2d=_clean(cov2d, ident2),
+        conic=_clean(conic, ident2),
+        depth=_clean(z, jnp.inf),
+        radius=_clean(radius, 0.0),
+        axis_radius=_clean(axis_radius, 0.0),
+        eigvec=_clean(eigvec, jnp.array([1.0, 0.0], jnp.float32)),
+        eigval=_clean(eigval, 1.0),
+        rgb=_clean(rgb, 0.0),
+        alpha=_clean(alpha, 0.0),
+        valid=valid,
+    )

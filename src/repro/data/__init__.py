@@ -1,0 +1,4 @@
+from repro.data.tokens import TokenStream, make_batch
+from repro.data.scenes import synthetic_scene_and_views
+
+__all__ = ["TokenStream", "make_batch", "synthetic_scene_and_views"]

@@ -1,0 +1,25 @@
+"""Synthetic Gaussian scenes + camera trajectories for renderer benchmarks."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+
+from repro.core.camera import Camera, orbit_cameras
+from repro.core.gaussians import GaussianScene, random_scene
+
+
+def synthetic_scene_and_views(
+    seed: int,
+    num_gaussians: int,
+    width: int,
+    height: int,
+    n_views: int = 4,
+    extent: float = 4.0,
+) -> Tuple[GaussianScene, List[Camera]]:
+    key = jax.random.key(seed)
+    scene = random_scene(key, num_gaussians, extent=extent)
+    cams = orbit_cameras(
+        n_views, radius=extent * 1.6, width=width, height=height
+    )
+    return scene, cams

@@ -1,0 +1,9 @@
+from repro.ft.heartbeat import HeartbeatMonitor, StragglerReport
+from repro.ft.elastic import ElasticPlan, plan_elastic_mesh
+
+__all__ = [
+    "HeartbeatMonitor",
+    "StragglerReport",
+    "ElasticPlan",
+    "plan_elastic_mesh",
+]

@@ -1,0 +1,71 @@
+"""Shared feature layout for the GS-TG kernels.
+
+Kernels consume gathered per-bin Gaussian features in an SoA (feature-major)
+layout (F, K): the K entry axis maps to VPU lanes, features to sublanes. K is
+padded to a multiple of 128 (lane width); F is 16 so fp32 blocks tile the
+(8, 128) VMEM layout exactly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.utils import round_up
+
+F_MEAN_X = 0
+F_MEAN_Y = 1
+F_CONIC_A = 2
+F_CONIC_B = 3
+F_CONIC_C = 4
+F_OPACITY = 5   # 0 for invalid entries
+F_RGB_R = 6
+F_RGB_G = 7
+F_RGB_B = 8
+F_RADIUS = 9
+F_EIGVEC_X = 10
+F_EIGVEC_Y = 11
+F_EIGVAL_1 = 12
+F_EIGVAL_2 = 13
+F_DEPTH = 14
+F_VALID = 15
+NUM_FEATURES = 16
+
+LANE = 128
+
+
+def pack_features(proj, gauss_idx: jnp.ndarray, entry_valid: jnp.ndarray):
+    """Gather Projected fields into (B, NUM_FEATURES, K_pad) fp32 blocks.
+
+    gauss_idx/entry_valid: (B, K). Invalid entries get opacity 0 (=> alpha 0 in
+    the raster kernel) and valid flag 0.
+    """
+    B, K = gauss_idx.shape
+    K_pad = round_up(max(K, 1), LANE)
+    v = entry_valid
+
+    def g(field, ch=None):
+        arr = getattr(proj, field)
+        out = arr[gauss_idx] if ch is None else arr[gauss_idx, ch]
+        return jnp.where(v, out, 0.0).astype(jnp.float32)
+
+    feats = [
+        g("mean2d", 0),
+        g("mean2d", 1),
+        g("conic", 0),
+        g("conic", 1),
+        g("conic", 2),
+        g("alpha"),
+        g("rgb", 0),
+        g("rgb", 1),
+        g("rgb", 2),
+        g("radius"),
+        g("eigvec", 0),
+        g("eigvec", 1),
+        g("eigval", 0),
+        g("eigval", 1),
+        g("depth"),
+        v.astype(jnp.float32),
+    ]
+    packed = jnp.stack(feats, axis=1)  # (B, F, K)
+    if K_pad != K:
+        packed = jnp.pad(packed, ((0, 0), (0, 0), (0, K_pad - K)))
+    return packed

@@ -1,0 +1,210 @@
+"""Pallas TPU kernel for the Rasterization Module (RM, paper Fig 10).
+
+Two entry points:
+
+  * ``raster_tile_kernel`` — per-tile rasterization over pre-compacted,
+    depth-sorted entry lists (the RM after its FIFO stage). Used by both the
+    per-tile baseline and GS-TG (whose FIFO compaction ran upstream).
+  * ``raster_group_fused_kernel`` — the fused GS-TG RM: consumes *group*
+    entry lists plus per-entry tile bitmasks and applies the bitwise-AND
+    valid-flag filter in-register (paper's 8-wide AND/OR logic becomes lane
+    predication), so no compacted per-tile tables ever materialize in HBM.
+
+TPU mapping notes (vs the ASIC):
+  - grid iterates tiles (or group x member-tile); each step owns a T*T pixel
+    block in VMEM and streams the entry list in BK-wide chunks.
+  - front-to-back blending uses the exclusive-cumprod formulation along the
+    chunk axis; the running transmittance carries between chunks.
+  - early exit is block-granular: when every pixel's transmittance is below
+    T_EPS the remaining chunks are skipped (lax.cond), the TPU analogue of
+    the per-Gaussian FIFO drain. Per-entry exactness is preserved by gating
+    each entry's weight on its own T_before (see core/raster.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.layout import (
+    F_CONIC_A,
+    F_CONIC_B,
+    F_CONIC_C,
+    F_MEAN_X,
+    F_MEAN_Y,
+    F_OPACITY,
+    F_RGB_B,
+    F_RGB_G,
+    F_RGB_R,
+    NUM_FEATURES,
+)
+
+ALPHA_MIN = 1.0 / 255.0
+ALPHA_MAX = 0.99
+T_EPS = 1e-4
+QMAX = 9.0
+
+
+def _blend_chunk(fc, px, py, t_run, rgb_acc, mask_chunk=None, tile_bit=None):
+    """Blend one BK-wide feature chunk fc=(F, BK) into (P,) accumulators."""
+    mx = fc[F_MEAN_X]
+    my = fc[F_MEAN_Y]
+    ca = fc[F_CONIC_A]
+    cb = fc[F_CONIC_B]
+    cc = fc[F_CONIC_C]
+    op = fc[F_OPACITY]
+    cr = fc[F_RGB_R]
+    cg = fc[F_RGB_G]
+    cbl = fc[F_RGB_B]
+
+    dx = px[:, None] - mx[None, :]          # (P, BK)
+    dy = py[:, None] - my[None, :]
+    q = ca[None, :] * dx * dx + 2.0 * cb[None, :] * dx * dy + cc[None, :] * dy * dy
+    a = jnp.minimum(op[None, :] * jnp.exp(-0.5 * q), ALPHA_MAX)
+    a = jnp.where((q > QMAX) | (a < ALPHA_MIN), 0.0, a)
+    if mask_chunk is not None:
+        # GS-TG RM filter: keep entries whose bitmask covers this tile.
+        keep = ((mask_chunk.astype(jnp.uint32) >> tile_bit) & 1) > 0
+        a = jnp.where(keep[None, :], a, 0.0)
+
+    one_m = 1.0 - a
+    cp = jnp.cumprod(one_m, axis=1)
+    excl = jnp.concatenate([jnp.ones_like(cp[:, :1]), cp[:, :-1]], axis=1)
+    t_before = t_run[:, None] * excl
+    w = jnp.where(t_before > T_EPS, a * t_before, 0.0)
+    rgb_acc = rgb_acc + jnp.stack(
+        [w @ cr, w @ cg, w @ cbl], axis=0
+    )  # (3, P)
+    t_run = t_run * cp[:, -1]
+    return t_run, rgb_acc
+
+
+def _raster_body(feat_ref, out_ref, *, tile_px, n_chunks, chunk,
+                 pix_x, pix_y, mask_ref=None, tile_bit_fn=None):
+    P = tile_px * tile_px
+    feat = feat_ref[0]  # (F, K)
+    mask = mask_ref[0] if mask_ref is not None else None
+    tile_bit = tile_bit_fn() if tile_bit_fn is not None else None
+
+    def body(i, carry):
+        def live_fn(c):
+            t, acc = c
+            fc = jax.lax.dynamic_slice_in_dim(feat, i * chunk, chunk, axis=1)
+            mc = (
+                jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=0)
+                if mask is not None
+                else None
+            )
+            return _blend_chunk(fc, pix_x, pix_y, t, acc, mc, tile_bit)
+
+        # Block-granular early exit: skip the chunk when all pixels are dead.
+        return jax.lax.cond(
+            jnp.any(carry[0] > T_EPS), live_fn, lambda c: c, carry
+        )
+
+    t_run = jnp.ones((P,), jnp.float32)
+    rgb_acc = jnp.zeros((3, P), jnp.float32)
+    t_run, rgb_acc = jax.lax.fori_loop(0, n_chunks, body, (t_run, rgb_acc))
+    result = jnp.concatenate([rgb_acc, t_run[None, :]], axis=0)  # (4, P)
+    out_ref[...] = result.reshape(out_ref.shape)
+
+
+def _pixel_coords(tile_px: int):
+    """In-tile pixel center offsets as two (P,) arrays."""
+    P = tile_px * tile_px
+    lin = jax.lax.iota(jnp.float32, P)
+    px = jnp.mod(lin, tile_px) + 0.5
+    py = jnp.floor(lin / tile_px) + 0.5
+    return px, py
+
+
+def raster_tile_kernel(
+    feat: jnp.ndarray,          # (num_tiles, F, K)
+    tile_origin: jnp.ndarray,   # (num_tiles, 2) float32 pixel origin
+    tile_px: int,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (num_tiles, 4, tile_px^2): rgb + final transmittance."""
+    num_tiles, F, K = feat.shape
+    assert F == NUM_FEATURES and K % chunk == 0
+    P = tile_px * tile_px
+
+    def kernel(origin_ref, feat_ref, out_ref):
+        ox = origin_ref[0, 0]
+        oy = origin_ref[0, 1]
+        dx, dy = _pixel_coords(tile_px)
+        _raster_body(
+            feat_ref,
+            out_ref,
+            tile_px=tile_px,
+            n_chunks=K // chunk,
+            chunk=chunk,
+            pix_x=ox + dx,
+            pix_y=oy + dy,
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda t: (t, 0)),
+            pl.BlockSpec((1, F, K), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 4, P), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles, 4, P), jnp.float32),
+        interpret=interpret,
+    )(tile_origin, feat)
+
+
+def raster_group_fused_kernel(
+    feat: jnp.ndarray,          # (num_groups, F, K) group-sorted entries
+    masks: jnp.ndarray,         # (num_groups, K) uint32 tile bitmasks
+    group_origin: jnp.ndarray,  # (num_groups, 2) float32
+    tile_px: int,
+    gf: int,                    # tiles per group side
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused GS-TG RM. Returns (num_groups, gf*gf, 4, tile_px^2)."""
+    num_groups, F, K = feat.shape
+    assert F == NUM_FEATURES and K % chunk == 0
+    P = tile_px * tile_px
+    tpg = gf * gf
+
+    def kernel(origin_ref, feat_ref, mask_ref, out_ref):
+        slot = pl.program_id(1)
+        ox = origin_ref[0, 0] + (slot % gf).astype(jnp.float32) * tile_px
+        oy = origin_ref[0, 1] + (slot // gf).astype(jnp.float32) * tile_px
+        dx, dy = _pixel_coords(tile_px)
+
+        def out_write(feat_ref_, out_ref_):
+            _raster_body(
+                feat_ref_,
+                out_ref_,
+                tile_px=tile_px,
+                n_chunks=K // chunk,
+                chunk=chunk,
+                pix_x=ox + dx,
+                pix_y=oy + dy,
+                mask_ref=mask_ref,
+                tile_bit_fn=lambda: slot.astype(jnp.uint32),
+            )
+
+        out_write(feat_ref, out_ref)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(num_groups, tpg),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda g, s: (g, 0)),
+            pl.BlockSpec((1, F, K), lambda g, s: (g, 0, 0)),
+            pl.BlockSpec((1, K), lambda g, s: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 4, P), lambda g, s: (g, s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, tpg, 4, P), jnp.float32),
+        interpret=interpret,
+    )(group_origin, feat, masks)
+    return out

@@ -1,0 +1,83 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=convert-mover,while-loop-invariant-code-motion",
+)
+
+"""HBM buffer inspector for dry-run compiles: top value-producing buffers.
+
+  PYTHONPATH=src python -m repro.launch.meminspect --arch granite-3-2b \
+      --shape train_4k [--multi-pod] [--min-gb 0.5]
+"""
+
+import argparse
+import re
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES
+from repro.launch.steps import jit_for_cell
+
+_DT = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2,
+       "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8}
+_TYRE = re.compile(r"(pred|[a-z]+\d+)\[([\d,]+)\]")
+
+
+def buffer_table(hlo_text: str, min_bytes: float, skip_plumbing=True):
+    sizes = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(.*?)\s+([a-z][a-z0-9\-\.]*)\(", line.strip())
+        if not m:
+            continue
+        tstr, op = m.group(1), m.group(2)
+        if skip_plumbing and op in ("tuple", "parameter", "get-tuple-element", "while"):
+            continue
+        total = 0
+        for mm in _TYRE.finditer(tstr):
+            dt, dims = mm.group(1), mm.group(2)
+            if dt not in _DT:
+                continue
+            n = 1
+            for d in dims.split(","):
+                n *= int(d)
+            total += n * _DT[dt]
+        if total >= min_bytes:
+            key = (op, tstr[:80])
+            e = sizes.setdefault(key, [0, 0])
+            e[0] = max(e[0], total)
+            e[1] += 1
+    return sorted(sizes.items(), key=lambda kv: -kv[1][0])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--min-gb", type=float, default=0.5)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    step_fn, kwargs = jit_for_cell(cfg, SHAPES[args.shape], mesh)
+    with mesh:
+        compiled = step_fn.lower(**kwargs).compile()
+    m = compiled.memory_analysis()
+    print(
+        f"args={m.argument_size_in_bytes/2**30:.2f}GiB "
+        f"temp={m.temp_size_in_bytes/2**30:.2f}GiB "
+        f"out={m.output_size_in_bytes/2**30:.2f}GiB "
+        f"alias={m.alias_size_in_bytes/2**30:.2f}GiB"
+    )
+    for (op, t), (tot, cnt) in buffer_table(
+        compiled.as_text(), args.min_gb * 2**30
+    )[: args.top]:
+        print(f"{tot/2**30:8.2f} GiB  x{cnt:3d}  {op:22s} {t}")
+
+
+if __name__ == "__main__":
+    main()

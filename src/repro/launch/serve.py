@@ -1,0 +1,83 @@
+"""Batched greedy serving driver: prefill (teacher-forced decode) + decode.
+
+Serves a (smoke or full) LM with a batch of requests: fills the KV cache by
+stepping the prompt tokens, then greedily decodes continuations. On TPU the
+same decode step runs against the sequence-sharded cache (launch/steps.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import build_cache_spec, build_param_spec, decode_step
+from repro.models.spec import init_from_spec
+
+
+def serve(
+    arch: str,
+    batch: int = 4,
+    prompt_len: int = 16,
+    gen_len: int = 16,
+    smoke: bool = True,
+    seed: int = 0,
+):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if cfg.family == "encoder":
+        raise SystemExit(f"{arch} is encoder-only: no decode serving")
+    params = init_from_spec(build_param_spec(cfg), jax.random.key(seed))
+    max_seq = prompt_len + gen_len
+    cache = jax.tree.map(
+        jnp.zeros_like,
+        init_from_spec(build_cache_spec(cfg, batch, max_seq), jax.random.key(1)),
+    )
+    ident = lambda x, a: x
+    step = jax.jit(
+        lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, ident),
+        donate_argnums=(1,),
+    )
+
+    prompts = np.asarray(
+        jax.random.randint(jax.random.key(2), (batch, prompt_len), 0, cfg.vocab)
+    )
+    t0 = time.time()
+    toks = jnp.asarray(prompts[:, 0])
+    for pos in range(prompt_len):  # prefill by teacher-forced stepping
+        nxt, _, cache = step(params, cache, jnp.asarray(prompts[:, pos]), jnp.int32(pos))
+    generated = [np.asarray(nxt)]
+    for pos in range(prompt_len, max_seq - 1):
+        nxt, _, cache = step(params, cache, jnp.asarray(generated[-1]), jnp.int32(pos))
+        generated.append(np.asarray(nxt))
+    dt = time.time() - t0
+    gen = np.stack(generated, axis=1)
+    tput = batch * gen.shape[1] / dt
+    print(
+        f"{arch}: served batch={batch} prompt={prompt_len} gen={gen.shape[1]} "
+        f"in {dt:.2f}s ({tput:.1f} tok/s incl prefill steps)"
+    )
+    return gen
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+    serve(
+        args.arch,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen_len=args.gen_len,
+        smoke=not args.full_config,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,400 @@
+"""Step builders + abstract input specs for train / prefill / decode.
+
+Everything here is AOT-friendly: input_specs() returns ShapeDtypeStructs with
+NamedShardings attached, so ``jax.jit(step).lower(**input_specs(...))``
+compiles the production mesh program without allocating a single buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import (
+    build_cache_spec,
+    build_param_spec,
+    decode_step,
+    forward,
+    loss_fn,
+)
+from repro.models.config import ModelConfig
+from repro.models.spec import LeafSpec, abstract_from_spec, is_leaf, partition_from_spec
+from repro.optim import (
+    adafactor_init,
+    adamw_init,
+    adafactor_update,
+    adamw_update,
+    clip_by_global_norm,
+    linear_warmup_cosine,
+)
+from repro.sharding.policies import (
+    activation_rules,
+    batch_specs,
+    make_constrain,
+    param_rules,
+)
+from repro.launch.shapes import ShapeCell
+
+ADAFACTOR_THRESHOLD = 50_000_000_000  # >=50B params -> factored optimizer
+
+
+def pick_optimizer(cfg: ModelConfig) -> str:
+    return "adafactor" if cfg.param_count() >= ADAFACTOR_THRESHOLD else "adamw"
+
+
+# --------------------------------------------------------------------------
+# sharding helpers
+# --------------------------------------------------------------------------
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+FSDP_THRESHOLD_BYTES = 2 << 30  # per-device weight bytes above which we
+                                 # additionally shard weights over data (FSDP)
+
+
+def use_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """FSDP decision: TP alone must leave <2GiB/device of weights, else we
+    shard weights over the data axes too (XLA all-gathers per layer at use —
+    the GSPMD realization of FSDP/ZeRO-3). cfg.force_fsdp pins the decision
+    (used by roofline calibration configs with reduced depth)."""
+    if cfg.force_fsdp is not None:
+        return cfg.force_fsdp
+    from repro.models.spec import spec_bytes
+
+    per_dev = spec_bytes(build_param_spec(cfg)) / mesh.shape["model"]
+    return per_dev > FSDP_THRESHOLD_BYTES
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, fsdp: Optional[bool] = None):
+    spec = build_param_spec(cfg)
+    base = partition_from_spec(spec, param_rules(cfg, mesh))
+    if fsdp is None:
+        fsdp = use_fsdp(cfg, mesh)
+    if not fsdp:
+        return base
+    return jax.tree.map(
+        lambda l, ps: zero1_axis(l, ps, mesh), spec, base, is_leaf=is_leaf
+    )
+
+
+def zero1_axis(leaf: LeafSpec, pspec: P, mesh: Mesh) -> P:
+    """ZeRO-1: additionally shard optimizer state over the data axes on the
+    first free (unsharded, divisible) dimension of each leaf."""
+    dp = _dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    parts = list(pspec) + [None] * (len(leaf.shape) - len(pspec))
+    # Already data-sharded (e.g. FSDP params feeding optimizer states): keep.
+    flat = []
+    for pp in parts:
+        flat.extend(pp if isinstance(pp, tuple) else (pp,))
+    if any(a in flat for a in dp):
+        return P(*parts)
+    for i, (dim, cur) in enumerate(zip(leaf.shape, parts)):
+        if cur is None and dim % dp_size == 0 and dim >= dp_size:
+            parts[i] = dp
+            return P(*parts)
+    return P(*parts)
+
+
+def _fsdp_reshard(x, compute_sh: NamedSharding, store_sh: NamedSharding):
+    """FSDP boundary op: all-gather to the compute sharding on the forward
+    pass, reduce-scatter the cotangent back to the storage sharding on the
+    backward pass. A plain with_sharding_constraint transposes to ITSELF, so
+    gradients would stay in (full) compute sharding and stack un-scattered —
+    this custom_vjp is what makes per-layer reduce-scatter happen inside the
+    backward scan."""
+
+    @jax.custom_vjp
+    def f(v):
+        return jax.lax.with_sharding_constraint(v, compute_sh)
+
+    def fwd(v):
+        return jax.lax.with_sharding_constraint(v, compute_sh), None
+
+    def bwd(_, g):
+        return (jax.lax.with_sharding_constraint(g, store_sh),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
+def make_unit_constrain(cfg: ModelConfig, mesh: Mesh):
+    """Reshard per-layer weight slices to the COMPUTE sharding inside the
+    scan body (FSDP: gather layer-by-layer fwd, reduce-scatter grads bwd)."""
+    spec = build_param_spec(cfg)
+    base = partition_from_spec(spec, param_rules(cfg, mesh))["units"]
+    stored = param_pspecs(cfg, mesh)["units"]
+
+    def drop_lead(ps: P) -> NamedSharding:
+        parts = list(ps)[1:]  # axis 0 is the stacked-units axis (always None)
+        return NamedSharding(mesh, P(*parts))
+
+    compute_sh = jax.tree.map(drop_lead, base)
+    store_sh = jax.tree.map(drop_lead, stored)
+
+    def unit_constrain(up):
+        return jax.tree.map(_fsdp_reshard, up, compute_sh, store_sh)
+
+    return unit_constrain
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh):
+    spec = build_param_spec(cfg)
+    pspecs = param_pspecs(cfg, mesh)
+    ab = abstract_from_spec(spec)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=_named(mesh, s)),
+        ab,
+        pspecs,
+    )
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Mesh, optimizer: str, zero1: bool):
+    """ShapeDtypeStructs (with shardings) for the optimizer state."""
+    spec = build_param_spec(cfg)
+    pspecs = param_pspecs(cfg, mesh)
+
+    def adam_leaf(leaf: LeafSpec, ps: P):
+        sp = zero1_axis(leaf, ps, mesh) if zero1 else ps
+        return jax.ShapeDtypeStruct(
+            leaf.shape, jnp.float32, sharding=_named(mesh, sp)
+        )
+
+    if optimizer == "adamw":
+        mu = jax.tree.map(adam_leaf, spec, pspecs, is_leaf=is_leaf)
+        from repro.optim.adamw import AdamWState
+
+        return AdamWState(mu=mu, nu=jax.tree.map(lambda x: x, mu))
+
+    # adafactor: factored stats for >=2D leaves
+    from repro.optim.adafactor import AdafactorState, FactoredLeaf
+
+    def fac_leaf(leaf: LeafSpec, ps: P):
+        parts = list(ps) + [None] * (len(leaf.shape) - len(ps))
+        if len(leaf.shape) >= 2:
+            vr = jax.ShapeDtypeStruct(
+                leaf.shape[:-1], jnp.float32,
+                sharding=_named(mesh, P(*parts[:-1])),
+            )
+            vc = jax.ShapeDtypeStruct(
+                leaf.shape[:-2] + leaf.shape[-1:], jnp.float32,
+                sharding=_named(mesh, P(*(parts[:-2] + parts[-1:]))),
+            )
+            v = jax.ShapeDtypeStruct((1,), jnp.float32, sharding=_named(mesh, P(None)))
+        else:
+            vr = jax.ShapeDtypeStruct((1,), jnp.float32, sharding=_named(mesh, P(None)))
+            vc = jax.ShapeDtypeStruct((1,), jnp.float32, sharding=_named(mesh, P(None)))
+            v = jax.ShapeDtypeStruct(
+                leaf.shape, jnp.float32, sharding=_named(mesh, P(*parts))
+            )
+        return FactoredLeaf(vr=vr, vc=vc, v=v)
+
+    stats = jax.tree.map(fac_leaf, spec, pspecs, is_leaf=is_leaf)
+    return AdafactorState(stats=stats)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh) -> Dict[str, Any]:
+    dp = _dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    def sd(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=_named(mesh, spec))
+
+    if cfg.frontend == "vision_stub":
+        s_text = S - cfg.n_frontend_tokens
+        return {
+            "tokens": sd((B, s_text), jnp.int32, P(dp, None)),
+            "labels": sd((B, s_text), jnp.int32, P(dp, None)),
+            "patch_embeds": sd(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16,
+                P(dp, None, None),
+            ),
+        }
+    if cfg.frontend == "audio_stub":
+        return {
+            "frames": sd((B, S, cfg.d_model), jnp.bfloat16, P(dp, None, None)),
+            "labels": sd((B, S), jnp.int32, P(dp, None)),
+        }
+    return {
+        "tokens": sd((B, S), jnp.int32, P(dp, None)),
+        "labels": sd((B, S), jnp.int32, P(dp, None)),
+    }
+
+
+def _batch_shardable(shape: ShapeCell, mesh: Mesh) -> bool:
+    dp_size = 1
+    for a in _dp_axes(mesh):
+        dp_size *= mesh.shape[a]
+    return shape.global_batch % dp_size == 0
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh):
+    rules = activation_rules(cfg, mesh)
+    if not _batch_shardable(shape, mesh):
+        rules = dict(rules, batch=None, cache_batch=None)
+    cspec = build_cache_spec(cfg, shape.global_batch, shape.seq_len)
+    pspecs = partition_from_spec(cspec, rules)
+    ab = abstract_from_spec(cspec)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=_named(mesh, s)),
+        ab,
+        pspecs,
+    )
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    optimizer: Optional[str] = None,
+    lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    clip_norm: float = 1.0,
+):
+    optimizer = optimizer or pick_optimizer(cfg)
+    constrain = make_constrain(cfg, mesh)
+    uc = make_unit_constrain(cfg, mesh) if mesh is not None else None
+    schedule = linear_warmup_cosine(lr, warmup, total_steps)
+
+    def train_step(params, opt_state, batch, step):
+        def lfn(p):
+            return loss_fn(cfg, p, batch, constrain, uc)
+
+        (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        if optimizer == "adamw":
+            params, opt_state = adamw_update(
+                params, grads, opt_state, step, lr=schedule, weight_decay=0.01
+            )
+        else:
+            params, opt_state = adafactor_update(
+                params, grads, opt_state, step, lr=schedule
+            )
+        out_metrics = {
+            "loss": loss,
+            "ce": metrics["ce"],
+            "aux": metrics["aux"],
+            "grad_norm": gnorm,
+        }
+        return params, opt_state, out_metrics
+
+    return train_step, optimizer
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    constrain = make_constrain(cfg, mesh)
+    uc = make_unit_constrain(cfg, mesh) if mesh is not None else None
+
+    def prefill_step(params, batch):
+        logits, _aux = forward(cfg, params, batch, constrain, uc)
+        if cfg.family == "encoder":
+            return logits          # full frame-level logits (504-way)
+        return logits[:, -1, :]    # TTFT: next-token logits only
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, batch_shardable: bool = True,
+                     weight_gather: bool = False):
+    """weight_gather=False (default, §Perf iteration): decode keeps weights in
+    their 2D storage sharding (model x data) and lets XLA psum the tiny
+    per-token activations. Gathering FSDP weights per decode step moves the
+    full parameter bytes across the ICI to produce ONE token — measured 460x
+    more collective traffic on qwen decode_32k (EXPERIMENTS.md §Perf)."""
+    # §Perf note: an activation-replicated "weight-stationary" layout was
+    # tried here and REFUTED (5x more flops, no collective win — see
+    # EXPERIMENTS.md §Perf); batch-sharded activations stay.
+    constrain = make_constrain(cfg, mesh, batch_shardable=batch_shardable)
+    uc = (
+        make_unit_constrain(cfg, mesh)
+        if (mesh is not None and weight_gather)
+        else None
+    )
+
+    def serve_step(params, cache, tokens, pos):
+        next_tokens, logits, new_cache = decode_step(
+            cfg, params, cache, tokens, pos, constrain, uc
+        )
+        return next_tokens, new_cache
+
+    return serve_step
+
+
+def _sh_of(tree):
+    return jax.tree.map(lambda a: a.sharding, tree)
+
+
+def jit_for_cell(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh,
+                 optimizer: Optional[str] = None):
+    """(jitted_fn, kwargs of ShapeDtypeStructs) for one (arch x shape) cell.
+
+    Pins out_shardings to the input state shardings (params/opt/cache) and
+    donates the state buffers — as a production step would.
+    """
+    dp = _dp_axes(mesh)
+    if shape.kind == "train":
+        optimizer = optimizer or pick_optimizer(cfg)
+        step_fn, _ = make_train_step(cfg, mesh, optimizer=optimizer)
+        kwargs = dict(
+            params=abstract_params(cfg, mesh),
+            opt_state=abstract_opt_state(cfg, mesh, optimizer, zero1=True),
+            batch=abstract_batch(cfg, shape, mesh),
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        out_sh = (_sh_of(kwargs["params"]), _sh_of(kwargs["opt_state"]), None)
+        fn = jax.jit(
+            step_fn,
+            out_shardings=out_sh,
+            donate_argnames=("params", "opt_state"),
+        )
+        return fn, kwargs
+    if shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg, mesh)
+        batch = abstract_batch(cfg, shape, mesh)
+        batch.pop("labels", None)
+        return jax.jit(step_fn), dict(
+            params=abstract_params(cfg, mesh), batch=batch
+        )
+    if shape.kind == "decode":
+        shardable = _batch_shardable(shape, mesh)
+        step_fn = make_decode_step(cfg, mesh, batch_shardable=shardable)
+        B = shape.global_batch
+        tok_spec = P(dp) if shardable else P(None)
+        kwargs = dict(
+            params=abstract_params(cfg, mesh),
+            cache=abstract_cache(cfg, shape, mesh),
+            tokens=jax.ShapeDtypeStruct(
+                (B,), jnp.int32, sharding=_named(mesh, tok_spec)
+            ),
+            pos=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        out_sh = (
+            jax.tree.map(lambda a: a.sharding, kwargs["tokens"]),
+            _sh_of(kwargs["cache"]),
+        )
+        fn = jax.jit(step_fn, out_shardings=out_sh, donate_argnames=("cache",))
+        return fn, kwargs
+    raise ValueError(shape.kind)
+
+
+def abstract_inputs_for_cell(
+    cfg: ModelConfig, shape: ShapeCell, mesh: Mesh, optimizer: Optional[str] = None
+) -> Tuple[Any, Dict[str, Any]]:
+    """Back-compat shim: (raw step_fn, kwargs) — prefer jit_for_cell."""
+    fn, kwargs = jit_for_cell(cfg, shape, mesh, optimizer)
+    return fn, kwargs

@@ -1,0 +1,120 @@
+"""LM training driver: data pipeline -> sharded train step -> checkpoints.
+
+On this CPU container it runs reduced configs end-to-end (examples/train_lm.py);
+on a TPU fleet the same driver runs the production mesh — the only difference
+is the mesh construction and per-host data slicing (both isolated here).
+
+Fault-tolerance wiring: async checkpoints every --ckpt-every steps with
+integrity hashes; on restart the latest checkpoint restores (params, opt,
+step) and the counter-based TokenStream regenerates the exact batch sequence.
+A HeartbeatMonitor hook flags stragglers (single-host here: illustrative).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.data import TokenStream, make_batch
+from repro.ft import HeartbeatMonitor
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step, pick_optimizer
+from repro.models import build_param_spec
+from repro.models.spec import init_from_spec
+from repro.optim import adafactor_init, adamw_init
+
+
+def train(
+    arch: str,
+    steps: int = 100,
+    batch: int = 4,
+    seq: int = 128,
+    lr: float = 3e-3,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    smoke: bool = True,
+    seed: int = 0,
+    log_every: int = 10,
+):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    mesh = None  # single host; make_production_mesh() on a real fleet
+    step_fn, optname = make_train_step(cfg, mesh, lr=lr, total_steps=steps)
+    step_fn = jax.jit(step_fn)
+
+    params = init_from_spec(build_param_spec(cfg), jax.random.key(seed))
+    opt_state = (
+        adamw_init(params) if optname == "adamw" else adafactor_init(params)
+    )
+    stream = TokenStream(cfg.vocab, batch, seq, seed=seed)
+
+    start = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=3)
+        if mgr.all_steps():
+            leaves, manifest = mgr.restore()
+            tree = {"params": params, "opt": opt_state}
+            restored = jax.tree.unflatten(
+                jax.tree.structure(tree), [jnp.asarray(x) for x in leaves]
+            )
+            params, opt_state = restored["params"], restored["opt"]
+            start = manifest["step"]
+            print(f"resumed from step {start}")
+
+    monitor = HeartbeatMonitor(n_hosts=1)
+    history = []
+    for i in range(start, steps):
+        t0 = time.time()
+        np_batch = make_batch(
+            stream, i, cfg.frontend, cfg.n_frontend_tokens, cfg.d_model
+        )
+        jbatch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+        params, opt_state, metrics = step_fn(
+            params, opt_state, jbatch, jnp.int32(i)
+        )
+        dt = time.time() - t0
+        monitor.report(0, i, dt, now_s=time.time())
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m, "s_per_step": dt})
+            print(
+                f"step {i:5d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
+                f"gnorm={m['grad_norm']:.3f} ({dt:.2f}s)"
+            )
+        if mgr and (i + 1) % ckpt_every == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt_state})
+    if mgr:
+        mgr.wait()
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+    train(
+        args.arch,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        smoke=not args.full_config,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.models.config import ModelConfig
+from repro.models.lm import (
+    build_param_spec,
+    build_cache_spec,
+    decode_step,
+    forward,
+    loss_fn,
+)
+
+__all__ = [
+    "ModelConfig",
+    "build_param_spec",
+    "build_cache_spec",
+    "decode_step",
+    "forward",
+    "loss_fn",
+]

@@ -1,0 +1,289 @@
+"""GQA attention: chunked online-softmax prefill/train + KV-cache decode.
+
+Memory discipline: full (S, S) score materialization is never allowed — the
+kv axis is processed in attn_chunk-sized blocks with running (max, sum, acc)
+online-softmax state (flash-attention recurrence, jax.lax.scan over blocks).
+This is what makes prefill_32k / train_4k lowerable at production shapes.
+
+Decode consumes a (B, S_cache, KV, hd) cache laid out for sequence-parallel
+sharding (cache seq axis on the 'model' mesh axis): the online softmax over a
+sharded kv axis reduces via XLA's partial logsumexp + all-reduce.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    # Packed in lm.py param dicts; listed here for shape documentation only.
+    pass
+
+
+def _repeat_kv(x: jnp.ndarray, n_rep: int):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) by head-group broadcast."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd))
+    return x.reshape(b, s, kv * n_rep, hd)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def chunked_attention(
+    q: jnp.ndarray,             # (B, Sq, H, hd)
+    k: jnp.ndarray,             # (B, Skv, H, hd)   (already GQA-expanded)
+    v: jnp.ndarray,             # (B, Skv, H, hd)
+    causal: bool,
+    chunk: int = 512,
+    q_offset: int = 0,          # absolute position of q[0] (for causal mask)
+    unroll: bool = False,       # unroll kv blocks (roofline costing mode)
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning kv blocks. O(Sq * chunk) memory.
+
+    custom_vjp (flash-attention backward): the naive scan VJP would stack the
+    f32 (m, l, acc) carries for every kv block — O(Skv/chunk) copies of the
+    attention output. The flash backward saves only (q, k, v, out, m, l) and
+    recomputes each block's score tile.
+    """
+    out, _, _ = _chunked_attention_fwd_impl(q, k, v, causal, chunk, q_offset,
+                                            unroll)
+    return out
+
+
+def _kv_blocks(k, v, chunk):
+    B, Skv, H, hd = k.shape
+    n_blocks = -(-Skv // chunk)
+    pad = n_blocks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blocks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    return kb, vb, n_blocks, pad
+
+
+def _chunked_attention_fwd_impl(q, k, v, causal, chunk, q_offset, unroll=False):
+    """Returns (out (B,Sq,H,hd), m (B,H,Sq), l (B,H,Sq))."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = hd ** -0.5
+    # Mixed-precision discipline: operands stay bf16, matmuls accumulate in
+    # f32 via preferred_element_type. Upcasting operands (q.astype(f32))
+    # would make every backward cotangent f32 all the way into the stacked
+    # weight-gradient accumulators — 2x the gradient memory.
+    q = (q * scale).astype(q.dtype)
+
+    n_blocks = -(-Skv // chunk)
+    pad = n_blocks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blocks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry                      # (B,H,Sq), (B,H,Sq), (B,H,Sq,hd)
+        kc, vc, blk = xs                       # (B,chunk,H,hd) x2, ()
+        kv_pos = blk * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, kc, preferred_element_type=jnp.float32
+        )                                      # (B,H,Sq,chunk) f32
+        mask = jnp.broadcast_to((kv_pos < Skv)[None, :], (Sq, chunk))  # pad mask
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blocks)),
+        unroll=n_blocks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # Downcast before leaving the attention segment: keeps the remat-saved
+    # residual stream (and everything XLA stores per scan step) in bf16.
+    out = out.astype(k.dtype)
+    return out.transpose(0, 2, 1, 3), m, l  # out (B, Sq, H, hd)
+
+
+def _chunked_attention_fwd(q, k, v, causal, chunk, q_offset, unroll):
+    out, m, l = _chunked_attention_fwd_impl(q, k, v, causal, chunk, q_offset,
+                                            unroll)
+    return out, (q, k, v, out, m, l)
+
+
+def _chunked_attention_bwd(causal, chunk, q_offset, unroll, res, dout):
+    """Flash backward: recompute each block's p tile from the saved softmax
+    statistics; per-block transients only."""
+    q, k, v, out, m, l = res
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = hd ** -0.5
+    qs = (q * scale).astype(q.dtype)
+
+    kb, vb, n_blocks, pad = _kv_blocks(k, v, chunk)
+    q_pos = q_offset + jnp.arange(Sq)
+    l_safe = jnp.maximum(l, 1e-30)
+
+    # D_i = rowsum(dout * out) (B,H,Sq) — the softmax-backward diagonal term.
+    dout_t = dout.transpose(0, 2, 1, 3)            # (B,H,Sq,hd)
+    out_t = out.transpose(0, 2, 1, 3)
+    delta = jnp.einsum(
+        "bhqd,bhqd->bhq", dout_t, out_t, preferred_element_type=jnp.float32
+    )
+
+    def body(dq_acc, xs):
+        kc, vc, blk = xs
+        kv_pos = blk * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", qs, kc, preferred_element_type=jnp.float32
+        )
+        mask = jnp.broadcast_to((kv_pos < Skv)[None, :], (Sq, chunk))
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+        p = jnp.exp(s - m[..., None]) / l_safe[..., None]   # normalized probs
+        p16 = p.astype(v.dtype)
+        dv_c = jnp.einsum(
+            "bhqk,bhqd->bkhd", p16, dout_t.astype(v.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        dp = jnp.einsum(
+            "bhqd,bkhd->bhqk", dout_t.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - delta[..., None])                    # f32 tile
+        ds16 = ds.astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum(
+            "bhqk,bkhd->bqhd", ds16, kc, preferred_element_type=jnp.float32
+        )
+        dk_c = jnp.einsum(
+            "bhqk,bqhd->bkhd", ds16, qs, preferred_element_type=jnp.float32
+        )
+        return dq_acc, (dk_c.astype(k.dtype), dv_c.astype(v.dtype))
+
+    dq0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        body, dq0, (kb, vb, jnp.arange(n_blocks)),
+        unroll=n_blocks if unroll else 1,
+    )
+    dq = (dq * scale).astype(q.dtype)
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(B, n_blocks * chunk, H, hd)
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(B, n_blocks * chunk, H, hd)
+    if pad:
+        dk = dk[:, :Skv]
+        dv = dv[:, :Skv]
+    return dq, dk, dv
+
+
+chunked_attention.defvjp(_chunked_attention_fwd, _chunked_attention_bwd)
+
+
+def attention_forward(
+    p: dict,                    # {'wq','wk','wv','wo'[,'bq','bk','bv']}
+    x: jnp.ndarray,             # (B, S, D)
+    cfg,
+    positions: jnp.ndarray,     # (S,) absolute positions
+    causal: bool,
+    constrain,                  # fn(tensor, logical_axes) -> tensor
+) -> jnp.ndarray:
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, KV, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, hd)
+        k = k + p["bk"].reshape(KV, hd)
+        v = v + p["bv"].reshape(KV, hd)
+
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    q = constrain(q, ("batch", None, "heads", "head_dim"))
+    k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
+
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    out = chunked_attention(q, k, v, causal, cfg.attn_chunk, 0,
+                            cfg.unroll_for_costing)
+    out = constrain(out, ("batch", None, "heads", "head_dim"))
+    out = out.reshape(B, S, H * hd).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def attention_decode(
+    p: dict,
+    x: jnp.ndarray,             # (B, 1, D) current token activations
+    cache_k: jnp.ndarray,       # (B, S_max, KV, hd)
+    cache_v: jnp.ndarray,
+    pos,                        # () int32 current position
+    cfg,
+    constrain,
+):
+    """One decode step against a (possibly seq-sharded) KV cache.
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    B, _, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S_max = cache_k.shape[1]
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, 1, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, 1, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, 1, KV, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, hd)
+        k = k + p["bk"].reshape(KV, hd)
+        v = v + p["bv"].reshape(KV, hd)
+
+    posv = jnp.asarray(pos)[None]
+    cos, sin = rope_angles(posv, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0)
+    )
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0)
+    )
+    cache_k = constrain(cache_k, ("cache_batch", "cache_seq", "kv_heads", "head_dim"))
+    cache_v = constrain(cache_v, ("cache_batch", "cache_seq", "kv_heads", "head_dim"))
+
+    # Grouped-query attention over the whole cache (seq axis may be sharded;
+    # the softmax/contraction reductions then become all-reduces).
+    qg = q.reshape(B, KV, H // KV, hd).astype(jnp.float32) * hd ** -0.5
+    kf = cache_k.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kf)  # (B, KV, G, S_max)
+    valid = jnp.arange(S_max)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), cache_k, cache_v

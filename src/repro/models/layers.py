@@ -1,0 +1,82 @@
+"""Shared model layers: norms, embeddings, rotary embeddings, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6):
+    """RMSNorm with f32 statistics but NO materialized f32 copy of x.
+
+    The variance is an einsum with f32 accumulation (contraction, fuses into
+    a reduce); the normalize multiply stays in the activation dtype. A plain
+    x.astype(f32) here becomes the first use of every remat-saved layer
+    input, and XLA then widens the whole saved activation stack to f32.
+    """
+    var = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None]
+    return x * inv.astype(x.dtype) * weight.astype(x.dtype)
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim//2), interleaved convention.
+
+    Interleaved (even/odd) pairing keeps each rotation pair inside a
+    contiguous half-lane block, so a head_dim-sharded layout never splits a
+    pair across devices (used by the 'head_dim' attention sharding policy).
+    """
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (..., S, H, hd); cos/sin (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1 = x[..., :half]
+    x2 = x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(
+        x.dtype
+    )
+
+
+def embed_tokens(table: jnp.ndarray, tokens: jnp.ndarray, one_hot: bool = False):
+    """Token embedding lookup.
+
+    one_hot=True uses the one-hot-matmul formulation: with a vocab-sharded
+    table, gather/scatter would replicate the full table (and its f32
+    gradient) on every device; the matmul contracts the sharded vocab axis
+    with partial sums instead, and its transpose keeps dTable vocab-sharded.
+    This is the standard TPU big-vocab embedding idiom.
+    """
+    if not one_hot:
+        return jnp.take(table, tokens, axis=0)
+    oh = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+    return jnp.einsum("...v,vd->...d", oh, table)
+
+
+def softmax_xent(
+    logits: jnp.ndarray,      # (B, S, V) possibly vocab-sharded
+    labels: jnp.ndarray,      # (B, S) int32
+    mask: jnp.ndarray,        # (B, S) 0/1 valid positions
+    vocab: int,               # logical (unpadded) vocab size
+):
+    """Stable mean cross-entropy; padded vocab tail masked out."""
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    if V > vocab:
+        pad_mask = jnp.arange(V) >= vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # One-hot contraction instead of take_along_axis: a gather across the
+    # vocab-sharded axis would force an all-gather of the full logits; the
+    # elementwise product + reduction partitions cleanly (partial sums).
+    onehot = jax.nn.one_hot(labels, V, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

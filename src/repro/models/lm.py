@@ -1,0 +1,400 @@
+"""Unified language model covering the assigned architecture pool.
+
+One parameterized decoder/encoder stack supporting:
+  * dense GQA transformers (qwen, smollm, granite, phi4, llava backbone)
+  * MoE FFNs (kimi-k2, granite-moe, jamba's MoE layers)
+  * Mamba-2 mixers (mamba2-370m, jamba hybrid 1:7 interleave)
+  * encoder-only bidirectional (hubert)
+  * frontend stubs (vision patches / audio frames) prepended to the sequence
+
+Layers are stacked per pattern-position and scanned (jax.lax.scan) so the HLO
+stays compact at 60-80 layers; remat wraps the unit body.
+
+Weights are stored with explicit head/dim axes — e.g. wq (D, H, hd) — so the
+sharding policies (heads / row / head_dim TP) are pure PartitionSpec choices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_decode, attention_forward
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_tokens, rms_norm, softmax_xent
+from repro.models.mamba2 import mamba_decode, mamba_forward
+from repro.models.moe import moe_ffn
+from repro.models.spec import LeafSpec
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+def build_param_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    U = cfg.n_units
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+
+    def leaf(shape, axes, init="normal", fan_in=None):
+        return LeafSpec(tuple(shape), tuple(axes), dt, init, fan_in)
+
+    def attn_spec():
+        s = {
+            "wq": leaf((U, D, H, hd), (None, "attn_embed", "heads", "head_dim"), fan_in=D),
+            "wk": leaf((U, D, KV, hd), (None, "attn_embed", "kv_heads", "head_dim"), fan_in=D),
+            "wv": leaf((U, D, KV, hd), (None, "attn_embed", "kv_heads", "head_dim"), fan_in=D),
+            "wo": leaf((U, H, hd, D), (None, "heads", "head_dim", "attn_embed"), fan_in=H * hd),
+        }
+        if cfg.qkv_bias:
+            s["bq"] = leaf((U, H, hd), (None, "heads", "head_dim"), init="zeros")
+            s["bk"] = leaf((U, KV, hd), (None, "kv_heads", "head_dim"), init="zeros")
+            s["bv"] = leaf((U, KV, hd), (None, "kv_heads", "head_dim"), init="zeros")
+        return s
+
+    def mamba_spec():
+        din, N, SH = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        W = cfg.ssm_conv
+        return {
+            "wz": leaf((U, D, din), (None, None, "ssm_inner"), fan_in=D),
+            "wx": leaf((U, D, din), (None, None, "ssm_inner"), fan_in=D),
+            "wbc": leaf((U, D, 2 * N), (None, None, None), fan_in=D),
+            "wdt": leaf((U, D, SH), (None, None, "ssm_heads"), fan_in=D),
+            "conv_x": leaf((U, W, din), (None, None, "ssm_inner"), init="small_normal"),
+            "conv_bc": leaf((U, W, 2 * N), (None, None, None), init="small_normal"),
+            "conv_bx": leaf((U, din), (None, "ssm_inner"), init="zeros"),
+            "conv_bbc": leaf((U, 2 * N), (None, None), init="zeros"),
+            "A_log": leaf((U, SH), (None, "ssm_heads"), init="ones"),
+            "D": leaf((U, SH), (None, "ssm_heads"), init="ones"),
+            "dt_bias": leaf((U, SH), (None, "ssm_heads"), init="zeros"),
+            "norm_w": leaf((U, din), (None, "ssm_inner"), init="ones"),
+            "out_proj": leaf((U, din, D), (None, "ssm_inner", None), fan_in=din),
+        }
+
+    def dense_ffn_spec():
+        F = cfg.d_ff
+        s = {
+            "w1": leaf((U, D, F), (None, None, "ffn"), fan_in=D),
+            "w2": leaf((U, F, D), (None, "ffn", None), fan_in=F),
+        }
+        s["w3"] = leaf((U, D, F), (None, None, "ffn"), fan_in=D)
+        return s
+
+    def moe_spec():
+        E = cfg.n_experts
+        F = cfg.d_ff_expert or cfg.d_ff
+        return {
+            "router": leaf((U, D, E), (None, None, "experts"), fan_in=D),
+            "w1": leaf((U, E, D, F), (None, "experts", None, "expert_ffn"), fan_in=D),
+            "w3": leaf((U, E, D, F), (None, "experts", None, "expert_ffn"), fan_in=D),
+            "w2": leaf((U, E, F, D), (None, "experts", "expert_ffn", None), fan_in=F),
+        }
+
+    units: Dict[str, Any] = {}
+    for j, (mixer, ffn) in enumerate(cfg.pattern):
+        pos: Dict[str, Any] = {"norm1": leaf((U, D), (None, None), init="ones")}
+        pos["mixer"] = attn_spec() if mixer == "attn" else mamba_spec()
+        if ffn != "none":
+            pos["norm2"] = leaf((U, D), (None, None), init="ones")
+            pos["ffn"] = dense_ffn_spec() if ffn == "dense" else moe_spec()
+        units[f"pos{j}"] = pos
+
+    spec: Dict[str, Any] = {
+        # Embedding table sharded on the EMBED dim: row gathers are then
+        # shard-local (each device holds a D-slice of every row) — no
+        # collectives, no scatter in the backward, and no one-hot matmul
+        # FLOPs. The (separate) lm_head stays vocab-sharded for the logits
+        # matmul + sharded softmax. Tied-embedding archs matmul x @ table.T,
+        # contracting the sharded D axis (partial sums).
+        "embed": leaf((cfg.vocab_padded, D), (None, "embed_tbl"), fan_in=D),
+        "units": units,
+        "final_norm": leaf((D,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = leaf((D, cfg.vocab_padded), (None, "vocab"), fan_in=D)
+    if cfg.frontend in ("vision_stub", "audio_stub"):
+        spec["frontend_proj"] = leaf((D, D), (None, None), fan_in=D)
+    return spec
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _mlp(p, x, act: str, constrain):
+    h1 = jnp.einsum("bsd,df->bsf", x, p["w1"])
+    h1 = constrain(h1, ("batch", None, "ffn"))
+    if act == "gelu":
+        h = jax.nn.gelu(h1.astype(jnp.float32)).astype(x.dtype)
+    else:
+        silu = h1 * jax.nn.sigmoid(h1.astype(jnp.float32)).astype(x.dtype)
+        h3 = jnp.einsum("bsd,df->bsf", x, p["w3"])
+        h3 = constrain(h3, ("batch", None, "ffn"))
+        h = silu * h3
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+def _flat_attn(p):
+    """(D,H,hd)/(H,hd,D) weights -> flat views for attention.py einsums."""
+    U_absent = p["wq"].ndim == 3  # sliced by scan: (D,H,hd)
+    assert U_absent
+    D, H, hd = p["wq"].shape
+    KV = p["wk"].shape[1]
+    q = {"wq": p["wq"].reshape(D, H * hd),
+         "wk": p["wk"].reshape(D, KV * hd),
+         "wv": p["wv"].reshape(D, KV * hd),
+         "wo": p["wo"].reshape(H * hd, D)}
+    for b in ("bq", "bk", "bv"):
+        if b in p:
+            q[b] = p[b].reshape(-1)
+    return q
+
+
+def _unit_forward(cfg: ModelConfig, x, unit_params, positions, constrain):
+    aux = jnp.zeros((), jnp.float32)
+    for j, (mixer, ffn) in enumerate(cfg.pattern):
+        pj = unit_params[f"pos{j}"]
+        h = rms_norm(x, pj["norm1"])
+        if mixer == "attn":
+            y = attention_forward(
+                _flat_attn(pj["mixer"]), h, cfg, positions,
+                causal=cfg.causal, constrain=constrain,
+            )
+        else:
+            y = mamba_forward(_mamba_p(pj["mixer"]), h, cfg, constrain)
+        x = x + y
+        if ffn != "none":
+            h2 = rms_norm(x, pj["norm2"])
+            if ffn == "dense":
+                act = "gelu" if cfg.family == "encoder" else "swiglu"
+                y2 = _mlp(pj["ffn"], h2, act, constrain)
+            else:
+                y2, a = moe_ffn(pj["ffn"], h2, cfg, constrain)
+                aux = aux + a
+            x = x + y2
+        x = constrain(x, ("batch", "act_seq", None))
+    return x, aux
+
+
+def _mamba_p(p):
+    """Assemble the packed views mamba2.py expects from split weights."""
+    out = dict(p)
+    out["in_proj"] = jnp.concatenate(
+        [p["wz"], p["wx"], p["wbc"], p["wdt"]], axis=-1
+    )
+    out["conv_w"] = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    out["conv_b"] = jnp.concatenate([p["conv_bx"], p["conv_bbc"]], axis=-1)
+    return out
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch, constrain):
+    """Token (+frontend) embedding. Returns (x (B,S,D), loss_mask (B,S))."""
+    if cfg.frontend == "text":
+        x = embed_tokens(params["embed"], batch["tokens"], one_hot=False)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(batch["tokens"].shape, jnp.float32)
+        return x, mask
+    if cfg.frontend == "vision_stub":
+        tok = embed_tokens(params["embed"], batch["tokens"], one_hot=False)
+        patches = jnp.einsum(
+            "bpd,de->bpe", batch["patch_embeds"].astype(tok.dtype),
+            params["frontend_proj"],
+        )
+        x = jnp.concatenate([patches, tok], axis=1)
+        mask = jnp.concatenate(
+            [
+                jnp.zeros(patches.shape[:2], jnp.float32),
+                jnp.ones(tok.shape[:2], jnp.float32),
+            ],
+            axis=1,
+        )
+        return x, mask
+    if cfg.frontend == "audio_stub":
+        x = jnp.einsum(
+            "bsd,de->bse",
+            batch["frames"].astype(jnp.dtype(cfg.activation_dtype)),
+            params["frontend_proj"],
+        )
+        return x, jnp.ones(x.shape[:2], jnp.float32)
+    raise ValueError(cfg.frontend)
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    constrain,
+    unit_constrain=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss ()).
+
+    unit_constrain: optional fn(unit_params)->unit_params applied INSIDE the
+    scan body — constrains each layer's weight slices to the compute sharding
+    so FSDP-stored weights are all-gathered one layer at a time, not as the
+    whole stack.
+    """
+    x, _ = _embed_inputs(cfg, params, batch, constrain)
+    x = x.astype(jnp.dtype(cfg.activation_dtype))
+    x = constrain(x, ("batch", "act_seq", None))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, unit_params):
+        h, aux = carry
+        if unit_constrain is not None:
+            unit_params = unit_constrain(unit_params)
+        h, a = _unit_forward(cfg, h, unit_params, positions, constrain)
+        return (h, aux + a), None
+
+    unit_fn = (
+        jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    )
+    if cfg.unroll_for_costing:
+        carry = (x, jnp.zeros((), jnp.float32))
+        for i in range(cfg.n_units):
+            up = jax.tree.map(lambda a: a[i], params["units"])
+            carry, _ = unit_fn(carry, up)
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(
+            unit_fn, (x, jnp.zeros((), jnp.float32)), params["units"]
+        )
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, constrain, unit_constrain=None):
+    logits, aux = forward(cfg, params, batch, constrain, unit_constrain)
+    if cfg.frontend == "vision_stub":
+        n_front = batch["patch_embeds"].shape[1]
+        logits_txt = logits[:, n_front:, :]
+    else:
+        logits_txt = logits
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    ce = softmax_xent(logits_txt, labels, mask, cfg.vocab)
+    return ce + cfg.router_aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+
+def build_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    """LeafSpec tree for the decode cache (shapes + logical axes)."""
+    U = cfg.n_units
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    din, N = cfg.d_inner, cfg.ssm_state
+    SH, P, W = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    cdt = cfg.activation_dtype
+    cache: Dict[str, Any] = {}
+    for j, (mixer, _) in enumerate(cfg.pattern):
+        if mixer == "attn":
+            cache[f"pos{j}"] = {
+                "k": LeafSpec((U, batch, max_seq, KV, hd),
+                              (None, "cache_batch", "cache_seq", "kv_heads", "head_dim"), cdt, "zeros"),
+                "v": LeafSpec((U, batch, max_seq, KV, hd),
+                              (None, "cache_batch", "cache_seq", "kv_heads", "head_dim"), cdt, "zeros"),
+            }
+        else:
+            cache[f"pos{j}"] = {
+                "ssm": LeafSpec((U, batch, SH, N, P),
+                                (None, "cache_batch", "ssm_heads", None, None), "float32", "zeros"),
+                "conv_x": LeafSpec((U, batch, W - 1, din),
+                                   (None, "cache_batch", None, "ssm_inner"), cdt, "zeros"),
+                "conv_bc": LeafSpec((U, batch, W - 1, 2 * N),
+                                    (None, "cache_batch", None, None), cdt, "zeros"),
+            }
+    return cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    cache,
+    tokens: jnp.ndarray,   # (B,) current token ids
+    pos,                   # () int32 position to write
+    constrain,
+    unit_constrain=None,
+):
+    """One greedy decode step. Returns (next_tokens (B,), logits, new_cache)."""
+    x = embed_tokens(params["embed"], tokens[:, None], one_hot=False)
+    x = x.astype(jnp.dtype(cfg.activation_dtype))
+
+    def body(carry, xs):
+        h = carry
+        unit_params, unit_cache = xs
+        if unit_constrain is not None:
+            unit_params = unit_constrain(unit_params)
+        new_cache = {}
+        for j, (mixer, _ffn) in enumerate(cfg.pattern):
+            pj = unit_params[f"pos{j}"]
+            cj = unit_cache[f"pos{j}"]
+            hin = rms_norm(h, pj["norm1"])
+            if mixer == "attn":
+                y, nk, nv = attention_decode(
+                    _flat_attn(pj["mixer"]), hin, cj["k"], cj["v"], pos, cfg,
+                    constrain,
+                )
+                new_cache[f"pos{j}"] = {"k": nk, "v": nv}
+            else:
+                y, st_dict = _mamba_decode_split(
+                    _mamba_p(pj["mixer"]), hin, cj, cfg
+                )
+                new_cache[f"pos{j}"] = st_dict
+            h = h + y
+            ffn = cfg.pattern[j][1]
+            if ffn != "none":
+                h2 = rms_norm(h, pj["norm2"])
+                if ffn == "dense":
+                    act = "gelu" if cfg.family == "encoder" else "swiglu"
+                    h = h + _mlp(pj["ffn"], h2, act, constrain)
+                else:
+                    y2, _ = moe_ffn(pj["ffn"], h2, cfg, constrain)
+                    h = h + y2
+        return h, new_cache
+
+    if cfg.unroll_for_costing:
+        outs = []
+        h = x
+        for i in range(cfg.n_units):
+            up = jax.tree.map(lambda a: a[i], params["units"])
+            uc_i = jax.tree.map(lambda a: a[i], cache)
+            h, nc = body(h, (up, uc_i))
+            outs.append(nc)
+        x = h
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["units"], cache))
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0, :]
+    logits = constrain(logits, ("batch", "vocab"))
+    next_tokens = jnp.argmax(
+        jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -jnp.inf),
+        axis=-1,
+    ).astype(jnp.int32)
+    return next_tokens, logits, new_cache
+
+
+def _mamba_decode_split(mp, hin, cj, cfg):
+    """Adapter: split conv cache -> packed mamba_decode -> split again."""
+    conv_state = jnp.concatenate([cj["conv_x"], cj["conv_bc"]], axis=-1)
+    y, new_ssm, new_conv = mamba_decode(mp, hin, cj["ssm"], conv_state, cfg)
+    din = cfg.d_inner
+    st = {
+        "ssm": new_ssm,
+        "conv_x": new_conv[..., :din].astype(cj["conv_x"].dtype),
+        "conv_bc": new_conv[..., din:].astype(cj["conv_bc"].dtype),
+    }
+    return y, st

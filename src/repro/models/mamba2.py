@@ -1,0 +1,209 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), chunked form.
+
+The SSD recurrence per head (state N, head dim P):
+    h_t = a_t * h_{t-1} + b_t^T (dt_t * x_t)      h in R^{N x P}
+    y_t = c_t h_t + D * x_t
+with a_t = exp(-dt_t * exp(A_log)) scalar per head, b/c shared across heads
+(n_groups=1). Computed chunk-parallel: within a chunk the quadratic
+'attention-like' term C_i (prod a) B_j^T masks to lower-triangular; across
+chunks a small recurrent scan carries the (H, N, P) state. This is the
+standard minimal SSD algorithm, vectorized for the MXU (einsums over chunks).
+
+Decode is the O(1) recurrent update on a persistent (B, H, N, P) state plus a
+depthwise-conv ring buffer.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(log_a: jnp.ndarray):
+    """log_a (..., L) -> (..., L, L) lower-tri cumulative segment sums:
+    out[i, j] = sum_{k=j+1..i} log_a_k for i >= j, -inf otherwise."""
+    L = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]   # sum_{j+1..i} when i>=j
+    ii = jnp.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, S, H, P) inputs (dt applied by caller)
+    log_a: jnp.ndarray,  # (B, S, H) per-step log decay (negative)
+    b: jnp.ndarray,      # (B, S, N)  input projections (n_groups=1)
+    c: jnp.ndarray,      # (B, S, N)  output projections
+    chunk: int,
+) -> jnp.ndarray:
+    """Returns y (B, S, H, P)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    L = chunk
+    pad = (-S) % L
+    if pad:
+        # zero-padded tail: b=0 adds nothing to the state, log_a=0 (decay 1)
+        # carries it unchanged; padded outputs are sliced off below.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // L
+
+    xr = x.reshape(B, nc, L, H, P)
+    ar = log_a.reshape(B, nc, L, H)
+    br = b.reshape(B, nc, L, N)
+    cr = c.reshape(B, nc, L, N)
+
+    # --- intra-chunk (quadratic) term ---
+    # bf16 operands + f32 accumulation (preferred_element_type); the decay
+    # masks stay f32 (exp of log sums), downcast before the MXU contractions.
+    seg = _segsum(ar.transpose(0, 1, 3, 2))               # (B,nc,H,L,L)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum(
+        "bcln,bcmn->bclm", cr, br, preferred_element_type=jnp.float32
+    )                                                     # (B,nc,L,L)
+    mat = (scores[:, :, None, :, :] * decay).astype(x.dtype)  # (B,nc,H,L,L)
+    y_intra = jnp.einsum(
+        "bchlm,bcmhp->bclhp", mat, xr, preferred_element_type=jnp.float32
+    )
+
+    # --- chunk states: sum_j (prod_{j+1..L} a) b_j x_j ---
+    a_cum = jnp.cumsum(ar, axis=2)                        # (B,nc,L,H)
+    a_tail = a_cum[:, :, -1:, :] - a_cum                  # decay to chunk end
+    w = jnp.exp(a_tail).astype(x.dtype)                   # (B,nc,L,H)
+    states = jnp.einsum(
+        "bcln,bclh,bclhp->bchnp", br, w, xr,
+        preferred_element_type=jnp.float32,
+    )                                                     # (B,nc,H,N,P)
+
+    # --- inter-chunk recurrence over nc (small sequential scan) ---
+    a_chunk = a_cum[:, :, -1, :]                          # (B,nc,H) total decay
+
+    def scan_fn(h_prev, inp):
+        st, ac = inp                                      # (B,H,N,P), (B,H)
+        h_new = h_prev * jnp.exp(ac)[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)  # matches f32-accumulated states
+    _, h_before = jax.lax.scan(
+        scan_fn,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), a_chunk.transpose(1, 0, 2)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)          # (B,nc,H,N,P)
+
+    # --- inter-chunk contribution: y += (c_t * decay_to_chunk_start) h_prev
+    w_in = jnp.exp(a_cum).astype(x.dtype)                 # decay from chunk start
+    y_inter = jnp.einsum(
+        "bcln,bclh,bchnp->bclhp", cr, w_in, h_before.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    if pad:
+        y = y[:, : S - pad]
+    return y
+
+
+def mamba_forward(
+    p: dict,
+    x: jnp.ndarray,     # (B, S, D)
+    cfg,
+    constrain,
+) -> jnp.ndarray:
+    """Full Mamba-2 mixer block (in_proj -> conv -> SSD -> gate -> out_proj)."""
+    B, S, D = x.shape
+    din = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + 2 * N], axis=-1
+    )
+    # depthwise causal conv over (x, b, c)
+    xbc = jnp.concatenate([xin, bc], axis=-1)             # (B,S,din+2N)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], cfg.ssm_conv)
+    xin, b, c = jnp.split(xbc, [din, din + N], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                     # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,)
+    log_a = dt * a[None, None, :]                         # (B,S,H)
+
+    xh = xin.reshape(B, S, H, P)
+    xh = constrain(xh, ("batch", None, "ssm_heads", None))
+    xdt = xh * dt[..., None].astype(x.dtype)
+    y = ssd_chunked(xdt, log_a, b, c, cfg.ssm_chunk)
+    y = y + (xh * p["D"].astype(x.dtype)[None, None, :, None]).astype(jnp.float32)
+    y = y.reshape(B, S, din).astype(x.dtype)
+
+    # gated RMS norm (Mamba-2 norm-before-out_proj)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(
+        jnp.mean(jnp.square(y32), axis=-1, keepdims=True) + 1e-6
+    )).astype(x.dtype) * p["norm_w"]
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray, width: int):
+    """Depthwise causal conv1d. x (B,S,C), w (width,C)."""
+    B, S, C = x.shape
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # small static width (4)
+        out = out + xp[:, i : i + S, :].astype(jnp.float32) * w[i][None, None, :]
+    out = out + bias[None, None, :]
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def mamba_decode(
+    p: dict,
+    x: jnp.ndarray,        # (B, 1, D)
+    ssm_state: jnp.ndarray,   # (B, H, N, P)
+    conv_state: jnp.ndarray,  # (B, width-1, din+2N)
+    cfg,
+):
+    """Single-token recurrent step. Returns (y, new_ssm_state, new_conv_state)."""
+    B, _, D = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    width = cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]  # (B, E)
+    z, xin, bc, dt = jnp.split(zxbcdt, [din, 2 * din, 2 * din + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xin, bc], axis=-1)             # (B, din+2N)
+
+    # conv ring buffer
+    hist = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,width,C)
+    new_conv_state = hist[:, 1:, :]
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), w_full(p, width))
+    conv = jax.nn.silu(conv + p["conv_b"][None, :].astype(jnp.float32))
+    xin, b, c = jnp.split(conv.astype(x.dtype), [din, din + N], axis=-1)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_ * a[None, :])                     # (B,H)
+
+    xh = xin.reshape(B, H, P).astype(jnp.float32) * dt_[..., None]
+    upd = jnp.einsum("bn,bhp->bhnp", b, xh)
+    new_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c, new_state)
+    y = y + xin.reshape(B, H, P).astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, din)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + 1e-6)
+    y = (y.astype(x.dtype) * p["norm_w"])[:, None, :]
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_state, new_conv_state
+
+
+def w_full(p, width):
+    return p["conv_w"].astype(jnp.float32)

@@ -1,0 +1,169 @@
+"""Top-k mixture-of-experts with GShard-style grouped dispatch (EP-sharded).
+
+Dispatch is per GROUP = batch row: the position-in-expert cumsum runs over
+each row's S*k assignments locally (no cross-shard scan), and the dispatched
+block (B, E, C, D) shards as batch->data, experts->model — the expert
+all-to-all happens exactly once, at the (B, E) resharding boundary. Capacity
+overflow drops tokens per group (standard GShard semantics); the combine
+re-weights with the surviving assignments' router probabilities.
+
+This mirrors the GS-TG binning idiom (DESIGN.md §5): static-capacity bins
+built from cumsum positions instead of dynamic lists.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def router_topk(
+    logits: jnp.ndarray,   # (..., E) float32
+    k: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (weights (..., k), ids (..., k)); renormalized over top-k."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9
+    )
+    return weights, ids
+
+
+def load_balance_loss(logits: jnp.ndarray, ids: jnp.ndarray, n_experts: int):
+    """Switch-style aux loss: E * sum_e f_e * p_e. Expert counts use a
+    scatter-add (O(T*k)), never a (T, E) one-hot — at 1M tokens x 384
+    experts that one-hot is terabytes."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    p_mean = jnp.mean(probs.reshape(-1, n_experts), axis=0)
+    counts = jnp.zeros((n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    return n_experts * jnp.sum(f * p_mean)
+
+
+def moe_ffn(
+    p: dict,            # {'router' (D,E), 'w1' (E,D,F), 'w3' (E,D,F), 'w2' (E,F,D)}
+    x: jnp.ndarray,     # (B, S, D)
+    cfg,
+    constrain,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux_loss ())."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    A = S * k  # assignments per group (= per batch row)
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x, p["router"], preferred_element_type=jnp.float32
+    )
+    weights, ids = router_topk(logits, k)            # (B, S, k)
+    aux = load_balance_loss(logits, ids, E)
+
+    capacity = max(int(S * k / E * cfg.capacity_factor), min(8, S))
+
+    # --- position-in-expert within each group, SORT-based (the same static
+    # binning idiom as GS-TG's group identification): never materializes a
+    # (A, E) one-hot. Stable argsort by expert id gives contiguous expert
+    # segments; position = rank within segment. O(A log A) per group. ---
+    eid = ids.reshape(B, A)                          # (B, A)
+
+    def positions_one_group(e):
+        order = jnp.argsort(e, stable=True)          # (A,)
+        e_sorted = e[order]
+        seg_start = jnp.searchsorted(e_sorted, jnp.arange(E, dtype=e.dtype))
+        pos_sorted = jnp.arange(A, dtype=jnp.int32) - seg_start[e_sorted]
+        return jnp.zeros((A,), jnp.int32).at[order].set(pos_sorted)
+
+    pos = jax.vmap(positions_one_group)(eid)         # (B, A)
+    keep = (pos >= 0) & (pos < capacity)
+    slot = jnp.where(keep, pos, capacity)            # capacity slot = trash
+
+    # --- dispatch: scatter tokens into (B, E, C+1, D), local per group.
+    # vmap over the group axis keeps the scatter's batching dims explicit —
+    # GSPMD partitions batched scatters on the batch axis; a flattened-index
+    # scatter would be replicated (observed: 280 GiB/device at kimi scale).
+    # custom_vjp (§Perf iteration 3): the natural take->scatter backward is
+    # gather(dxe)[A, D] pulled across the expert/model axis (the k-amplified
+    # pattern again); the custom backward scatter-adds slot gradients to
+    # token space per expert shard + one all-reduce, mirroring the combine.
+    # NOTE: every jnp constant (tok) is created INSIDE the custom_vjp rule
+    # bodies — a constant captured by closure leaks as a tracer when the
+    # custom_vjp lives inside a checkpointed scan body.
+    xdt = x.dtype  # static: closures below must not capture the tracer x
+
+    def _tok():
+        return jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)  # (A,)
+
+    @jax.custom_vjp
+    def _dispatch(xx, eidf, slotf):
+        tok = _tok()
+
+        def dispatch_one(xg, eidg, slotg):
+            return jnp.zeros((E, capacity + 1, D), xdt).at[eidg, slotg].set(
+                xg[tok], mode="drop"
+            )
+
+        return jax.vmap(dispatch_one)(
+            xx, eidf.astype(jnp.int32), slotf.astype(jnp.int32)
+        )
+
+    def _dispatch_fwd(xx, eidf, slotf):
+        return _dispatch(xx, eidf, slotf), (eidf, slotf)
+
+    def _dispatch_bwd(res, dxe):
+        eidf, slotf = res
+        tok = _tok()
+
+        def one(dxe_g, eidg, slotg):
+            tok_slot = jnp.full((E, capacity + 1), S, jnp.int32).at[
+                eidg, slotg
+            ].set(tok, mode="drop")
+            return (
+                jnp.zeros((S + 1, D), dxe_g.dtype)
+                .at[tok_slot.reshape(-1)]
+                .add(dxe_g.reshape(-1, D), mode="drop")[:S]
+            )
+
+        dx = jax.vmap(one)(dxe, eidf.astype(jnp.int32), slotf.astype(jnp.int32))
+        return dx, jnp.zeros_like(eidf), jnp.zeros_like(slotf)
+
+    _dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+    xe = _dispatch(x, eid.astype(jnp.float32), slot.astype(jnp.float32))
+    xe = xe[:, :, :capacity]
+    # The expert all-to-all: batch stays on data, experts land on model.
+    xe = constrain(xe, ("batch", "experts", None, None))
+
+    # --- expert computation (SwiGLU), batched over (B, E) ---
+    a = jnp.einsum("becd,edf->becf", xe, p["w1"])
+    silu = a * jax.nn.sigmoid(a.astype(jnp.float32)).astype(a.dtype)
+    h = silu * jnp.einsum("becd,edf->becf", xe, p["w3"])
+    ye = jnp.einsum("becf,efd->becd", h, p["w2"])
+    ye = constrain(ye, ("batch", "experts", None, None))
+
+    # --- combine: weight slots IN EXPERT SPACE and scatter-add back to
+    # (B, S, D). A gather-based combine materializes (B, S*k, D) pulled
+    # across the expert/model axis — k-times the token bytes (measured 42
+    # GiB/device of all-gathers at kimi scale, §Perf iteration 2). Here each
+    # model shard scatter-adds only its own experts' contributions, and the
+    # cross-expert sum becomes ONE all-reduce of the (B, S, D) output. ---
+    wts = jnp.where(keep, weights.reshape(B, A), 0.0).astype(x.dtype)
+
+    def combine_one(yeg, eidg, slotg, wg):
+        # per-slot combine weight + destination token, scattered once
+        tok = _tok()
+        wslot = jnp.zeros((E, capacity + 1), xdt).at[eidg, slotg].set(
+            wg, mode="drop"
+        )[:, :capacity]
+        tok_slot = jnp.full((E, capacity + 1), S, jnp.int32).at[
+            eidg, slotg
+        ].set(tok, mode="drop")[:, :capacity]
+        contrib = yeg * wslot[:, :, None]            # (E, C, D)
+        return (
+            jnp.zeros((S + 1, D), xdt)
+            .at[tok_slot.reshape(-1)]
+            .add(contrib.reshape(-1, D), mode="drop")[:S]
+        )
+
+    out = jax.vmap(combine_one)(ye, eid, slot, wts)
+    return out, aux

@@ -1,0 +1,77 @@
+"""Single source of truth for parameter shapes + logical sharding axes.
+
+A ParamSpec tree (nested dicts of LeafSpec) is built once per model config;
+it is consumed three ways:
+  * init_from_spec(spec, key)        -> real parameters (smoke tests, examples)
+  * abstract_from_spec(spec)         -> ShapeDtypeStruct tree (dry-run)
+  * partition_from_spec(spec, rules) -> PartitionSpec tree (pjit shardings)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    dtype: str = "bfloat16"
+    init: str = "normal"              # normal | zeros | ones | small_normal
+    fan_in: Optional[int] = None      # for scaled normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, LeafSpec)
+
+
+def init_from_spec(spec, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=is_leaf)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(leaf: LeafSpec, k):
+        dt = jnp.dtype(leaf.dtype)
+        if leaf.init == "zeros":
+            return jnp.zeros(leaf.shape, dt)
+        if leaf.init == "ones":
+            return jnp.ones(leaf.shape, dt)
+        fan = leaf.fan_in or (leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1])
+        scale = 1.0 / max(fan, 1) ** 0.5
+        if leaf.init == "small_normal":
+            scale *= 0.1
+        return (jax.random.normal(k, leaf.shape, jnp.float32) * scale).astype(dt)
+
+    return treedef.unflatten([mk(l, k) for l, k in zip(leaves, keys)])
+
+
+def abstract_from_spec(spec):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.dtype(l.dtype)),
+        spec,
+        is_leaf=is_leaf,
+    )
+
+
+def partition_from_spec(spec, rules: Dict[str, Optional[object]]):
+    """rules: logical axis name -> mesh axis (str/tuple) or None."""
+
+    def leaf_spec(l: LeafSpec):
+        return P(*[rules.get(a) if a is not None else None for a in l.axes])
+
+    return jax.tree.map(leaf_spec, spec, is_leaf=is_leaf)
+
+
+def spec_bytes(spec) -> int:
+    import numpy as np
+
+    total = 0
+    for l in jax.tree.leaves(spec, is_leaf=is_leaf):
+        total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total

@@ -1,0 +1,77 @@
+"""AdamW, hand-rolled on pytrees (no optax offline).
+
+Supports a per-leaf learning-rate pytree (prefix-broadcast like jax.tree.map)
+— used by 3D-GS scene training where each parameter group has its own lr —
+or a scalar/callable lr for LM training.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    step,
+    lr: Union[float, Any, Callable] = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    """One AdamW step. ``lr`` may be a scalar, a schedule fn of step, or a
+    pytree matching (a prefix of) params."""
+    if callable(lr):
+        lr = lr(step)
+    t = (jnp.asarray(step, jnp.float32) + 1.0)
+    c1 = 1.0 - jnp.power(b1, t)
+    c2 = 1.0 - jnp.power(b2, t)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu,
+        grads,
+    )
+
+    is_tree_lr = not jnp.isscalar(lr) and not isinstance(lr, (float, int, jnp.ndarray))
+    if is_tree_lr:
+        new_params = jax.tree.map(
+            lambda p, m, v, l: (
+                p
+                - l * ((m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p)
+            ).astype(p.dtype),
+            params,
+            mu,
+            nu,
+            lr,
+        )
+    else:
+        lr = jnp.asarray(lr, jnp.float32)
+        new_params = jax.tree.map(
+            lambda p, m, v: (
+                p
+                - lr * ((m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p)
+            ).astype(p.dtype),
+            params,
+            mu,
+            nu,
+        )
+    return new_params, AdamWState(mu=mu, nu=nu)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        frac = jnp.clip(s / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(
+    base_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_frac: float = 0.1,
+):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        return jnp.where(s < warmup_steps, warm, cos(s - warmup_steps))
+
+    return fn

@@ -1,0 +1,7 @@
+from repro.sharding.policies import (
+    activation_rules,
+    make_constrain,
+    param_rules,
+)
+
+__all__ = ["activation_rules", "make_constrain", "param_rules"]

@@ -1,0 +1,145 @@
+"""Logical-axis -> mesh-axis sharding policies (DP/TP/EP/SP per arch).
+
+The mesh is fixed by the deployment ((data, model) single pod, or
+(pod, data, model) multi-pod; the pod axis always joins data parallelism).
+What varies per architecture is WHICH logical axes map onto 'model':
+
+  * attn_sharding='heads'     — Megatron column-parallel attention (requires
+                                n_heads % model_size == 0); kv heads are
+                                replicated when n_kv_heads < model_size.
+  * attn_sharding='row'       — weights sharded on the input d_model axis
+                                ('attn_embed'); activations replicated, XLA
+                                reduces partial sums. For archs whose head
+                                count does not divide the model axis.
+  * attn_sharding='head_dim'  — shard inside each head (interleaved-RoPE safe);
+                                beyond-paper option used in §Perf hillclimbs.
+  * attn_sharding='replicated'— tiny models; attention fully replicated.
+  * mlp_sharding='ff'         — column+row parallel MLP on the hidden axis.
+  * experts                   — expert-parallel over 'model' (MoE archs).
+  * cache_seq                 — decode KV caches shard their sequence axis on
+                                'model' (sequence-parallel decode): partial
+                                softmax reductions become all-reduces.
+
+Divisibility is validated at policy-build time so misconfigurations fail
+loudly before lowering.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+def _data_axes(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def _check(cond: bool, msg: str):
+    if not cond:
+        raise ValueError(f"sharding policy error: {msg}")
+
+
+def param_rules(cfg: ModelConfig, mesh: Mesh) -> Dict[str, MeshAxes]:
+    """Rules applied to parameter logical axes."""
+    m = mesh.shape["model"]
+    rules: Dict[str, MeshAxes] = {
+        "vocab": "model" if cfg.shard_vocab else None,
+        "embed_tbl": "model",
+        "attn_embed": None,
+        "heads": None,
+        "kv_heads": None,
+        "head_dim": None,
+        "ffn": None,
+        "experts": None,
+        "expert_ffn": None,
+        "ssm_inner": None,
+        "ssm_heads": None,
+    }
+    if cfg.shard_vocab:
+        _check(cfg.vocab_padded % m == 0, f"vocab_padded {cfg.vocab_padded} % {m}")
+
+    if cfg.attn_sharding == "heads":
+        _check(cfg.n_heads % m == 0, f"{cfg.name}: n_heads {cfg.n_heads} % {m}")
+        rules["heads"] = "model"
+        if cfg.n_kv_heads % m == 0:
+            rules["kv_heads"] = "model"
+        # else: kv replicated (GQA with few kv heads) — standard Megatron GQA.
+    elif cfg.attn_sharding == "row":
+        _check(cfg.d_model % m == 0, f"{cfg.name}: d_model % {m}")
+        rules["attn_embed"] = "model"
+    elif cfg.attn_sharding == "head_dim":
+        _check(cfg.head_dim % m == 0, f"{cfg.name}: head_dim {cfg.head_dim} % {m}")
+        rules["head_dim"] = "model"
+    elif cfg.attn_sharding != "replicated":
+        raise ValueError(cfg.attn_sharding)
+
+    if cfg.mlp_sharding == "ff" and cfg.d_ff:
+        _check(cfg.d_ff % m == 0, f"{cfg.name}: d_ff {cfg.d_ff} % {m}")
+        rules["ffn"] = "model"
+
+    if cfg.n_experts:
+        _check(cfg.n_experts % m == 0, f"{cfg.name}: experts {cfg.n_experts} % {m}")
+        rules["experts"] = "model"
+
+    if cfg.family in ("ssm", "hybrid"):
+        _check(cfg.d_inner % m == 0, f"{cfg.name}: d_inner % {m}")
+        _check(cfg.n_ssm_heads % m == 0, f"{cfg.name}: ssm heads % {m}")
+        rules["ssm_inner"] = "model"
+        rules["ssm_heads"] = "model"
+    return rules
+
+
+def activation_rules(cfg: ModelConfig, mesh: Mesh) -> Dict[str, MeshAxes]:
+    """Rules applied by the in-model with_sharding_constraint calls."""
+    rules = dict(param_rules(cfg, mesh))
+    rules["batch"] = _data_axes(mesh)
+    rules["cache_batch"] = _data_axes(mesh)
+    rules["cache_seq"] = "model"   # sequence-parallel decode cache
+    # Sequence parallelism on the residual stream: activations between
+    # attention/MLP segments are sharded over 'model' on the seq axis, which
+    # divides the remat-saved per-layer stack (the dominant training-memory
+    # term) by the model-axis size. Attention/SSD blocks re-gather the seq
+    # axis via their own head-sharded constraints.
+    rules["act_seq"] = "model"
+    return rules
+
+
+def make_constrain(cfg: ModelConfig, mesh: Optional[Mesh], batch_shardable: bool = True):
+    """Returns constrain(x, logical_axes) -> x with a sharding constraint.
+
+    With mesh=None (single-device smoke tests) it is the identity.
+    batch_shardable=False replicates the batch axis (e.g. long_500k decode
+    with global_batch=1, which cannot be split over the data axes).
+    """
+    if mesh is None:
+        return lambda x, axes: x
+    rules = activation_rules(cfg, mesh)
+    if not batch_shardable:
+        rules["batch"] = None
+        rules["cache_batch"] = None
+
+    def constrain(x, axes):
+        spec = P(*[rules.get(a) if a is not None else None for a in axes])
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpecs for input batches."""
+    dp = _data_axes(mesh)
+    return {
+        "tokens": P(dp, None),
+        "labels": P(dp, None),
+        "loss_mask": P(dp, None),
+        "mask": P(dp, None),
+        "patch_embeds": P(dp, None, None),
+        "frames": P(dp, None, None),
+    }

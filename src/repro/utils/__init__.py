@@ -1,0 +1,3 @@
+from repro.utils.misc import cdiv, round_up, pytree_bytes, pytree_count
+
+__all__ = ["cdiv", "round_up", "pytree_bytes", "pytree_count"]

@@ -1,0 +1,36 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GaussianScene, make_camera, random_scene
+from repro.core.pipeline import RenderConfig
+
+
+@pytest.fixture(scope="session")
+def small_scene():
+    return random_scene(jax.random.key(0), 800, extent=3.0)
+
+
+@pytest.fixture(scope="session")
+def tiny_scene():
+    return random_scene(jax.random.key(1), 200, extent=2.5)
+
+
+@pytest.fixture(scope="session")
+def cam128():
+    return make_camera((0.0, 1.0, 4.5), (0, 0, 0), 128, 128)
+
+
+@pytest.fixture(scope="session")
+def cam256():
+    return make_camera((0.0, 1.2, 5.0), (0, 0, 0), 256, 192)
+
+
+@pytest.fixture()
+def base_cfg():
+    return RenderConfig(
+        tile=16,
+        group=64,
+        group_capacity=256,
+        tile_capacity=256,
+    )

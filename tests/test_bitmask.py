@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_camera, random_scene
+from repro.core.bitmask import compact_tiles, generate_bitmasks
+from repro.core.grouping import (
+    GridSpec,
+    bin_pairs,
+    identify,
+)
+from repro.core.projection import project
+
+
+def _pipeline(seed=0, method="ellipse", w=256, h=192):
+    scene = random_scene(jax.random.key(seed), 500, extent=3.0)
+    cam = make_camera((0, 1.2, 5.0), (0, 0, 0), w, h)
+    proj = project(scene, cam)
+    grid = GridSpec(w, h, 16, 64, span=4)
+    pairs = identify(proj, grid, "group", method)
+    gtable = bin_pairs(pairs, grid.num_groups, 512)
+    masks = generate_bitmasks(proj, gtable, grid, method)
+    return proj, grid, gtable, masks
+
+
+def test_bitmask_soundness_vs_tile_identify():
+    """bit t of gaussian g in group G set <=> tile-level identification
+    includes (g, global_tile(G,t)) — computational independence (Fig 8b)."""
+    proj, grid, gtable, masks = _pipeline()
+    ttable = compact_tiles(gtable, masks, grid, 256)
+
+    pairs_t = identify(proj, grid, "tile", "ellipse")
+    ref_table = bin_pairs(pairs_t, grid.num_tiles, 256)
+
+    gi = np.asarray(ttable.gauss_idx)
+    vi = np.asarray(ttable.entry_valid)
+    gr = np.asarray(ref_table.gauss_idx)
+    vr = np.asarray(ref_table.entry_valid)
+    for t in range(grid.num_tiles):
+        got = set(gi[t][vi[t]].tolist())
+        ref = set(gr[t][vr[t]].tolist())
+        assert got == ref, f"tile {t}: {got ^ ref}"
+
+
+def test_compaction_preserves_depth_order():
+    proj, grid, gtable, masks = _pipeline(1)
+    ttable = compact_tiles(gtable, masks, grid, 256)
+    depth = np.asarray(proj.depth)
+    gi = np.asarray(ttable.gauss_idx)
+    vi = np.asarray(ttable.entry_valid)
+    for t in range(grid.num_tiles):
+        d = depth[gi[t][vi[t]]]
+        assert (np.diff(d) >= -1e-6).all()
+
+
+def test_masks_zero_for_invalid_entries():
+    proj, grid, gtable, masks = _pipeline(2)
+    m = np.asarray(masks.masks)
+    valid = np.asarray(gtable.entry_valid)
+    assert (m[~valid] == 0).all()
+
+
+def test_out_of_image_tiles_masked():
+    # 200x120 image: groups extend past the right/bottom edge
+    proj, grid, gtable, masks = _pipeline(3, w=208, h=128)
+    ttable = compact_tiles(gtable, masks, grid, 256)
+    assert ttable.num_bins == grid.num_tiles
+    assert int(ttable.overflow) == 0

@@ -1,0 +1,89 @@
+"""Boundary-test properties that the losslessness proof relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_camera, random_scene
+from repro.core.boundary import (
+    aabb_test,
+    boundary_test,
+    ellipse_min_q,
+    ellipse_test,
+    obb_test,
+)
+from repro.core.projection import project, QMAX_3SIGMA
+
+
+def _proj(seed=0, n=300):
+    scene = random_scene(jax.random.key(seed), n, extent=3.0)
+    cam = make_camera((0, 1, 4.5), (0, 0, 0), 128, 128)
+    return project(scene, cam)
+
+
+rects = st.tuples(
+    st.floats(-40, 130), st.floats(-40, 130), st.floats(4, 80), st.floats(4, 80)
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rects)
+def test_conservativeness_chain(r):
+    """ellipse hit => obb hit, and ellipse hit => aabb hit (on any rect).
+
+    This ordering is what makes every boundary method a superset of the true
+    q<=9 support, hence lossless (DESIGN.md §7)."""
+    proj = _proj()
+    x0, y0, w, h = r
+    rect = (x0, y0, x0 + w, y0 + h)
+    e = ellipse_test(proj.mean2d, proj.conic, rect)
+    o = obb_test(proj.mean2d, proj.eigvec, proj.eigval, rect)
+    a = aabb_test(proj.mean2d, proj.radius, rect)
+    assert bool(jnp.all(~e | o)), "ellipse hit without obb hit"
+    assert bool(jnp.all(~e | a)), "ellipse hit without aabb hit"
+
+
+@settings(max_examples=25, deadline=None)
+@given(rects)
+def test_monotonicity_under_containment(r):
+    """tile ⊂ group => test(tile) => test(group), for every method."""
+    proj = _proj(1)
+    x0, y0, w, h = r
+    tile = (x0, y0, x0 + w, y0 + h)
+    group = (x0 - 8.0, y0 - 8.0, x0 + w + 8.0, y0 + h + 8.0)
+    for method in ("aabb", "obb", "ellipse"):
+        t = boundary_test(method, proj, tile)
+        g = boundary_test(method, proj, group)
+        assert bool(jnp.all(~t | g)), method
+
+
+def test_ellipse_min_q_exact_vs_grid():
+    """Closed-form rect minimum of the conic form matches dense sampling."""
+    proj = _proj(2, n=50)
+    rect = (30.0, 30.0, 60.0, 55.0)
+    qmin = ellipse_min_q(proj.mean2d, proj.conic, rect)
+    xs = jnp.linspace(rect[0], rect[2], 120)
+    ys = jnp.linspace(rect[1], rect[3], 120)
+    gx, gy = jnp.meshgrid(xs, ys)
+    pts = jnp.stack([gx.reshape(-1), gy.reshape(-1)], -1)  # (P, 2)
+    d = pts[None, :, :] - proj.mean2d[:, None, :]
+    q = (
+        proj.conic[:, None, 0] * d[..., 0] ** 2
+        + 2 * proj.conic[:, None, 1] * d[..., 0] * d[..., 1]
+        + proj.conic[:, None, 2] * d[..., 1] ** 2
+    )
+    q_grid = jnp.min(q, axis=1)
+    # closed form is a true minimum: <= grid min (+tol), and close when the
+    # grid is fine
+    assert bool(jnp.all(qmin <= q_grid + 1e-3))
+    np.testing.assert_allclose(
+        np.asarray(qmin), np.asarray(q_grid), rtol=0.15, atol=0.3
+    )
+
+
+def test_ellipse_inside_center_zero():
+    proj = _proj(3, n=20)
+    mx, my = proj.mean2d[:, 0], proj.mean2d[:, 1]
+    rect = (mx - 1.0, my - 1.0, mx + 1.0, my + 1.0)
+    q = ellipse_min_q(proj.mean2d, proj.conic, rect)
+    assert bool(jnp.all(q == 0.0))

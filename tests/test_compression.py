@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compression import (
+    TopKState,
+    int8_dequantize,
+    int8_quantize,
+    topk_compress,
+    topk_decompress,
+)
+
+
+def test_topk_selects_largest_and_residual():
+    g = jnp.array([0.1, -5.0, 0.2, 3.0, -0.05, 0.0])
+    st = TopKState(residual=jnp.zeros_like(g))
+    vals, idx, st2 = topk_compress(g, st, k_frac=2 / 6)
+    dec = topk_decompress(vals, idx, g.shape)
+    assert set(np.nonzero(np.asarray(dec))[0].tolist()) == {1, 3}
+    # residual holds exactly what wasn't sent
+    np.testing.assert_allclose(np.asarray(st2.residual + dec), np.asarray(g), atol=1e-7)
+
+
+def test_topk_error_feedback_catches_up():
+    """Untransmitted gradient drains from the residual once the dominant
+    coordinate stops arriving (the error-feedback guarantee)."""
+    g0 = jnp.array([1.0, 0.01, 0.0, 0.0])
+    zero = jnp.zeros_like(g0)
+    st = TopKState(residual=jnp.zeros_like(g0))
+    sent_total = jnp.zeros_like(g0)
+    # round 1: real gradient — only the big coordinate is sent
+    vals, idx, st = topk_compress(g0, st, k_frac=0.25)
+    sent_total += topk_decompress(vals, idx, g0.shape)
+    assert float(sent_total[1]) == 0.0
+    # subsequent rounds: residual drains the small coordinate
+    for _ in range(2):
+        vals, idx, st = topk_compress(zero, st, k_frac=0.25)
+        sent_total += topk_decompress(vals, idx, g0.shape)
+    assert float(sent_total[1]) > 0.0
+    # nothing is ever lost: sent + residual == total gradient mass
+    import numpy as np
+    np.testing.assert_allclose(
+        np.asarray(sent_total + st.residual), np.asarray(g0), atol=1e-6
+    )
+
+
+def test_int8_roundtrip_error_bound():
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (1024,)) * 3.0
+    q, s = int8_quantize(x, jax.random.key(1))
+    y = int8_dequantize(q, s, x.shape)
+    err = np.abs(np.asarray(x - y))
+    scale = np.asarray(s).repeat(256)[: x.size]
+    assert (err <= scale + 1e-6).all()  # stochastic rounding: within 1 LSB
+
+
+def test_int8_stochastic_rounding_unbiased():
+    x = jnp.full((4096,), 0.05)
+    keys = jax.random.split(jax.random.key(2), 16)
+    means = []
+    for k in keys:
+        q, s = int8_quantize(x, k)
+        means.append(float(int8_dequantize(q, s, x.shape).mean()))
+    assert abs(np.mean(means) - 0.05) < 1e-3

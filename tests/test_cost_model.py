@@ -1,0 +1,46 @@
+import jax
+
+from repro.core import make_camera, random_scene
+from repro.core.cost_model import GSTG_ASIC, estimate
+from repro.core.pipeline import RenderConfig, render
+
+
+def _stats(mode, scene, cam, **kw):
+    return render(scene, cam, RenderConfig(mode=mode, **kw)).stats
+
+
+def test_gstg_faster_than_tile_baseline(small_scene, cam256):
+    base = _stats("tile_baseline", small_scene, cam256)
+    ours = _stats("gstg", small_scene, cam256)
+    cb = estimate(base, GSTG_ASIC, mode="tile_baseline")
+    co = estimate(ours, GSTG_ASIC, mode="gstg", execution="asic")
+    assert co.total_s < cb.total_s
+    # the win comes from sorting, not rasterization
+    assert co.sort_s < cb.sort_s
+    assert abs(co.raster_s - cb.raster_s) / max(cb.raster_s, 1e-12) < 0.35
+
+
+def test_asic_overlap_beats_gpu_serialization(small_scene, cam256):
+    ours = _stats("gstg", small_scene, cam256)
+    asic = estimate(ours, GSTG_ASIC, mode="gstg", execution="asic")
+    gpu = estimate(ours, GSTG_ASIC, mode="gstg", execution="gpu")
+    assert asic.total_s <= gpu.total_s
+
+
+def test_energy_positive_and_gstg_wins(small_scene, cam256):
+    base = _stats("tile_baseline", small_scene, cam256)
+    ours = _stats("gstg", small_scene, cam256)
+    eb = estimate(base, GSTG_ASIC, mode="tile_baseline").energy_j
+    eo = estimate(ours, GSTG_ASIC, mode="gstg").energy_j
+    assert eb > 0 and eo > 0
+    assert eo < eb
+
+
+def test_group_baseline_raster_penalty(small_scene, cam256):
+    """Fig 13: large-tile baseline sorts less but rasterizes much more."""
+    big = _stats("group_baseline", small_scene, cam256)
+    small = _stats("tile_baseline", small_scene, cam256)
+    cb = estimate(big, GSTG_ASIC, mode="group_baseline")
+    cs = estimate(small, GSTG_ASIC, mode="tile_baseline")
+    assert cb.sort_s < cs.sort_s
+    assert cb.raster_s > cs.raster_s

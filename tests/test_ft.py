@@ -1,0 +1,47 @@
+from repro.ft import HeartbeatMonitor, plan_elastic_mesh
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor(n_hosts=8, window=4, min_factor=1.5)
+    for step in range(4):
+        for h in range(8):
+            lat = 1.0 if h != 3 else 3.5
+            mon.report(h, step, lat, now_s=step * 1.0)
+    rep = mon.check(3)
+    assert rep is not None
+    assert rep.stragglers == [3]
+    assert rep.slow_factor[3] > 2.0
+
+
+def test_no_false_positives_on_uniform():
+    mon = HeartbeatMonitor(n_hosts=8, window=4)
+    for h in range(8):
+        mon.report(h, 0, 1.0 + 0.01 * h, now_s=0.0)
+    assert mon.check(0) is None
+
+
+def test_dead_host_detection():
+    mon = HeartbeatMonitor(n_hosts=4, miss_timeout_s=30.0)
+    for h in range(3):
+        mon.report(h, 0, 1.0, now_s=100.0)
+    dead = mon.dead_hosts(now_s=120.0)
+    assert dead == [3]
+
+
+def test_elastic_plan_shrinks_data_axis():
+    # lost 3 of 32 hosts (8 chips each): 232 chips left, model=16
+    plan = plan_elastic_mesh(232, model_parallel=16, global_batch=256)
+    assert plan is not None
+    assert plan.mesh_shape[-1] == 16
+    data = plan.mesh_shape[-2] if len(plan.mesh_shape) == 2 else plan.mesh_shape[1]
+    assert 256 % data == 0
+
+
+def test_elastic_plan_multi_pod():
+    plan = plan_elastic_mesh(512, model_parallel=16, global_batch=256)
+    assert plan.mesh_shape == (2, 16, 16)
+    assert plan.mesh_axes == ("pod", "data", "model")
+
+
+def test_elastic_plan_infeasible():
+    assert plan_elastic_mesh(8, model_parallel=16, global_batch=256) is None

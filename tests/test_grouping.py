@@ -1,0 +1,71 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grouping import GridSpec, bin_pairs, identify, sort_op_count
+from repro.core.projection import project
+from repro.core import make_camera, random_scene
+
+
+def _setup(seed=0, n=600, w=256, h=192):
+    scene = random_scene(jax.random.key(seed), n, extent=3.0)
+    cam = make_camera((0, 1.2, 5.0), (0, 0, 0), w, h)
+    proj = project(scene, cam)
+    grid = GridSpec(w, h, 16, 64, span=4)
+    return proj, grid
+
+
+def test_pairs_group_leq_tile():
+    """The paper's core quantity: group-level sorting keys are a strict
+    subset of tile-level ones (Table I / Fig 5)."""
+    proj, grid = _setup()
+    pt = identify(proj, grid, "tile", "ellipse")
+    pg = identify(proj, grid, "group", "ellipse")
+    assert int(pg.n_pairs) <= int(pt.n_pairs)
+    assert int(pg.n_pairs) > 0
+    # every tile hit implies its group hit => tile pairs >= group pairs and
+    # per gaussian, #tiles >= #groups; globally strict for clustered scenes
+    assert int(pt.n_pairs) > int(pg.n_pairs)
+
+
+def test_no_overflow_small_scene():
+    proj, grid = _setup()
+    pg = identify(proj, grid, "group", "ellipse")
+    assert int(pg.n_span_overflow) == 0
+    table = bin_pairs(pg, grid.num_groups, 512)
+    assert int(table.overflow) == 0
+
+
+def test_bin_table_depth_sorted():
+    proj, grid = _setup(1)
+    pg = identify(proj, grid, "group", "ellipse")
+    table = bin_pairs(pg, grid.num_groups, 512)
+    depth = np.asarray(proj.depth)
+    gidx = np.asarray(table.gauss_idx)
+    valid = np.asarray(table.entry_valid)
+    for g in range(table.num_bins):
+        d = depth[gidx[g][valid[g]]]
+        assert (np.diff(d) >= -1e-6).all(), f"group {g} not depth sorted"
+
+
+def test_bin_lengths_match_pairs():
+    proj, grid = _setup(2)
+    pg = identify(proj, grid, "group", "ellipse")
+    table = bin_pairs(pg, grid.num_groups, 512)
+    assert int(jnp.sum(table.lengths)) == int(pg.n_pairs)
+
+
+def test_sort_op_count_model():
+    lengths = jnp.array([0, 1, 2, 8, 100])
+    ops = int(sort_op_count(lengths))
+    expected = 0 + 1 * 1 + 2 * 1 + 8 * 3 + 100 * 7
+    assert ops == expected
+
+
+def test_grid_spec_validation():
+    import pytest
+
+    with pytest.raises(ValueError):
+        GridSpec(100, 100, 16, 64)  # not tile-divisible
+    with pytest.raises(ValueError):
+        GridSpec(128, 128, 16, 40)  # group not multiple of tile

@@ -1,0 +1,52 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as kref
+from repro.kernels.bitonic_sort import bitonic_sort_kernel
+from repro.kernels.ops import sort_groups_bitonic
+
+
+@pytest.mark.parametrize("K", [64, 128, 256, 1024])
+def test_bitonic_sorted_and_permutation(K):
+    key = jax.random.key(K)
+    G = 6
+    keys = jax.random.uniform(key, (G, K))
+    n_valid = K - K // 4
+    keys = keys.at[:, n_valid:].set(jnp.inf)
+    payload = jnp.tile(jnp.arange(K, dtype=jnp.float32)[None], (G, 1))
+    sk, sv = bitonic_sort_kernel(keys, payload, interpret=True)
+    sk, sv = np.asarray(sk), np.asarray(sv)
+    # ascending
+    assert (np.diff(sk[:, :n_valid], axis=1) >= 0).all()
+    # payload is a permutation
+    for g in range(G):
+        assert sorted(sv[g].astype(int).tolist()) == list(range(K))
+    # keys at payload positions match
+    k0 = np.asarray(keys)
+    for g in range(G):
+        np.testing.assert_allclose(k0[g, sv[g, :n_valid].astype(int)], sk[g, :n_valid])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_bitonic_matches_ref_sort(seed):
+    keys = jax.random.uniform(jax.random.key(seed), (3, 128))
+    payload = jnp.tile(jnp.arange(128, dtype=jnp.float32)[None], (3, 1))
+    sk, _ = bitonic_sort_kernel(keys, payload, interpret=True)
+    rk, _ = kref.ref_sort(keys, payload)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(rk), rtol=1e-6)
+
+
+def test_sort_groups_bitonic_int_payload():
+    keys = jnp.array([[3.0, 1.0, 2.0, jnp.inf]])
+    payload = jnp.array([[10, 11, 12, 13]], dtype=jnp.int32)
+    k, v = sort_groups_bitonic(keys, payload, interpret=True)
+    assert v[0, :3].tolist() == [11, 12, 10]
+
+
+def test_bitonic_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        bitonic_sort_kernel(jnp.ones((1, 100)), jnp.ones((1, 100)), interpret=True)

@@ -1,0 +1,91 @@
+"""Launch-layer units that don't need the 512-device mesh."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch.roofline import (
+    ICI_BW,
+    collective_bytes,
+    derive_terms,
+    model_flops_for_cell,
+)
+from repro.launch.shapes import SHAPES, cell_supported
+
+
+def test_skip_rules_match_assignment():
+    skips = []
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES.values():
+            ok, reason = cell_supported(cfg, shape)
+            if not ok:
+                skips.append((arch, shape.name))
+    # encoder: no decode cells; full-attention archs: no long_500k
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("hubert-xlarge", "long_500k") in skips
+    assert ("qwen1.5-110b", "long_500k") in skips
+    assert ("mamba2-370m", "long_500k") not in skips
+    assert ("jamba-1.5-large-398b", "long_500k") not in skips
+    assert len(skips) == 9  # 7 long_500k + 2 hubert decode shapes
+
+
+def test_collective_parser():
+    hlo = """
+  %ar = bf16[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag-start = (f32[64]{0}, f32[1024]{0}) all-gather-start(%y)
+  %ag-done = f32[1024]{0} all-gather-done(%ag-start)
+  %a2a = u32[16,16]{1,0} all-to-all(%z)
+  %cp = s8[8]{0} collective-permute(%w)
+  %dot = f32[2,2]{1,0} dot(%a, %b)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 128 * 256 * 2
+    assert got["all-gather"] == 64 * 4 + 1024 * 4  # -start counted, -done not
+    assert got["all-to-all"] == 16 * 16 * 4
+    assert got["collective-permute"] == 8
+    assert "dot" not in got
+
+
+def test_model_flops():
+    cfg = get_config("qwen1.5-110b")
+    tr = model_flops_for_cell(cfg, SHAPES["train_4k"])
+    pf = model_flops_for_cell(cfg, SHAPES["prefill_32k"])
+    dc = model_flops_for_cell(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert abs(tr - 6 * n * 256 * 4096) / tr < 1e-6
+    assert abs(pf - 2 * n * 32 * 32768) / pf < 1e-6
+    assert abs(dc - 2 * n * 128) / dc < 1e-6
+    # MoE: active << total
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.active_param_count() < 0.05 * kimi.param_count()
+    assert 0.9e12 < kimi.param_count() < 1.3e12  # ~1T
+    assert 25e9 < kimi.active_param_count() < 40e9  # ~a32b
+
+
+def test_derive_terms_dominance():
+    t = derive_terms(
+        arch="x", shape_name="train_4k", mesh_name="16x16", chips=256,
+        cost={"flops": 1e15, "bytes accessed": 1e10},
+        hlo_text="%ar = bf16[1024]{0} all-reduce(%x)\n",
+        model_flops=6e17,
+    )
+    assert t.dominant == "compute"
+    assert abs(t.compute_s - 1e15 / 197e12) < 1e-9
+    assert t.collective_bytes_total == 2048
+
+
+def test_param_counts_sane():
+    expected = {
+        "qwen1.5-110b": (100e9, 125e9),
+        "jamba-1.5-large-398b": (300e9, 450e9),
+        "llava-next-34b": (30e9, 40e9),
+        "smollm-360m": (0.3e9, 0.45e9),
+        "mamba2-370m": (0.3e9, 0.45e9),
+        "granite-3-2b": (2e9, 3.5e9),
+        "phi4-mini-3.8b": (3e9, 5e9),
+        "granite-moe-1b-a400m": (0.8e9, 1.6e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for name, (lo, hi) in expected.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,99 @@
+"""The paper's central claim: tile grouping is LOSSLESS (hypothesis property).
+
+Bitwise for combos where the bitmask method is at least as tight as the group
+method; exact-set (same contributing gaussians, fp-equal to reassociation
+tolerance) for all nine combos.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_camera, random_scene
+from repro.core.pipeline import RenderConfig, render
+
+CAM = make_camera((0.0, 1.1, 4.6), (0, 0, 0), 128, 128)
+
+BITWISE_COMBOS = [
+    ("aabb", "aabb"),
+    ("aabb", "ellipse"),
+    ("obb", "ellipse"),
+    ("ellipse", "ellipse"),
+]
+ALL_COMBOS = BITWISE_COMBOS + [
+    ("ellipse", "aabb"),
+    ("obb", "aabb"),
+    ("obb", "obb"),
+    ("aabb", "obb"),
+    ("ellipse", "obb"),
+]
+
+
+def _cfg(mode, bg="ellipse", bt="ellipse", tile=16, group=64):
+    return RenderConfig(
+        mode=mode,
+        tile=tile,
+        group=group,
+        boundary_group=bg,
+        boundary_tile=bt,
+        group_capacity=512,
+        tile_capacity=512,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_bitwise_lossless_primary_combo(seed):
+    scene = random_scene(jax.random.key(seed), 400, extent=3.0)
+    base = render(scene, CAM, _cfg("tile_baseline"))
+    ours = render(scene, CAM, _cfg("gstg"))
+    assert int(base.stats.overflow) == 0 and int(ours.stats.overflow) == 0
+    assert (np.asarray(base.image) == np.asarray(ours.image)).all()
+
+
+@pytest.mark.parametrize("bg,bt", BITWISE_COMBOS)
+def test_bitwise_lossless_conservative_combos(small_scene, bg, bt):
+    base = render(small_scene, CAM, _cfg("tile_baseline", bt=bt))
+    ours = render(small_scene, CAM, _cfg("gstg", bg=bg, bt=bt))
+    assert (np.asarray(base.image) == np.asarray(ours.image)).all(), (bg, bt)
+
+
+@pytest.mark.parametrize("bg,bt", ALL_COMBOS)
+def test_exact_set_lossless_all_combos(small_scene, bg, bt):
+    base = render(small_scene, CAM, _cfg("tile_baseline", bt=bt))
+    ours = render(small_scene, CAM, _cfg("gstg", bg=bg, bt=bt))
+    np.testing.assert_allclose(
+        np.asarray(base.image), np.asarray(ours.image), atol=2e-6, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("tile,group", [(8, 16), (8, 32), (16, 32), (16, 64), (32, 64)])
+def test_lossless_across_group_sizes(tiny_scene, tile, group):
+    cam = make_camera((0.0, 1.0, 4.0), (0, 0, 0), 128, 128)
+    base = render(tiny_scene, cam, _cfg("tile_baseline", tile=tile, group=group))
+    ours = render(tiny_scene, cam, _cfg("gstg", tile=tile, group=group))
+    assert (np.asarray(base.image) == np.asarray(ours.image)).all()
+
+
+def test_sorting_reduction_and_raster_parity(small_scene):
+    """The paper's trade-off resolution: fewer sort keys, same alpha work."""
+    base = render(small_scene, CAM, _cfg("tile_baseline"))
+    ours = render(small_scene, CAM, _cfg("gstg"))
+    big = render(small_scene, CAM, _cfg("group_baseline"))
+    # sorting: gstg keys = group keys << tile keys
+    assert int(ours.stats.n_pairs_sort) < int(base.stats.n_pairs_sort)
+    assert int(ours.stats.n_pairs_sort) == int(big.stats.n_pairs_sort)
+    # rasterization: gstg alpha work == small-tile baseline << large-tile
+    assert int(ours.stats.alpha_ops) == int(base.stats.alpha_ops)
+    assert int(big.stats.alpha_ops) > int(base.stats.alpha_ops)
+
+
+def test_nonempty_render(small_scene):
+    out = render(small_scene, CAM, _cfg("gstg"))
+    img = np.asarray(out.image)
+    assert img.shape == (128, 128, 3)
+    assert img.max() > 0.01
+    assert np.isfinite(img).all()

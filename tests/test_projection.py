@@ -1,0 +1,57 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_camera, random_scene
+from repro.core.projection import project
+
+
+def test_projection_shapes_and_finiteness(small_scene, cam128):
+    proj = project(small_scene, cam128)
+    n = small_scene.num_gaussians
+    assert proj.mean2d.shape == (n, 2)
+    assert proj.conic.shape == (n, 3)
+    assert proj.depth.shape == (n,)
+    for field in ("mean2d", "cov2d", "conic", "radius", "rgb", "alpha"):
+        v = getattr(proj, field)
+        assert bool(jnp.isfinite(v[proj.valid]).all()), field
+
+
+def test_culling_behind_camera(cam128):
+    scene = random_scene(jax.random.key(2), 100, extent=2.0)
+    # Move all gaussians behind the camera -> all culled.
+    far_behind = scene.means3d + jnp.array([0.0, 0.0, 100.0])
+    scene = dataclasses.replace(scene, means3d=far_behind)
+    proj = project(scene, cam128)
+    assert int(proj.valid.sum()) == 0
+
+
+def test_cov2d_positive_definite(small_scene, cam128):
+    proj = project(small_scene, cam128)
+    a, b, c = proj.cov2d[:, 0], proj.cov2d[:, 1], proj.cov2d[:, 2]
+    det = a * c - b * b
+    valid = proj.valid
+    assert bool((a[valid] > 0).all())
+    assert bool((det[valid] > 0).all())
+
+
+def test_eigval_order_and_radius(small_scene, cam128):
+    proj = project(small_scene, cam128)
+    v = proj.valid
+    lam1, lam2 = proj.eigval[:, 0], proj.eigval[:, 1]
+    assert bool((lam1[v] >= lam2[v] - 1e-5).all())
+    np.testing.assert_allclose(
+        np.asarray(proj.radius[v]),
+        3.0 * np.sqrt(np.asarray(lam1[v])),
+        rtol=1e-5,
+    )
+    # circumscribed radius bounds both axis extents
+    assert bool((proj.radius[v] >= proj.axis_radius[v].max(-1) - 1e-4).all())
+
+
+def test_rgb_in_range(small_scene, cam128):
+    proj = project(small_scene, cam128)
+    assert bool((proj.rgb >= 0).all()) and bool((proj.rgb <= 1).all())
+    assert bool((proj.alpha >= 0).all()) and bool((proj.alpha <= 1).all())

@@ -1,0 +1,89 @@
+"""Distribution transparency: sharded train step == single-device step.
+
+Runs in a subprocess so the 8-device XLA host-platform flag never leaks into
+the main test process (smoke tests must see 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import dataclasses
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.models import build_param_spec, loss_fn
+from repro.models.spec import init_from_spec
+from repro.sharding.policies import make_constrain
+
+cfg = get_smoke_config("granite-3-2b")
+cfg = dataclasses.replace(cfg, mlp_sharding="ff", d_ff=128, shard_vocab=True, vocab=512)
+params = init_from_spec(build_param_spec(cfg), jax.random.key(0))
+batch = {"tokens": jnp.ones((8, 32), jnp.int32),
+         "labels": jnp.tile(jnp.arange(32, dtype=jnp.int32)[None], (8, 1))}
+
+# single device
+l1 = float(loss_fn(cfg, params, batch, lambda x, a: x)[0])
+
+# 2x4 mesh
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+constrain = make_constrain(cfg, mesh)
+with mesh:
+    l2 = float(jax.jit(lambda p, b: loss_fn(cfg, p, b, constrain)[0])(params, batch))
+
+print(json.dumps({"single": l1, "sharded": l2}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_loss_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert abs(res["single"] - res["sharded"]) < 5e-3, res
+
+
+def test_param_rules_divisibility_checks():
+    import jax
+    from repro.configs import get_config
+    from repro.sharding.policies import param_rules
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # all production configs must build rules against the 16-wide model axis;
+    # emulate by checking the declared dims directly
+    for name in ("qwen1.5-110b", "kimi-k2-1t-a32b", "jamba-1.5-large-398b"):
+        cfg = get_config(name)
+        assert cfg.n_heads % 16 == 0
+        if cfg.n_experts:
+            assert cfg.n_experts % 16 == 0
+    rules = param_rules(get_config("qwen1.5-110b"), mesh)
+    assert rules["heads"] == "model"
+
+
+def test_elastic_then_restore_shapes(tmp_path):
+    """Checkpoint saved under one mesh restores under another (reshard)."""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.checkpoint import CheckpointManager
+
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, tree)
+    leaves, _ = mgr.restore()  # host arrays; device_put under new mesh is a
+    assert (np.asarray(leaves[0]) == np.asarray(tree["w"])).all()
