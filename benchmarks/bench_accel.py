@@ -12,10 +12,10 @@ import dataclasses
 
 import jax
 
-from benchmarks.common import ALL_SCENES, emit, scene_and_camera
+from benchmarks.common import ALL_SCENES, emit, render_stats, scene_and_camera
 from repro.core.cost_model import GSTG_ASIC, estimate
 from repro.core.gaussians import random_scene
-from repro.core.pipeline import RenderConfig, render
+from repro.core.pipeline import RenderConfig
 from repro.core import make_camera
 
 
@@ -27,9 +27,9 @@ def _fullres_train() -> dict:
     mk = lambda mode, bg="ellipse", bt="ellipse": RenderConfig(
         mode=mode, tile=16, group=64, boundary_group=bg, boundary_tile=bt,
         tile_capacity=2048, group_capacity=4096, span=6)
-    base = render(scene, cam, mk("tile_baseline")).stats
-    gstg = render(scene, cam, mk("gstg")).stats
-    opt = render(scene, cam, mk("gstg", "ellipse_opacity", "ellipse_opacity")).stats
+    base = render_stats(scene, cam, mk("tile_baseline"))
+    gstg = render_stats(scene, cam, mk("gstg"))
+    opt = render_stats(scene, cam, mk("gstg", "ellipse_opacity", "ellipse_opacity"))
     cb = estimate(base, GSTG_ASIC, mode="tile_baseline")
     cg = estimate(gstg, GSTG_ASIC, mode="gstg", execution="asic")
     co = estimate(opt, GSTG_ASIC, mode="gstg", execution="asic")
@@ -61,9 +61,9 @@ def run() -> dict:
             tile=16, group=64, tile_capacity=1024, group_capacity=1024,
             span=6, **kw,
         )
-        base = render(scene, cam, mk(mode="tile_baseline", boundary_tile="ellipse")).stats
-        gscore = render(scene, cam, mk(mode="tile_baseline", boundary_tile="obb")).stats
-        ours = render(scene, cam, mk(mode="gstg")).stats
+        base = render_stats(scene, cam, mk(mode="tile_baseline", boundary_tile="ellipse"))
+        gscore = render_stats(scene, cam, mk(mode="tile_baseline", boundary_tile="obb"))
+        ours = render_stats(scene, cam, mk(mode="gstg"))
 
         c_base = estimate(base, GSTG_ASIC, boundary_group="ellipse",
                           boundary_tile="ellipse", mode="tile_baseline")

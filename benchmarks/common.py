@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import time
+import zlib
 from typing import Dict, List, Tuple
 
 import jax
@@ -10,7 +11,7 @@ import numpy as np
 from repro.configs.gs_scenes import EVAL_RESOLUTION, PAPER_SCENES
 from repro.core import make_camera
 from repro.core.gaussians import scene_like_paper
-from repro.core.pipeline import RenderConfig, render
+from repro.core.pipeline import RenderConfig, render_jit
 
 # The four scenes the paper profiles in Figs 3/5/7/11/12/13 + the two
 # high-res scenes added for Figs 14/15.
@@ -18,22 +19,35 @@ PROFILE_SCENES = ("train", "truck", "drjohnson", "playroom")
 ALL_SCENES = PROFILE_SCENES + ("rubble", "residence")
 
 
-def scene_and_camera(name: str, n_gaussians: int | None = None):
+def scene_and_camera(
+    name: str,
+    n_gaussians: int | None = None,
+    width: int | None = None,
+    height: int | None = None,
+):
+    """Scene + its eval camera; width/height override the paper resolution
+    (smoke renders) while keeping the single source of truth for the
+    viewpoint formula."""
     spec = PAPER_SCENES[name]
     w, h = EVAL_RESOLUTION[name]
-    scene = scene_like_paper(jax.random.key(hash(name) % 2**31), name, n_gaussians)
+    # crc32, not hash(): str hash is salted per process, which made every
+    # process render a DIFFERENT realization of the same named scene.
+    seed = zlib.crc32(name.encode()) % 2**31
+    scene = scene_like_paper(jax.random.key(seed), name, n_gaussians)
     cam = make_camera(
         (0.0, spec.extent * 0.35, spec.extent * 1.5),
         (0, 0, 0),
-        w,
-        h,
+        width or w,
+        height or h,
         fov_x_deg=62.0,
     )
     return scene, cam
 
 
 def render_stats(scene, cam, cfg: RenderConfig):
-    out = jax.jit(lambda s: render(s, cam, cfg))(scene)
+    """Counters via the jit-cached engine entry (shared executable across
+    cameras of the same resolution and equal configs)."""
+    out = render_jit(scene, cam, cfg)
     return jax.tree.map(np.asarray, out.stats)
 
 

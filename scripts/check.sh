@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Single CI gate: tier-1 tests + a 1-frame smoke render on both backends.
+#
+#   scripts/check.sh          # full tier-1 (includes slow tests)
+#   scripts/check.sh --fast   # deselect slow tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(-m "not slow")
+fi
+
+echo "== tier-1 tests =="
+python -m pytest "${PYTEST_ARGS[@]}"
+
+# module runs (benchmarks/, repro.*) need both roots on the path; pytest gets
+# them from pyproject's pythonpath, plain `python -m` does not.
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+SMOKE="--scene train --gaussians 1200 --width 256 --height 192 --capacity 256"
+echo "== smoke render: reference backend =="
+python -m repro.launch.render $SMOKE --backend reference
+echo "== smoke render: pallas backend =="
+python -m repro.launch.render $SMOKE --backend pallas
+
+echo "check.sh: OK"

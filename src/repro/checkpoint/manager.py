@@ -25,7 +25,15 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
-import zstandard
+
+try:  # optional: checkpoints are written uncompressed when unavailable
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
+
+# zstd frame magic number — lets restore() auto-detect how a file was written
+# regardless of which environment wrote it.
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 @dataclasses.dataclass
@@ -95,7 +103,14 @@ class CheckpointManager:
             step = info.step
         path = self._path(step)
         with open(path, "rb") as f:
-            raw = zstandard.ZstdDecompressor().decompress(f.read())
+            raw = f.read()
+        if raw[:4] == _ZSTD_MAGIC:
+            if zstandard is None:
+                raise ImportError(
+                    f"checkpoint {path} is zstd-compressed but the 'zstandard' "
+                    "package is not installed"
+                )
+            raw = zstandard.ZstdDecompressor().decompress(raw)
         buf = io.BytesIO(raw)
         npz = np.load(buf, allow_pickle=False)
         manifest = json.loads(str(npz["__manifest__"]))
@@ -147,7 +162,9 @@ class CheckpointManager:
         arrays = {f"leaf_{i}": a for i, a in enumerate(leaves)}
         arrays["__manifest__"] = np.asarray(json.dumps(manifest))
         np.savez(buf, **arrays)
-        comp = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
+        comp = buf.getvalue()
+        if zstandard is not None:
+            comp = zstandard.ZstdCompressor(level=3).compress(comp)
         path = self._path(step)
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:

@@ -1,11 +1,21 @@
 from repro.core.camera import Camera, make_camera, orbit_cameras
 from repro.core.gaussians import GaussianScene, random_scene
 from repro.core.grouping import GridSpec
-from repro.core.pipeline import RenderConfig, RenderResult, render, render_image
+from repro.core.pipeline import (
+    CameraBatch,
+    RenderConfig,
+    RenderResult,
+    render,
+    render_batch,
+    render_image,
+    render_jit,
+)
 from repro.core.projection import Projected, project
+from repro.core.stages import Backend, get_backend, register_backend
 
 __all__ = [
     "Camera",
+    "CameraBatch",
     "make_camera",
     "orbit_cameras",
     "GaussianScene",
@@ -14,7 +24,12 @@ __all__ = [
     "RenderConfig",
     "RenderResult",
     "render",
+    "render_batch",
     "render_image",
+    "render_jit",
     "Projected",
     "project",
+    "Backend",
+    "get_backend",
+    "register_backend",
 ]

@@ -1,6 +1,14 @@
-"""End-to-end rendering pipelines (paper Fig 1 vs Fig 9).
+"""End-to-end rendering engine (paper Fig 1 vs Fig 9).
 
-Three modes sharing one substrate:
+``render()`` is the single public entry point. It expresses the pipeline as
+explicit stages (project -> identify -> bin/sort -> bitmask -> compact ->
+rasterize; see core/stages.py and DESIGN.md §1) and dispatches every stage to
+the backend selected by ``RenderConfig.backend``:
+
+  * ``reference`` — pure-jnp XLA stages (differentiable oracle).
+  * ``pallas``    — BGM + fused RM as Pallas kernels, same RenderStats.
+
+Three modes share the substrate regardless of backend:
 
   * ``tile_baseline``  — conventional 3D-GS: identify + sort + rasterize at
     the small-tile level (paper Fig 1). Sorting keys = (gaussian, tile) pairs.
@@ -13,6 +21,11 @@ Three modes sharing one substrate:
 Every mode returns the image plus RenderStats counters that drive the
 benchmarks and the accelerator cost model.
 
+``render_batch()`` renders a batch of cameras in ONE jit-compiled call (vmap
+over the camera parameters); compiled renderers are cached by the static
+(RenderConfig, camera-geometry) signature so repeated multi-view calls reuse
+the executable (DESIGN.md §6).
+
 Losslessness guarantees (tested in tests/test_pipeline_lossless.py):
   * BITWISE image equality gstg == tile_baseline whenever the bitmask method
     is at least as tight as the group method (ellipse bitmask under any group
@@ -23,27 +36,24 @@ Losslessness guarantees (tested in tests/test_pipeline_lossless.py):
     reassociation of interleaved zero-alpha entries (<=1e-6), because every
     boundary method conservatively over-approximates the q<=9 support that
     rasterization enforces.
+  * Across backends: identical integer counters and allclose images (the
+    pallas RM chunks the group list rather than the compacted tile lists, so
+    partial-sum association may differ by fp rounding; tests/test_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.bitmask import compact_tiles, generate_bitmasks
 from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
-from repro.core.grouping import (
-    BinTable,
-    GridSpec,
-    bin_pairs,
-    identify,
-    sort_op_count,
-)
-from repro.core.projection import Projected, project
-from repro.core.raster import RasterOut, rasterize
+from repro.core.grouping import GridSpec, sort_op_count
+from repro.core.stages import Backend, get_backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +68,7 @@ class RenderConfig:
     span: int = 4                      # candidate window at group level (bins)
     chunk: int = 32                    # raster gaussian chunk
     early_exit: bool = True
-    use_kernels: bool = False          # route sort/bitmask/raster via Pallas
+    backend: str = "reference"         # stage implementation: reference | pallas
 
 
 @jax.tree_util.register_dataclass
@@ -86,7 +96,7 @@ class RenderResult:
     stats: RenderStats
 
 
-def _grid(cam: Camera, cfg: RenderConfig) -> GridSpec:
+def _grid(cam, cfg: RenderConfig) -> GridSpec:
     return GridSpec(
         width=cam.width,
         height=cam.height,
@@ -102,17 +112,21 @@ def render(
     cfg: RenderConfig,
     background: Optional[jnp.ndarray] = None,
 ) -> RenderResult:
-    proj = project(scene, cam)
+    """Render one camera through the staged engine on ``cfg.backend``."""
+    backend = get_backend(cfg.backend)
+    proj = backend.project(scene, cam)
     if cfg.mode == "gstg":
-        return _render_gstg(proj, cam, cfg, background)
+        return _render_gstg(backend, proj, cam, cfg, background)
     if cfg.mode == "tile_baseline":
-        return _render_flat(proj, cam, cfg, background, level="tile")
+        return _render_flat(backend, proj, cam, cfg, background, level="tile")
     if cfg.mode == "group_baseline":
-        return _render_flat(proj, cam, cfg, background, level="group")
+        return _render_flat(backend, proj, cam, cfg, background, level="group")
     raise ValueError(f"unknown mode {cfg.mode!r}")
 
 
-def _render_flat(proj, cam, cfg, background, level: str) -> RenderResult:
+def _render_flat(
+    backend: Backend, proj, cam, cfg, background, level: str
+) -> RenderResult:
     """Conventional per-bin pipeline at tile or group granularity."""
     grid = _grid(cam, cfg)
     if level == "tile":
@@ -131,13 +145,13 @@ def _render_flat(proj, cam, cfg, background, level: str) -> RenderResult:
             span=cfg.span,
         )
 
-    pairs = identify(proj, grid, level, cfg.boundary_tile)
-    table = bin_pairs(pairs, bins_xy, capacity)
-    rast = rasterize(
+    pairs = backend.identify(proj, grid, level, cfg.boundary_tile)
+    table = backend.bin(pairs, bins_xy, capacity)
+    rast = backend.rasterize_tiles(
         proj,
         table,
         raster_grid,
-        background,
+        background=background,
         chunk=cfg.chunk,
         early_exit=cfg.early_exit,
     )
@@ -158,33 +172,38 @@ def _render_flat(proj, cam, cfg, background, level: str) -> RenderResult:
     return RenderResult(image=image, stats=stats)
 
 
-def _render_gstg(proj, cam, cfg, background) -> RenderResult:
+def _render_gstg(backend: Backend, proj, cam, cfg, background) -> RenderResult:
     """The paper's pipeline: Fig 9."""
     grid = _grid(cam, cfg)
 
     # 1) Group identification (coarse, cheap).
-    pairs = identify(proj, grid, "group", cfg.boundary_group)
+    pairs = backend.identify(proj, grid, "group", cfg.boundary_group)
 
     # 2) Group-wise sorting — ONE sort per group, shared by gf^2 tiles.
-    gtable = bin_pairs(pairs, grid.num_groups, cfg.group_capacity)
+    gtable = backend.bin(pairs, grid.num_groups, cfg.group_capacity)
 
     # 3) Bitmask generation (BGM): tile-granularity tests on group entries.
     #    On the ASIC this overlaps GSM; in XLA the two ops have no data
     #    dependence and schedule freely (gtable order does not affect masks:
     #    masks are per-entry).
-    masks = generate_bitmasks(proj, gtable, grid, cfg.boundary_tile)
+    masks = backend.bitmasks(proj, gtable, grid, cfg.boundary_tile, chunk=cfg.chunk)
 
     # 4) RM FIFO: per-tile compaction by bitmask (linear, order-preserving).
-    ttable = compact_tiles(gtable, masks, grid, cfg.tile_capacity)
+    #    Materialized by the reference backend; virtual (in-register) for the
+    #    fused pallas RM, which still reports the same length/overflow stats.
+    compacted = backend.compact(gtable, masks, grid, cfg.tile_capacity)
 
     # 5) Small-tile rasterization.
-    rast = rasterize(
+    rast = backend.rasterize_groups(
         proj,
-        ttable,
+        gtable,
+        masks,
+        compacted,
         grid,
-        background,
+        background=background,
         chunk=cfg.chunk,
         early_exit=cfg.early_exit,
+        tile_capacity=cfg.tile_capacity,
     )
     stats = RenderStats(
         n_visible=jnp.sum(proj.valid.astype(jnp.int32)),
@@ -195,8 +214,8 @@ def _render_gstg(proj, cam, cfg, background) -> RenderResult:
         fifo_ops=jnp.sum(gtable.lengths) * grid.tiles_per_group,
         alpha_ops=rast.alpha_ops,
         blend_ops=rast.blend_ops,
-        tile_entries=jnp.sum(ttable.lengths),
-        overflow=gtable.overflow + ttable.overflow,
+        tile_entries=compacted.tile_entries,
+        overflow=gtable.overflow + compacted.overflow,
         span_overflow=pairs.n_span_overflow,
     )
     return RenderResult(image=rast.image, stats=stats)
@@ -205,3 +224,162 @@ def _render_gstg(proj, cam, cfg, background) -> RenderResult:
 def render_image(scene, cam, cfg, background=None) -> jnp.ndarray:
     """Convenience: image only (used by training/loss code)."""
     return render(scene, cam, cfg, background).image
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-camera rendering (jit-compiled, cached by static signature)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CameraBatch:
+    """A batch of cameras sharing static geometry (resolution, clip planes).
+
+    Dynamic per-camera parameters (pose + intrinsics) are stacked arrays and
+    become traced arguments of the cached renderer; width/height stay static
+    so the GridSpec — and therefore the compiled program — is shared.
+    """
+
+    R: jnp.ndarray    # (B, 3, 3)
+    t: jnp.ndarray    # (B, 3)
+    fx: jnp.ndarray   # (B,)
+    fy: jnp.ndarray   # (B,)
+    cx: jnp.ndarray   # (B,)
+    cy: jnp.ndarray   # (B,)
+    width: int
+    height: int
+    znear: float = 0.2
+    zfar: float = 1000.0
+
+    @classmethod
+    def from_cameras(cls, cams: Sequence[Camera]) -> "CameraBatch":
+        if not cams:
+            raise ValueError("empty camera batch")
+        w, h = cams[0].width, cams[0].height
+        zn, zf = cams[0].znear, cams[0].zfar
+        for c in cams:
+            if (c.width, c.height, c.znear, c.zfar) != (w, h, zn, zf):
+                raise ValueError(
+                    "all cameras in a batch must share width/height/znear/zfar"
+                )
+        stack = lambda f: jnp.asarray(np.stack([np.asarray(f(c)) for c in cams]))
+        return cls(
+            R=stack(lambda c: c.R),
+            t=stack(lambda c: c.t),
+            fx=stack(lambda c: np.float32(c.fx)),
+            fy=stack(lambda c: np.float32(c.fy)),
+            cx=stack(lambda c: np.float32(c.cx)),
+            cy=stack(lambda c: np.float32(c.cy)),
+            width=w,
+            height=h,
+            znear=zn,
+            zfar=zf,
+        )
+
+    def __len__(self) -> int:
+        return int(self.R.shape[0])
+
+    def signature(self):
+        """The static part of the batch: what the compiled fn specializes on."""
+        return (self.width, self.height, self.znear, self.zfar)
+
+
+jax.tree_util.register_dataclass(
+    CameraBatch,
+    data_fields=["R", "t", "fx", "fy", "cx", "cy"],
+    meta_fields=["width", "height", "znear", "zfar"],
+)
+
+
+def _render_with_traced_camera(cfg: RenderConfig, width, height, znear, zfar):
+    """The shared closure both cached renderers jit: rebuild a Camera from
+    traced pose/intrinsics around the static geometry and render."""
+
+    def one(scene, R, t, fx, fy, cx, cy, background):
+        cam = Camera(
+            R=R, t=t, fx=fx, fy=fy, cx=cx, cy=cy,
+            width=width, height=height, znear=znear, zfar=zfar,
+        )
+        return render(scene, cam, cfg, background)
+
+    return one
+
+
+@functools.lru_cache(maxsize=64)
+def _batch_renderer(cfg: RenderConfig, width, height, znear, zfar):
+    """Build + jit the vmapped renderer for one static signature.
+
+    lru-cached by (RenderConfig, camera-geometry) — RenderConfig is a frozen
+    (hashable, eq-by-value) dataclass, so equal configs share the executable
+    even across distinct instances; stale entries age out of the bounded
+    cache (the jit wrapper itself is dropped, releasing the executable).
+    """
+    one = _render_with_traced_camera(cfg, width, height, znear, zfar)
+    return jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, None)))
+
+
+@functools.lru_cache(maxsize=64)
+def _single_renderer(cfg: RenderConfig, width, height, znear, zfar):
+    """Cached jit renderer for a single camera of the given static geometry."""
+    return jax.jit(_render_with_traced_camera(cfg, width, height, znear, zfar))
+
+
+def render_cache_clear() -> None:
+    """Drop all cached compiled renderers (single + batch)."""
+    _batch_renderer.cache_clear()
+    _single_renderer.cache_clear()
+
+
+def render_cache_info():
+    """(single, batch) lru cache statistics — used by tests/benchmarks to
+    assert the second call with the same static signature reuses the jit."""
+    return _single_renderer.cache_info(), _batch_renderer.cache_info()
+
+
+def _background_array(background) -> jnp.ndarray:
+    if background is None:
+        return jnp.zeros((3,), jnp.float32)
+    return jnp.asarray(background, jnp.float32)
+
+
+def render_jit(
+    scene: GaussianScene,
+    cam: Camera,
+    cfg: RenderConfig,
+    background: Optional[jnp.ndarray] = None,
+) -> RenderResult:
+    """Single-camera render through the cached jit entry point.
+
+    Unlike ``jax.jit(render)`` ad hoc, repeated calls with ANY camera of the
+    same resolution reuse one compiled executable (pose/intrinsics are traced
+    arguments, not closure constants).
+    """
+    fn = _single_renderer(cfg, cam.width, cam.height, cam.znear, cam.zfar)
+    return fn(
+        scene,
+        jnp.asarray(cam.R), jnp.asarray(cam.t),
+        jnp.float32(cam.fx), jnp.float32(cam.fy),
+        jnp.float32(cam.cx), jnp.float32(cam.cy),
+        _background_array(background),
+    )
+
+
+def render_batch(
+    scene: GaussianScene,
+    cams: Union[CameraBatch, Sequence[Camera]],
+    cfg: RenderConfig,
+    background: Optional[jnp.ndarray] = None,
+) -> RenderResult:
+    """Render B cameras in ONE jit call (image: (B, H, W, 3); stats: (B,)).
+
+    The compiled fn is cached by the static (RenderConfig, geometry)
+    signature, so multi-view serving amortizes compilation and dispatch
+    across frames — the batching prerequisite named in the ROADMAP.
+    """
+    batch = cams if isinstance(cams, CameraBatch) else CameraBatch.from_cameras(cams)
+    fn = _batch_renderer(cfg, *batch.signature())
+    return fn(
+        scene,
+        batch.R, batch.t, batch.fx, batch.fy, batch.cx, batch.cy,
+        _background_array(background),
+    )

@@ -1,0 +1,338 @@
+"""Stage decomposition of the GS-TG rendering pipeline + backend dispatch.
+
+The pipeline is expressed as six explicit stages (DESIGN.md §1):
+
+    project -> identify -> bin/sort -> bitmask -> compact -> rasterize
+
+``render()`` (core/pipeline.py) is the only public entry; a ``Backend``
+supplies the stage implementations:
+
+  * ``reference`` — pure-jnp XLA ops throughout (differentiable; the oracle
+    every other backend is tested against).
+  * ``pallas``    — BGM + fused RM run as Pallas TPU kernels (interpret mode
+    off-TPU); identification and the group binning/sort stay on the XLA sort
+    substrate (DESIGN.md §2: a stable lexicographic sort has no efficient
+    Mosaic lowering, and stability is what the losslessness proof needs).
+
+Both backends consume/produce the same dataclasses and emit the same
+RenderStats counters, so they are interchangeable under ``render()`` and the
+losslessness guarantees can be asserted across backends (tests/test_engine.py).
+
+The pallas 'compact' stage is *virtual*: the fused RM kernel applies the
+bitmask filter in-register (paper Fig 10), so no per-tile table is ever
+materialized — only the per-tile lengths/overflow counters are computed (a
+cheap popcount) to keep the stats contract identical to the reference.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitmask import GroupBitmasks, compact_tiles, generate_bitmasks
+from repro.core.camera import Camera
+from repro.core.gaussians import GaussianScene
+from repro.core.grouping import BinTable, GridSpec, PairSet, bin_pairs, identify
+from repro.core.projection import Projected, project
+from repro.core.raster import rasterize
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TileRaster:
+    """Output of the rasterize stage over a tile-level work list."""
+
+    image: jnp.ndarray       # (grid.height, grid.width, 3)
+    alpha_ops: jnp.ndarray   # () int32
+    blend_ops: jnp.ndarray   # () int32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompactedTiles:
+    """Result of the compact stage (RM FIFO). ``table`` is only materialized
+    by backends that need it (reference); the fused pallas RM consumes the
+    group table + masks directly and leaves ``table`` as None."""
+
+    tile_entries: jnp.ndarray   # () int32: sum of per-tile lengths (pre-clamp)
+    overflow: jnp.ndarray       # () int32: entries dropped by tile_capacity
+    table: Optional[BinTable] = None
+
+
+def mask_tile_lengths(
+    gtable: BinTable, masks: GroupBitmasks, grid: GridSpec
+) -> jnp.ndarray:
+    """(num_groups, tiles_per_group) per-member-tile entry counts — a popcount
+    over the bitmask columns.
+
+    Equals ``compact_tiles(...).lengths`` regrouped by (group, slot), without
+    materializing the compacted table. Member tiles outside the image need no
+    special-casing: both bitmask generators zero their mask bits already.
+    """
+    tpg = grid.tiles_per_group
+    bits = (
+        (masks.masks[:, :, None] >> jnp.arange(tpg, dtype=jnp.uint32)) & 1
+    ).astype(jnp.int32)
+    bits = bits * gtable.entry_valid[:, :, None].astype(jnp.int32)
+    return jnp.sum(bits, axis=1)  # (G, tpg)
+
+
+class Backend(abc.ABC):
+    """Stage implementations behind ``render()``. Subclasses override the
+    stages they accelerate; identification and binning default to the shared
+    XLA substrate (stable sort => 3D-GS tie-break => losslessness)."""
+
+    name: str = "abstract"
+
+    # -- stage 1: preprocessing ------------------------------------------
+    def project(self, scene: GaussianScene, cam: Camera) -> Projected:
+        return project(scene, cam)
+
+    # -- stage 2: group/tile identification ------------------------------
+    def identify(
+        self, proj: Projected, grid: GridSpec, level: str, method: str
+    ) -> PairSet:
+        return identify(proj, grid, level, method)
+
+    # -- stage 3: binning + depth sort -----------------------------------
+    def bin(self, pairs: PairSet, num_bins: int, capacity: int) -> BinTable:
+        return bin_pairs(pairs, num_bins, capacity)
+
+    # -- stage 4: bitmask generation (BGM) -------------------------------
+    @abc.abstractmethod
+    def bitmasks(
+        self,
+        proj: Projected,
+        gtable: BinTable,
+        grid: GridSpec,
+        method: str,
+        *,
+        chunk: int = 32,
+    ) -> GroupBitmasks:
+        """``chunk`` is the raster chunk size — a layout hint so kernel
+        backends can pack features once with the padding rasterization will
+        want (the gathers then CSE under jit). Pure-XLA backends ignore it."""
+
+    # -- stage 5: RM FIFO compaction -------------------------------------
+    @abc.abstractmethod
+    def compact(
+        self,
+        gtable: BinTable,
+        masks: GroupBitmasks,
+        grid: GridSpec,
+        tile_capacity: int,
+    ) -> CompactedTiles:
+        ...
+
+    # -- stage 6: rasterization ------------------------------------------
+    @abc.abstractmethod
+    def rasterize_tiles(
+        self,
+        proj: Projected,
+        table: BinTable,
+        grid: GridSpec,
+        *,
+        background: Optional[jnp.ndarray],
+        chunk: int,
+        early_exit: bool,
+    ) -> TileRaster:
+        """Rasterize a tile-level table (flat pipelines; reference gstg)."""
+
+    @abc.abstractmethod
+    def rasterize_groups(
+        self,
+        proj: Projected,
+        gtable: BinTable,
+        masks: GroupBitmasks,
+        compacted: CompactedTiles,
+        grid: GridSpec,
+        *,
+        background: Optional[jnp.ndarray],
+        chunk: int,
+        early_exit: bool,
+        tile_capacity: int,
+    ) -> TileRaster:
+        """Rasterize the gstg work list (group table + per-entry bitmasks)."""
+
+
+class ReferenceBackend(Backend):
+    """Pure-jnp stages: the differentiable oracle (core/raster.py)."""
+
+    name = "reference"
+
+    def bitmasks(self, proj, gtable, grid, method, *, chunk=32):
+        return generate_bitmasks(proj, gtable, grid, method)
+
+    def compact(self, gtable, masks, grid, tile_capacity):
+        table = compact_tiles(gtable, masks, grid, tile_capacity)
+        return CompactedTiles(
+            tile_entries=jnp.sum(table.lengths),
+            overflow=table.overflow,
+            table=table,
+        )
+
+    def rasterize_tiles(self, proj, table, grid, *, background, chunk, early_exit):
+        rast = rasterize(
+            proj, table, grid, background, chunk=chunk, early_exit=early_exit
+        )
+        return TileRaster(
+            image=rast.image, alpha_ops=rast.alpha_ops, blend_ops=rast.blend_ops
+        )
+
+    def rasterize_groups(
+        self, proj, gtable, masks, compacted, grid, *,
+        background, chunk, early_exit, tile_capacity,
+    ):
+        return self.rasterize_tiles(
+            proj, compacted.table, grid,
+            background=background, chunk=chunk, early_exit=early_exit,
+        )
+
+
+class PallasBackend(Backend):
+    """BGM + RM as Pallas kernels (interpret mode off-TPU), same counters.
+
+    The fused RM never materializes per-tile tables; tile_capacity is honored
+    in-register (entries past the capacity of a member tile's virtual FIFO are
+    dropped, exactly like the reference compaction clamp), and alpha/blend op
+    counters are accumulated inside the kernel.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        self._interpret = interpret
+
+    @property
+    def interpret(self) -> Optional[bool]:
+        return self._interpret
+
+    def _resolve_interpret(self) -> bool:
+        from repro.kernels.ops import default_interpret
+
+        return default_interpret() if self._interpret is None else self._interpret
+
+    @staticmethod
+    def _pad_multiple(chunk: int) -> int:
+        from repro.kernels.layout import LANE
+
+        return math.lcm(LANE, max(int(chunk), 1))
+
+    def bitmasks(self, proj, gtable, grid, method, *, chunk=32):
+        from repro.kernels.bitmask_gen import bitmask_kernel
+        from repro.kernels.layout import pack_features
+        from repro.kernels.ops import group_origins, tiles_in_image
+
+        # Same padding rasterize_groups uses => the gather is an identical
+        # expression there and XLA CSE merges the two under jit (the hot
+        # paths — render_jit/render_batch — are jit'd; eager render() pays
+        # the gather twice, acceptable for demos/tests).
+        feat = pack_features(
+            proj, gtable.gauss_idx, gtable.entry_valid,
+            multiple=self._pad_multiple(chunk),
+        )
+        masks = bitmask_kernel(
+            feat,
+            group_origins(grid),
+            tiles_in_image(grid),
+            grid.tile,
+            grid.gf,
+            method=method,
+            interpret=self._resolve_interpret(),
+        )
+        # Kernel masks cover the padded K axis; crop to the table capacity.
+        masks = masks[:, : gtable.capacity]
+        n_tests = jnp.sum(gtable.entry_valid.astype(jnp.int32)) * grid.tiles_per_group
+        return GroupBitmasks(masks=masks, n_bit_tests=n_tests)
+
+    def compact(self, gtable, masks, grid, tile_capacity):
+        lengths = mask_tile_lengths(gtable, masks, grid)
+        return CompactedTiles(
+            tile_entries=jnp.sum(lengths),
+            overflow=jnp.sum(jnp.maximum(lengths - tile_capacity, 0)),
+            table=None,
+        )
+
+    def rasterize_tiles(self, proj, table, grid, *, background, chunk, early_exit):
+        from repro.kernels.layout import pack_features
+        from repro.kernels.ops import assemble_image_tiles, tile_origins
+        from repro.kernels.raster_tile import raster_tile_kernel
+
+        feat = pack_features(
+            proj, table.gauss_idx, table.entry_valid,
+            multiple=self._pad_multiple(chunk),
+        )
+        K = feat.shape[-1]
+        out, counts = raster_tile_kernel(
+            feat,
+            tile_origins(grid),
+            grid.tile,
+            chunk=min(chunk, K),
+            early_exit=early_exit,
+            with_stats=True,
+            interpret=self._resolve_interpret(),
+        )
+        return TileRaster(
+            image=assemble_image_tiles(out, grid, background),
+            alpha_ops=jnp.sum(counts[:, 0]),
+            blend_ops=jnp.sum(counts[:, 1]),
+        )
+
+    def rasterize_groups(
+        self, proj, gtable, masks, compacted, grid, *,
+        background, chunk, early_exit, tile_capacity,
+    ):
+        from repro.kernels.layout import pack_features
+        from repro.kernels.ops import assemble_image, group_origins
+        from repro.kernels.raster_tile import raster_group_fused_kernel
+
+        feat = pack_features(
+            proj, gtable.gauss_idx, gtable.entry_valid,
+            multiple=self._pad_multiple(chunk),
+        )
+        K = feat.shape[-1]
+        pad = K - masks.masks.shape[1]
+        padded_masks = (
+            jnp.pad(masks.masks, ((0, 0), (0, pad))) if pad else masks.masks
+        )
+        out, counts = raster_group_fused_kernel(
+            feat,
+            padded_masks,
+            group_origins(grid),
+            grid.tile,
+            grid.gf,
+            chunk=min(chunk, K),
+            early_exit=early_exit,
+            tile_capacity=tile_capacity,
+            with_stats=True,
+            interpret=self._resolve_interpret(),
+        )
+        return TileRaster(
+            image=assemble_image(out, grid, background),
+            alpha_ops=jnp.sum(counts[:, :, 0]),
+            blend_ops=jnp.sum(counts[:, :, 1]),
+        )
+
+
+_BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, backend: Backend) -> None:
+    _BACKENDS[name] = backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {sorted(_BACKENDS)}"
+        ) from None
+
+
+register_backend("reference", ReferenceBackend())
+register_backend("pallas", PallasBackend())

@@ -32,14 +32,20 @@ NUM_FEATURES = 16
 LANE = 128
 
 
-def pack_features(proj, gauss_idx: jnp.ndarray, entry_valid: jnp.ndarray):
+def pack_features(
+    proj,
+    gauss_idx: jnp.ndarray,
+    entry_valid: jnp.ndarray,
+    multiple: int = LANE,
+):
     """Gather Projected fields into (B, NUM_FEATURES, K_pad) fp32 blocks.
 
     gauss_idx/entry_valid: (B, K). Invalid entries get opacity 0 (=> alpha 0 in
-    the raster kernel) and valid flag 0.
+    the raster kernel) and valid flag 0. ``multiple`` sets the K padding
+    granularity — pass lcm(LANE, chunk) so any raster chunk size divides K_pad.
     """
     B, K = gauss_idx.shape
-    K_pad = round_up(max(K, 1), LANE)
+    K_pad = round_up(max(K, 1), max(int(multiple), 1))
     v = entry_valid
 
     def g(field, ch=None):

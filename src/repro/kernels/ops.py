@@ -1,34 +1,24 @@
-"""Jit'd public wrappers for the GS-TG Pallas kernels.
+"""Thin public wrappers + layout glue for the GS-TG Pallas kernels.
 
 On CPU (this container) the kernels execute via Pallas interpret mode; on a
-real TPU backend the same code lowers to Mosaic. ``kernel_render`` is the
-kernel-path renderer used by pipeline.use_kernels: group binning happens with
-the XLA sort substrate, then BGM + fused RM run as Pallas kernels.
+real TPU backend the same code lowers to Mosaic. There is NO standalone
+kernel-path renderer here: the Pallas kernels are stage implementations of
+the unified engine — select them with ``RenderConfig(backend="pallas")`` and
+go through ``repro.core.pipeline.render`` (see core/stages.PallasBackend).
+Identification and group binning stay on the XLA sort substrate (DESIGN.md
+§2); this module only hosts the geometry/layout helpers those stages share.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-
-from repro.core.bitmask import GroupBitmasks
-from repro.core.grouping import GridSpec, bin_pairs, identify
-from repro.core.projection import project
-from repro.kernels.bitmask_gen import bitmask_kernel
-from repro.kernels.bitonic_sort import bitonic_sort_kernel
-from repro.kernels.layout import pack_features
-from repro.kernels.raster_tile import (
-    raster_group_fused_kernel,
-    raster_tile_kernel,
-)
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def group_origins(grid: GridSpec) -> jnp.ndarray:
+def group_origins(grid) -> jnp.ndarray:
     g = jnp.arange(grid.num_groups, dtype=jnp.int32)
     return jnp.stack(
         [(g % grid.n_groups_x) * grid.group, (g // grid.n_groups_x) * grid.group],
@@ -36,7 +26,7 @@ def group_origins(grid: GridSpec) -> jnp.ndarray:
     ).astype(jnp.float32)
 
 
-def tile_origins(grid: GridSpec) -> jnp.ndarray:
+def tile_origins(grid) -> jnp.ndarray:
     t = jnp.arange(grid.num_tiles, dtype=jnp.int32)
     return jnp.stack(
         [(t % grid.n_tiles_x) * grid.tile, (t // grid.n_tiles_x) * grid.tile],
@@ -44,7 +34,7 @@ def tile_origins(grid: GridSpec) -> jnp.ndarray:
     ).astype(jnp.float32)
 
 
-def tiles_in_image(grid: GridSpec) -> jnp.ndarray:
+def tiles_in_image(grid) -> jnp.ndarray:
     """(num_groups, tpg) bool: member tile lies inside the image."""
     g = jnp.arange(grid.num_groups, dtype=jnp.int32)[:, None]
     s = jnp.arange(grid.tiles_per_group, dtype=jnp.int32)[None, :]
@@ -59,53 +49,20 @@ def sort_groups_bitonic(depth_keys, payload_idx, interpret=None):
 
     depth_keys: (G, K) float32 with +inf at invalid slots.
     payload_idx: (G, K) int32. Returns (keys, idx) sorted ascending.
+
+    Note: the engine's binning uses the XLA *stable* sort (the tie-break the
+    losslessness proof needs); the bitonic kernel is the ASIC GSM model and
+    is validated standalone (tests/test_kernels_sort.py, DESIGN.md §2).
     """
+    from repro.kernels.bitonic_sort import bitonic_sort_kernel
+
     interpret = default_interpret() if interpret is None else interpret
     payload_f = payload_idx.astype(jnp.float32)  # indices < 2^24: exact in f32
     k, v = bitonic_sort_kernel(depth_keys, payload_f, interpret=interpret)
     return k, v.astype(jnp.int32)
 
 
-def kernel_render(scene, cam, cfg, interpret=None):
-    """GS-TG rendering with Pallas BGM + fused RM (and XLA group binning).
-
-    Returns (image, masks) — image (H, W, 3).
-    """
-    interpret = default_interpret() if interpret is None else interpret
-    grid = GridSpec(cam.width, cam.height, cfg.tile, cfg.group, cfg.span)
-    proj = project(scene, cam)
-
-    pairs = identify(proj, grid, "group", cfg.boundary_group)
-    gtable = bin_pairs(pairs, grid.num_groups, cfg.group_capacity)
-
-    feat = pack_features(proj, gtable.gauss_idx, gtable.entry_valid)
-    origins = group_origins(grid)
-    in_img = tiles_in_image(grid)
-
-    masks = bitmask_kernel(
-        feat,
-        origins,
-        in_img,
-        grid.tile,
-        grid.gf,
-        method=cfg.boundary_tile,
-        interpret=interpret,
-    )
-
-    out = raster_group_fused_kernel(
-        feat,
-        masks,
-        origins,
-        grid.tile,
-        grid.gf,
-        chunk=min(128, feat.shape[-1]),
-        interpret=interpret,
-    )  # (G, tpg, 4, P)
-    img = assemble_image(out, grid)
-    return img, masks
-
-
-def assemble_image(out, grid: GridSpec, background=None):
+def assemble_image(out, grid, background=None):
     """(G, tpg, 4, P) kernel output -> (H, W, 3) image."""
     if background is None:
         background = jnp.zeros((3,), jnp.float32)
@@ -122,7 +79,7 @@ def assemble_image(out, grid: GridSpec, background=None):
     return img[: grid.height, : grid.width]
 
 
-def assemble_image_tiles(out, grid: GridSpec, background=None):
+def assemble_image_tiles(out, grid, background=None):
     """(num_tiles, 4, P) raster_tile_kernel output -> (H, W, 3)."""
     if background is None:
         background = jnp.zeros((3,), jnp.float32)

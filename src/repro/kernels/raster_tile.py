@@ -9,6 +9,14 @@ Two entry points:
     entry lists plus per-entry tile bitmasks and applies the bitwise-AND
     valid-flag filter in-register (paper's 8-wide AND/OR logic becomes lane
     predication), so no compacted per-tile tables ever materialize in HBM.
+    ``tile_capacity`` bounds each member tile's virtual FIFO: mask-selected
+    entries past the capacity are dropped in-register, mirroring the
+    reference compaction clamp bit for bit.
+
+Both kernels optionally emit the engine's RenderStats counters (pass
+``with_stats=True``): per-block (alpha_ops, blend_ops) accumulated alongside
+the blend, with exactly the reference semantics (core/raster.py) so the
+pallas backend reports identical integers.
 
 TPU mapping notes (vs the ASIC):
   - grid iterates tiles (or group x member-tile); each step owns a T*T pixel
@@ -18,7 +26,9 @@ TPU mapping notes (vs the ASIC):
   - early exit is block-granular: when every pixel's transmittance is below
     T_EPS the remaining chunks are skipped (lax.cond), the TPU analogue of
     the per-Gaussian FIFO drain. Per-entry exactness is preserved by gating
-    each entry's weight on its own T_before (see core/raster.py).
+    each entry's weight on its own T_before (see core/raster.py). Passing
+    ``early_exit=False`` disables both the gate and the skip, matching the
+    reference's exhaustive blend.
 """
 from __future__ import annotations
 
@@ -38,6 +48,7 @@ from repro.kernels.layout import (
     F_RGB_B,
     F_RGB_G,
     F_RGB_R,
+    F_VALID,
     NUM_FEATURES,
 )
 
@@ -47,8 +58,11 @@ T_EPS = 1e-4
 QMAX = 9.0
 
 
-def _blend_chunk(fc, px, py, t_run, rgb_acc, mask_chunk=None, tile_bit=None):
-    """Blend one BK-wide feature chunk fc=(F, BK) into (P,) accumulators."""
+def _blend_chunk(fc, px, py, carry, *, early_exit, mask_chunk=None,
+                 tile_bit=None, tile_capacity=None):
+    """Blend one BK-wide feature chunk fc=(F, BK) into the running carry
+    (t_run (P,), rgb_acc (3, P), alpha_ops, blend_ops, kept)."""
+    t_run, rgb_acc, a_ops, b_ops, kept = carry
     mx = fc[F_MEAN_X]
     my = fc[F_MEAN_Y]
     ca = fc[F_CONIC_A]
@@ -64,25 +78,50 @@ def _blend_chunk(fc, px, py, t_run, rgb_acc, mask_chunk=None, tile_bit=None):
     q = ca[None, :] * dx * dx + 2.0 * cb[None, :] * dx * dy + cc[None, :] * dy * dy
     a = jnp.minimum(op[None, :] * jnp.exp(-0.5 * q), ALPHA_MAX)
     a = jnp.where((q > QMAX) | (a < ALPHA_MIN), 0.0, a)
+
+    # Which entries belong to this tile's (virtual) compacted list — used both
+    # to filter alphas (GS-TG RM) and to count alpha ops like the reference.
+    valid_entry = op > 0.0                          # (BK,)
     if mask_chunk is not None:
-        # GS-TG RM filter: keep entries whose bitmask covers this tile.
+        # GS-TG RM filter: keep entries whose bitmask covers this tile. The
+        # compaction stream is mask & entry-valid — the same predicate
+        # core/bitmask.compact_tiles streams by.
         keep = ((mask_chunk.astype(jnp.uint32) >> tile_bit) & 1) > 0
-        a = jnp.where(keep[None, :], a, 0.0)
+        stream = keep & (fc[F_VALID] > 0.5)
+        if tile_capacity is not None:
+            # Virtual FIFO clamp: position of each streamed entry in this
+            # tile's compaction list; entries past the capacity are dropped,
+            # exactly like the reference compaction clamp.
+            pos = kept + jnp.cumsum(stream.astype(jnp.int32)) - 1
+            kept = kept + jnp.sum(stream.astype(jnp.int32))
+            stream = stream & (pos < tile_capacity)
+        valid_entry = valid_entry & stream
+        a = jnp.where(stream[None, :], a, 0.0)
 
     one_m = 1.0 - a
     cp = jnp.cumprod(one_m, axis=1)
     excl = jnp.concatenate([jnp.ones_like(cp[:, :1]), cp[:, :-1]], axis=1)
     t_before = t_run[:, None] * excl
-    w = jnp.where(t_before > T_EPS, a * t_before, 0.0)
+    if early_exit:
+        live = t_before > T_EPS
+        w = jnp.where(live, a * t_before, 0.0)
+    else:
+        live = jnp.ones_like(t_before, dtype=jnp.bool_)
+        w = a * t_before
     rgb_acc = rgb_acc + jnp.stack(
         [w @ cr, w @ cg, w @ cbl], axis=0
     )  # (3, P)
     t_run = t_run * cp[:, -1]
-    return t_run, rgb_acc
+    a_ops = a_ops + jnp.sum(
+        (live & valid_entry[None, :]).astype(jnp.int32)
+    )
+    b_ops = b_ops + jnp.sum((w > 0.0).astype(jnp.int32))
+    return t_run, rgb_acc, a_ops, b_ops, kept
 
 
-def _raster_body(feat_ref, out_ref, *, tile_px, n_chunks, chunk,
-                 pix_x, pix_y, mask_ref=None, tile_bit_fn=None):
+def _raster_body(feat_ref, out_ref, counts_ref, *, tile_px, n_chunks, chunk,
+                 pix_x, pix_y, early_exit=True, mask_ref=None,
+                 tile_bit_fn=None, tile_capacity=None):
     P = tile_px * tile_px
     feat = feat_ref[0]  # (F, K)
     mask = mask_ref[0] if mask_ref is not None else None
@@ -90,25 +129,38 @@ def _raster_body(feat_ref, out_ref, *, tile_px, n_chunks, chunk,
 
     def body(i, carry):
         def live_fn(c):
-            t, acc = c
             fc = jax.lax.dynamic_slice_in_dim(feat, i * chunk, chunk, axis=1)
             mc = (
                 jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=0)
                 if mask is not None
                 else None
             )
-            return _blend_chunk(fc, pix_x, pix_y, t, acc, mc, tile_bit)
+            return _blend_chunk(
+                fc, pix_x, pix_y, c,
+                early_exit=early_exit,
+                mask_chunk=mc,
+                tile_bit=tile_bit,
+                tile_capacity=tile_capacity,
+            )
 
+        if not early_exit:
+            return live_fn(carry)
         # Block-granular early exit: skip the chunk when all pixels are dead.
         return jax.lax.cond(
             jnp.any(carry[0] > T_EPS), live_fn, lambda c: c, carry
         )
 
-    t_run = jnp.ones((P,), jnp.float32)
-    rgb_acc = jnp.zeros((3, P), jnp.float32)
-    t_run, rgb_acc = jax.lax.fori_loop(0, n_chunks, body, (t_run, rgb_acc))
+    carry = (
+        jnp.ones((P,), jnp.float32),
+        jnp.zeros((3, P), jnp.float32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+    )
+    t_run, rgb_acc, a_ops, b_ops, _ = jax.lax.fori_loop(0, n_chunks, body, carry)
     result = jnp.concatenate([rgb_acc, t_run[None, :]], axis=0)  # (4, P)
     out_ref[...] = result.reshape(out_ref.shape)
+    counts_ref[...] = jnp.stack([a_ops, b_ops]).reshape(counts_ref.shape)
 
 
 def _pixel_coords(tile_px: int):
@@ -126,37 +178,52 @@ def raster_tile_kernel(
     tile_px: int,
     chunk: int = 128,
     interpret: bool = True,
-) -> jnp.ndarray:
-    """Returns (num_tiles, 4, tile_px^2): rgb + final transmittance."""
+    early_exit: bool = True,
+    with_stats: bool = False,
+):
+    """Returns (num_tiles, 4, tile_px^2): rgb + final transmittance.
+
+    With ``with_stats=True`` also returns (num_tiles, 2) int32
+    (alpha_ops, blend_ops) per tile.
+    """
     num_tiles, F, K = feat.shape
     assert F == NUM_FEATURES and K % chunk == 0
     P = tile_px * tile_px
 
-    def kernel(origin_ref, feat_ref, out_ref):
+    def kernel(origin_ref, feat_ref, out_ref, counts_ref):
         ox = origin_ref[0, 0]
         oy = origin_ref[0, 1]
         dx, dy = _pixel_coords(tile_px)
         _raster_body(
             feat_ref,
             out_ref,
+            counts_ref,
             tile_px=tile_px,
             n_chunks=K // chunk,
             chunk=chunk,
             pix_x=ox + dx,
             pix_y=oy + dy,
+            early_exit=early_exit,
         )
 
-    return pl.pallas_call(
+    out, counts = pl.pallas_call(
         kernel,
         grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec((1, 2), lambda t: (t, 0)),
             pl.BlockSpec((1, F, K), lambda t: (t, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 4, P), lambda t: (t, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_tiles, 4, P), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, 4, P), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, 2), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_tiles, 4, P), jnp.float32),
+            jax.ShapeDtypeStruct((num_tiles, 2), jnp.int32),
+        ],
         interpret=interpret,
     )(tile_origin, feat)
+    return (out, counts) if with_stats else out
 
 
 def raster_group_fused_kernel(
@@ -167,35 +234,41 @@ def raster_group_fused_kernel(
     gf: int,                    # tiles per group side
     chunk: int = 128,
     interpret: bool = True,
-) -> jnp.ndarray:
-    """Fused GS-TG RM. Returns (num_groups, gf*gf, 4, tile_px^2)."""
+    early_exit: bool = True,
+    tile_capacity: int | None = None,
+    with_stats: bool = False,
+):
+    """Fused GS-TG RM. Returns (num_groups, gf*gf, 4, tile_px^2).
+
+    With ``with_stats=True`` also returns (num_groups, gf*gf, 2) int32
+    (alpha_ops, blend_ops) per member tile.
+    """
     num_groups, F, K = feat.shape
     assert F == NUM_FEATURES and K % chunk == 0
     P = tile_px * tile_px
     tpg = gf * gf
 
-    def kernel(origin_ref, feat_ref, mask_ref, out_ref):
+    def kernel(origin_ref, feat_ref, mask_ref, out_ref, counts_ref):
         slot = pl.program_id(1)
         ox = origin_ref[0, 0] + (slot % gf).astype(jnp.float32) * tile_px
         oy = origin_ref[0, 1] + (slot // gf).astype(jnp.float32) * tile_px
         dx, dy = _pixel_coords(tile_px)
+        _raster_body(
+            feat_ref,
+            out_ref,
+            counts_ref,
+            tile_px=tile_px,
+            n_chunks=K // chunk,
+            chunk=chunk,
+            pix_x=ox + dx,
+            pix_y=oy + dy,
+            early_exit=early_exit,
+            mask_ref=mask_ref,
+            tile_bit_fn=lambda: slot.astype(jnp.uint32),
+            tile_capacity=tile_capacity,
+        )
 
-        def out_write(feat_ref_, out_ref_):
-            _raster_body(
-                feat_ref_,
-                out_ref_,
-                tile_px=tile_px,
-                n_chunks=K // chunk,
-                chunk=chunk,
-                pix_x=ox + dx,
-                pix_y=oy + dy,
-                mask_ref=mask_ref,
-                tile_bit_fn=lambda: slot.astype(jnp.uint32),
-            )
-
-        out_write(feat_ref, out_ref)
-
-    out = pl.pallas_call(
+    out, counts = pl.pallas_call(
         kernel,
         grid=(num_groups, tpg),
         in_specs=[
@@ -203,8 +276,14 @@ def raster_group_fused_kernel(
             pl.BlockSpec((1, F, K), lambda g, s: (g, 0, 0)),
             pl.BlockSpec((1, K), lambda g, s: (g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 4, P), lambda g, s: (g, s, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_groups, tpg, 4, P), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, 1, 4, P), lambda g, s: (g, s, 0, 0)),
+            pl.BlockSpec((1, 1, 2), lambda g, s: (g, s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_groups, tpg, 4, P), jnp.float32),
+            jax.ShapeDtypeStruct((num_groups, tpg, 2), jnp.int32),
+        ],
         interpret=interpret,
     )(group_origin, feat, masks)
-    return out
+    return (out, counts) if with_stats else out

@@ -2,18 +2,24 @@
 tile-grouping pipeline, report stats + cost-model projections.
 
   PYTHONPATH=src python -m repro.launch.render --scene train --mode gstg
+  PYTHONPATH=src python -m repro.launch.render --scene train --backend pallas
+
+Either backend goes through the SAME jit-cached engine entry (render_jit):
+one render produces both the image and the RenderStats that feed the
+accelerator cost model — the Pallas path no longer re-runs the reference
+pipeline for its counters.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import jax
 import numpy as np
 
 from benchmarks.common import scene_and_camera
 from repro.core.cost_model import GSTG_ASIC, estimate
-from repro.core.pipeline import RenderConfig, render
+from repro.core.pipeline import RenderConfig, render_jit
 
 
 def main():
@@ -25,35 +31,42 @@ def main():
     ap.add_argument("--group", type=int, default=64)
     ap.add_argument("--boundary-group", default="ellipse")
     ap.add_argument("--boundary-tile", default="ellipse")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="stage implementation the engine dispatches to")
     ap.add_argument("--use-kernels", action="store_true",
-                    help="route BGM + fused RM through the Pallas kernels")
+                    help="deprecated alias for --backend pallas")
     ap.add_argument("--gaussians", type=int, default=None)
+    ap.add_argument("--width", type=int, default=None,
+                    help="override camera width (smoke renders)")
+    ap.add_argument("--height", type=int, default=None,
+                    help="override camera height (smoke renders)")
+    ap.add_argument("--capacity", type=int, default=1024,
+                    help="group/tile table capacity")
     args = ap.parse_args()
 
-    scene, cam = scene_and_camera(args.scene, args.gaussians)
+    backend = "pallas" if args.use_kernels else args.backend
+    scene, cam = scene_and_camera(
+        args.scene, args.gaussians, width=args.width, height=args.height
+    )
     cfg = RenderConfig(
         mode=args.mode,
         tile=args.tile,
         group=args.group,
         boundary_group=args.boundary_group,
         boundary_tile=args.boundary_tile,
-        tile_capacity=1024,
-        group_capacity=1024,
+        tile_capacity=args.capacity,
+        group_capacity=args.capacity,
         span=6,
+        backend=backend,
     )
     t0 = time.time()
-    if args.use_kernels:
-        from repro.kernels.ops import kernel_render
-
-        img, _ = kernel_render(scene, cam, cfg)
-        stats = render(scene, cam, cfg).stats  # counters from the ref path
-    else:
-        out = render(scene, cam, cfg)
-        img, stats = out.image, out.stats
+    out = render_jit(scene, cam, cfg)  # ONE render: image + stats, any backend
+    img, stats = np.asarray(out.image), out.stats
     dt = time.time() - t0
 
-    img = np.asarray(img)
-    print(f"scene={args.scene} mode={args.mode} {img.shape} in {dt:.2f}s")
+    print(f"scene={args.scene} mode={args.mode} backend={backend} "
+          f"{img.shape} in {dt:.2f}s")
     print(f"  visible gaussians : {int(stats.n_visible)}")
     print(f"  sort keys         : {int(stats.n_pairs_sort)}")
     print(f"  alpha ops         : {int(stats.alpha_ops)}")
@@ -68,9 +81,7 @@ def main():
           f"bgm={cost.bitmask_s*1e3:.3f} raster={cost.raster_s*1e3:.3f} "
           f"dram={cost.dram_s*1e3:.3f})  energy={cost.energy_j*1e3:.2f}mJ")
     # save a PPM for quick eyeballing (no image deps offline)
-    out_path = f"results/render_{args.scene}_{args.mode}.ppm"
-    import os
-
+    out_path = f"results/render_{args.scene}_{args.mode}_{backend}.ppm"
     os.makedirs("results", exist_ok=True)
     with open(out_path, "wb") as f:
         h, w, _ = img.shape

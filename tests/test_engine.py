@@ -1,0 +1,134 @@
+"""The unified engine: backend dispatch parity + batched multi-camera entry.
+
+Backend parity is the cross-backend losslessness contract (DESIGN.md §6):
+the pallas stage implementations must produce the same images (to fp
+reassociation of chunk boundaries) and IDENTICAL integer counters as the
+reference stages, through the same render() entry.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_camera, orbit_cameras
+from repro.core.pipeline import (
+    CameraBatch,
+    RenderConfig,
+    render,
+    render_batch,
+    render_cache_info,
+    render_jit,
+)
+from repro.core.stages import get_backend
+
+INT_COUNTERS = (
+    "n_visible",
+    "n_candidate_tests",
+    "n_pairs_sort",
+    "sort_ops",
+    "n_bit_tests",
+    "fifo_ops",
+    "alpha_ops",
+    "blend_ops",
+    "tile_entries",
+    "overflow",
+    "span_overflow",
+)
+
+
+def _assert_stats_identical(a, b):
+    for name in INT_COUNTERS:
+        va, vb = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert (va == vb).all(), f"counter {name}: reference={va} pallas={vb}"
+
+
+@pytest.mark.parametrize("mode", ["gstg", "tile_baseline", "group_baseline"])
+def test_backend_parity(small_scene, cam128, base_cfg, mode):
+    """reference vs pallas through the SAME render() entry: allclose images,
+    identical counters (incl. tile_entries/overflow)."""
+    cfg = dataclasses.replace(base_cfg, mode=mode)
+    ref = render(small_scene, cam128, cfg)
+    pal = render(small_scene, cam128, dataclasses.replace(cfg, backend="pallas"))
+    np.testing.assert_allclose(
+        np.asarray(pal.image), np.asarray(ref.image), atol=5e-6, rtol=1e-5
+    )
+    _assert_stats_identical(ref.stats, pal.stats)
+    assert int(pal.stats.alpha_ops) > 0  # stats actually populated
+
+
+def test_backend_parity_options(small_scene, cam128, base_cfg):
+    """pallas honors background, early_exit=False, odd chunk, tight capacity."""
+    bg = jnp.array([0.25, 0.1, 0.4], jnp.float32)
+    cfg = dataclasses.replace(
+        base_cfg, early_exit=False, chunk=48, tile_capacity=64
+    )
+    ref = render(small_scene, cam128, cfg, background=bg)
+    pal = render(
+        small_scene, cam128, dataclasses.replace(cfg, backend="pallas"),
+        background=bg,
+    )
+    np.testing.assert_allclose(
+        np.asarray(pal.image), np.asarray(ref.image), atol=5e-6, rtol=1e-5
+    )
+    _assert_stats_identical(ref.stats, pal.stats)
+
+
+def test_unknown_backend_raises(small_scene, cam128, base_cfg):
+    with pytest.raises(ValueError, match="unknown backend"):
+        render(small_scene, cam128, dataclasses.replace(base_cfg, backend="cuda"))
+    assert get_backend("pallas").name == "pallas"
+
+
+def test_render_batch_matches_loop(small_scene, base_cfg):
+    cams = orbit_cameras(3, 4.5, 128, 128)
+    out = render_batch(small_scene, cams, base_cfg)
+    assert out.image.shape == (3, 128, 128, 3)
+    for i, cam in enumerate(cams):
+        one = render(small_scene, cam, base_cfg)
+        np.testing.assert_allclose(
+            np.asarray(out.image[i]), np.asarray(one.image), atol=1e-6, rtol=1e-6
+        )
+        for name in INT_COUNTERS:
+            assert int(np.asarray(getattr(out.stats, name))[i]) == int(
+                getattr(one.stats, name)
+            ), f"batched counter {name} diverges for camera {i}"
+
+
+def test_render_batch_rejects_mixed_geometry(small_scene):
+    cams = [
+        make_camera((0, 1, 4.5), (0, 0, 0), 128, 128),
+        make_camera((0, 1, 4.5), (0, 0, 0), 256, 128),
+    ]
+    with pytest.raises(ValueError, match="batch"):
+        CameraBatch.from_cameras(cams)
+
+
+def test_render_batch_jit_cache(small_scene, base_cfg):
+    """Second call with an equal (distinct-instance) config and same geometry
+    reuses the compiled renderer."""
+    cams = CameraBatch.from_cameras(orbit_cameras(2, 4.5, 128, 128))
+    render_batch(small_scene, cams, base_cfg)
+    _, before = render_cache_info()
+    cfg_again = dataclasses.replace(base_cfg)  # equal by value, new instance
+    assert cfg_again is not base_cfg
+    render_batch(small_scene, cams, cfg_again)
+    _, after = render_cache_info()
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses
+
+
+def test_render_jit_single_camera_cache(small_scene, base_cfg):
+    """render_jit shares one executable across cameras of equal resolution."""
+    cam_a = make_camera((0, 1.0, 4.5), (0, 0, 0), 128, 128)
+    cam_b = make_camera((1.5, 0.8, 4.0), (0, 0, 0), 128, 128)
+    render_jit(small_scene, cam_a, base_cfg)
+    before, _ = render_cache_info()
+    out = render_jit(small_scene, cam_b, base_cfg)
+    after, _ = render_cache_info()
+    assert after.hits == before.hits + 1
+    eager = render(small_scene, cam_b, base_cfg)
+    np.testing.assert_allclose(
+        np.asarray(out.image), np.asarray(eager.image), atol=1e-6, rtol=1e-6
+    )

@@ -55,12 +55,14 @@ def test_fused_kernel_vs_oracle(gf):
 
 
 def test_kernel_pipeline_matches_core():
-    """End-to-end: kernel renderer == reference renderer (both GS-TG)."""
+    """End-to-end: pallas backend == reference backend through render()."""
+    import dataclasses
+
     scene = random_scene(jax.random.key(5), 900, extent=3.0)
     cam = make_camera((0, 1.0, 4.5), (0, 0, 0), 128, 128)
     cfg = RenderConfig(group_capacity=512, tile_capacity=512)
     ref_img = render(scene, cam, cfg).image
-    img, _ = ops.kernel_render(scene, cam, cfg, interpret=True)
+    img = render(scene, cam, dataclasses.replace(cfg, backend="pallas")).image
     np.testing.assert_allclose(
         np.asarray(img), np.asarray(ref_img), atol=5e-6, rtol=1e-5
     )

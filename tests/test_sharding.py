@@ -33,8 +33,8 @@ batch = {"tokens": jnp.ones((8, 32), jnp.int32),
 l1 = float(loss_fn(cfg, params, batch, lambda x, a: x)[0])
 
 # 2x4 mesh
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(2, 4)
 constrain = make_constrain(cfg, mesh)
 with mesh:
     l2 = float(jax.jit(lambda p, b: loss_fn(cfg, p, b, constrain)[0])(params, batch))
@@ -60,12 +60,11 @@ def test_sharded_loss_matches_single_device():
 
 
 def test_param_rules_divisibility_checks():
-    import jax
     from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
     from repro.sharding.policies import param_rules
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh(1, 1)
     # all production configs must build rules against the 16-wide model axis;
     # emulate by checking the declared dims directly
     for name in ("qwen1.5-110b", "kimi-k2-1t-a32b", "jamba-1.5-large-398b"):
