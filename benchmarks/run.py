@@ -21,6 +21,7 @@ def main() -> None:
         bench_boundaries,
         bench_groupsize,
         bench_render_walltime,
+        bench_serving,
         bench_sharing,
         bench_stages,
         bench_tilesize,
@@ -35,6 +36,7 @@ def main() -> None:
         ("fig13_stages", bench_stages.run),
         ("fig1415_accel", bench_accel.run),
         ("render_walltime", bench_render_walltime.run),
+        ("serving", bench_serving.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

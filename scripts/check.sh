@@ -20,8 +20,16 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 SMOKE="--scene train --gaussians 1200 --width 256 --height 192 --capacity 256"
 echo "== smoke render: reference backend =="
-python -m repro.launch.render $SMOKE --backend reference
+python -m repro.launch.render $SMOKE --backend reference --stats
 echo "== smoke render: pallas backend =="
-python -m repro.launch.render $SMOKE --backend pallas
+python -m repro.launch.render $SMOKE --backend pallas --stats
+
+# Serving smoke: a small synthetic load through queue -> bucketing -> sharded
+# dispatch; render_serve exits non-zero unless every request completes and
+# p99 latency is finite.
+echo "== smoke serve: reference backend =="
+python -m repro.launch.render_serve --backend reference \
+    --requests 8 --rate 200 --gaussians 600 --scenes train \
+    --resolutions 96x96,128x96 --max-batch 4 --max-wait 0.05
 
 echo "check.sh: OK"

@@ -5,8 +5,11 @@ from repro.core.pipeline import (
     CameraBatch,
     RenderConfig,
     RenderResult,
+    batch_signature,
     render,
     render_batch,
+    render_cache_clear,
+    render_cache_info,
     render_image,
     render_jit,
 )
@@ -23,8 +26,11 @@ __all__ = [
     "GridSpec",
     "RenderConfig",
     "RenderResult",
+    "batch_signature",
     "render",
     "render_batch",
+    "render_cache_clear",
+    "render_cache_info",
     "render_image",
     "render_jit",
     "Projected",

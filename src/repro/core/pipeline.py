@@ -279,9 +279,16 @@ class CameraBatch:
     def __len__(self) -> int:
         return int(self.R.shape[0])
 
-    def signature(self):
-        """The static part of the batch: what the compiled fn specializes on."""
-        return (self.width, self.height, self.znear, self.zfar)
+
+def batch_signature(cfg: RenderConfig, cam) -> tuple:
+    """The full static jit signature for one (config, camera-geometry) pair.
+
+    Accepts a ``Camera`` or a ``CameraBatch`` (anything with width/height/
+    znear/zfar). Two renders hit the SAME cached executable iff their
+    signatures are equal — this is the key the serving bucketer groups
+    requests by (serving/bucketing.py) and the key of the lru caches below.
+    """
+    return (cfg, cam.width, cam.height, cam.znear, cam.zfar)
 
 
 jax.tree_util.register_dataclass(
@@ -330,10 +337,27 @@ def render_cache_clear() -> None:
     _single_renderer.cache_clear()
 
 
-def render_cache_info():
-    """(single, batch) lru cache statistics — used by tests/benchmarks to
-    assert the second call with the same static signature reuses the jit."""
-    return _single_renderer.cache_info(), _batch_renderer.cache_info()
+def _info_dict(info) -> dict:
+    return {
+        "hits": info.hits,
+        "misses": info.misses,
+        "currsize": info.currsize,
+        "maxsize": info.maxsize,
+    }
+
+
+def render_cache_info() -> dict:
+    """Executable-cache statistics as plain dicts.
+
+    ``{"single": {hits, misses, currsize, maxsize}, "batch": {...}}`` — used
+    by tests/benchmarks to assert signature reuse, by ``launch/render.py
+    --stats``, and by the serving stats (serving/stats.py) so the CLI and the
+    server report cache hits in the same units.
+    """
+    return {
+        "single": _info_dict(_single_renderer.cache_info()),
+        "batch": _info_dict(_batch_renderer.cache_info()),
+    }
 
 
 def _background_array(background) -> jnp.ndarray:
@@ -354,7 +378,7 @@ def render_jit(
     same resolution reuse one compiled executable (pose/intrinsics are traced
     arguments, not closure constants).
     """
-    fn = _single_renderer(cfg, cam.width, cam.height, cam.znear, cam.zfar)
+    fn = _single_renderer(*batch_signature(cfg, cam))
     return fn(
         scene,
         jnp.asarray(cam.R), jnp.asarray(cam.t),
@@ -377,7 +401,7 @@ def render_batch(
     across frames — the batching prerequisite named in the ROADMAP.
     """
     batch = cams if isinstance(cams, CameraBatch) else CameraBatch.from_cameras(cams)
-    fn = _batch_renderer(cfg, *batch.signature())
+    fn = _batch_renderer(*batch_signature(cfg, batch))
     return fn(
         scene,
         batch.R, batch.t, batch.fx, batch.fy, batch.cx, batch.cy,

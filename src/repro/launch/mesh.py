@@ -30,3 +30,16 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh(
         (data, model), ("data", "model"), **_axis_type_kwargs(2)
     )
+
+
+def make_render_mesh(devices: int | None = None):
+    """1-D ('data',) mesh for camera-batch sharding (serving/sharded.py).
+
+    Rendering is embarrassingly parallel over the camera axis, so the render
+    serving tier uses a pure-DP mesh: ``devices=None`` takes every local
+    device (the single-host serving deployment); an explicit count takes a
+    prefix (tests pin 1)."""
+    n = len(jax.devices()) if devices is None else devices
+    if n <= 0:
+        raise ValueError(f"render mesh needs >= 1 device, got {n}")
+    return jax.make_mesh((n,), ("data",), **_axis_type_kwargs(1))

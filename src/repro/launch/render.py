@@ -19,7 +19,7 @@ import numpy as np
 
 from benchmarks.common import scene_and_camera
 from repro.core.cost_model import GSTG_ASIC, estimate
-from repro.core.pipeline import RenderConfig, render_jit
+from repro.core.pipeline import RenderConfig, render_cache_info, render_jit
 
 
 def main():
@@ -43,6 +43,8 @@ def main():
                     help="override camera height (smoke renders)")
     ap.add_argument("--capacity", type=int, default=1024,
                     help="group/tile table capacity")
+    ap.add_argument("--stats", action="store_true",
+                    help="print executable-cache statistics after the render")
     args = ap.parse_args()
 
     backend = "pallas" if args.use_kernels else args.backend
@@ -80,6 +82,11 @@ def main():
           f"(pre={cost.preprocess_s*1e3:.3f} sort={cost.sort_s*1e3:.3f} "
           f"bgm={cost.bitmask_s*1e3:.3f} raster={cost.raster_s*1e3:.3f} "
           f"dram={cost.dram_s*1e3:.3f})  energy={cost.energy_j*1e3:.2f}mJ")
+    if args.stats:
+        for kind, info in render_cache_info().items():
+            print(f"  jit cache [{kind:6s}] : hits={info['hits']} "
+                  f"misses={info['misses']} currsize={info['currsize']}/"
+                  f"{info['maxsize']}")
     # save a PPM for quick eyeballing (no image deps offline)
     out_path = f"results/render_{args.scene}_{args.mode}_{backend}.ppm"
     os.makedirs("results", exist_ok=True)

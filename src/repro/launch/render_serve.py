@@ -1,0 +1,164 @@
+"""Render-serving driver: synthetic Poisson load through the RenderServer.
+
+  PYTHONPATH=src python -m repro.launch.render_serve --requests 32 --rate 60
+  PYTHONPATH=src python -m repro.launch.render_serve --backend pallas --devices 2
+
+Generates an open-loop Poisson arrival stream over a mix of scenes and
+resolutions (so the bucketer has real work to do), replays it through
+queue -> bucketing -> sharded dispatch, and reports per-bucket latency,
+throughput, and executable-cache counters. ``--devices N`` on CPU forces N
+virtual host devices (XLA flag set BEFORE jax initializes — which is why the
+arg parsing below happens before any repro/jax import) so the sharded path
+is exercisable on a laptop.
+
+Exits non-zero if any request was lost or p99 is not finite — the CI smoke
+in scripts/check.sh relies on this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"])
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard dispatches over N devices (CPU: forces N "
+                         "virtual host devices; must run before jax init)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=60.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--scenes", default="train,truck",
+                    help="comma-separated scene ids to serve")
+    ap.add_argument("--gaussians", type=int, default=1500,
+                    help="gaussians per synthetic scene")
+    ap.add_argument("--resolutions", default="128x128,192x128",
+                    help="comma-separated WxH mix; each request draws one "
+                         "(each distinct resolution is its own bucket)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait", type=float, default=0.05,
+                    help="bucket flush deadline (s)")
+    ap.add_argument("--queue-depth", type=int, default=128)
+    ap.add_argument("--mode", default="gstg",
+                    choices=["gstg", "tile_baseline", "group_baseline"])
+    ap.add_argument("--capacity", type=int, default=512)
+    ap.add_argument("--no-realtime", action="store_true",
+                    help="replay arrivals as fast as possible (throughput mode)")
+    ap.add_argument("--trace-json", default=None,
+                    help="write the full stats summary + per-request records")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def _parse_resolutions(spec: str):
+    out = []
+    for item in spec.split(","):
+        w, h = item.lower().split("x")
+        out.append((int(w), int(h)))
+    return out
+
+
+def main(argv=None):
+    args = parse_args(argv)
+
+    # Virtual host devices must be configured before jax touches the backend.
+    if args.devices and args.devices > 1 and "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={args.devices}"
+            ).strip()
+
+    import jax
+    import numpy as np
+
+    from repro.core.camera import orbit_cameras
+    from repro.core.gaussians import scene_like_paper
+    from repro.core.pipeline import RenderConfig
+    from repro.launch.mesh import make_render_mesh
+    from repro.serving.queue import RenderRequest
+    from repro.serving.server import RenderServer, poisson_arrivals
+
+    n_dev = len(jax.devices())
+    use_dev = min(args.devices or n_dev, n_dev)
+    if args.devices and args.devices > n_dev:
+        print(f"warning: requested {args.devices} devices, have {n_dev}")
+    mesh = make_render_mesh(use_dev)
+
+    scene_ids = [s.strip() for s in args.scenes.split(",") if s.strip()]
+    scenes = {
+        sid: scene_like_paper(jax.random.key(i), sid, args.gaussians)
+        for i, sid in enumerate(scene_ids)
+    }
+    cfg = RenderConfig(
+        mode=args.mode,
+        backend=args.backend,
+        group_capacity=args.capacity,
+        tile_capacity=args.capacity,
+        span=6,
+    )
+
+    # Camera pools per resolution: orbit viewpoints, drawn round-robin per
+    # request so repeated signatures exercise the executable cache.
+    resolutions = _parse_resolutions(args.resolutions)
+    pools = {(w, h): orbit_cameras(16, 4.5, w, h) for w, h in resolutions}
+
+    rng = np.random.default_rng(args.seed)
+    offsets = poisson_arrivals(args.requests, args.rate, seed=args.seed)
+    load = []
+    for i, t in enumerate(offsets):
+        res = resolutions[rng.integers(len(resolutions))]
+        sid = scene_ids[rng.integers(len(scene_ids))]
+        cam = pools[res][i % len(pools[res])]
+        load.append((t, RenderRequest(i, sid, cam, cfg)))
+
+    server = RenderServer(
+        scenes,
+        mesh=mesh,
+        max_batch=args.max_batch,
+        max_wait=args.max_wait,
+        queue_depth=args.queue_depth,
+    )
+    print(f"serving {args.requests} requests @ {args.rate:.0f} req/s "
+          f"({len(scene_ids)} scenes x {len(resolutions)} resolutions, "
+          f"backend={args.backend}, devices={use_dev})")
+    results = server.run(load, realtime=not args.no_realtime)
+    print(server.stats.format())
+
+    if args.trace_json:
+        trace = {
+            "config": vars(args),
+            "devices": use_dev,
+            **server.stats.summary(),
+            "requests": [
+                {
+                    "request_id": r.request_id,
+                    "latency_ms": r.latency_s * 1e3,
+                    "batch_size": r.batch_size,
+                    "signature": repr(r.signature),
+                    "deadline_missed": r.deadline_missed,
+                }
+                for r in sorted(results.values(), key=lambda r: r.request_id)
+            ],
+        }
+        with open(args.trace_json, "w") as f:
+            json.dump(trace, f, indent=2)
+        print(f"wrote {args.trace_json}")
+
+    # CI assertions: nothing lost, latency distribution sane.
+    lost = args.requests - len(results) - server.stats.rejected
+    p99 = server.stats.summary()["p99_ms"]
+    ok = lost == 0 and len(results) > 0 and math.isfinite(p99)
+    print(f"render_serve: {'OK' if ok else 'FAILED'} "
+          f"(completed={len(results)}/{args.requests}, "
+          f"rejected={server.stats.rejected}, lost={lost}, p99={p99:.1f}ms)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

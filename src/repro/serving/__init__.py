@@ -1,0 +1,50 @@
+"""Render-serving subsystem: queue -> bucketing -> sharded dispatch.
+
+Layering (DESIGN.md §9): ``queue``, ``bucketing`` and ``stats`` are pure
+Python (no jax) so the admission/scheduling layer imports and tests anywhere;
+``sharded`` and ``server`` touch jax and are therefore re-exported lazily —
+importing ``repro.serving`` (or any pure module) must not initialize device
+state.
+"""
+from repro.serving.bucketing import (
+    Bucket,
+    BucketingScheduler,
+    pad_indices,
+    pad_indices_to,
+    padded_size,
+)
+from repro.serving.queue import QueueClosed, QueueFull, RenderRequest, RequestQueue
+from repro.serving.stats import BucketStats, ServingStats, cache_delta, percentile
+
+_LAZY = {
+    "render_batch_sharded": "repro.serving.sharded",
+    "pad_camera_batch": "repro.serving.sharded",
+    "RenderServer": "repro.serving.server",
+    "RequestResult": "repro.serving.server",
+    "poisson_arrivals": "repro.serving.server",
+}
+
+__all__ = [
+    "Bucket",
+    "BucketingScheduler",
+    "BucketStats",
+    "QueueClosed",
+    "QueueFull",
+    "RenderRequest",
+    "RequestQueue",
+    "ServingStats",
+    "cache_delta",
+    "pad_indices",
+    "pad_indices_to",
+    "padded_size",
+    "percentile",
+    *sorted(_LAZY),
+]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,233 @@
+"""The render server: queue -> bucketer -> sharded dispatch (DESIGN.md §9).
+
+Single driver loop, three stages:
+
+  submit() --> RequestQueue --> BucketingScheduler --> _dispatch()
+   (bounded, backpressure)      (one bucket per jit       (render_batch_sharded,
+                                 signature; max-batch /    ONE cached executable
+                                 max-wait flush)           per bucket signature)
+
+The loop is synchronous and single-threaded on the dispatch side — device
+work is serialized anyway, and keeping scheduling single-threaded makes the
+latency accounting exact. Producers may submit from other threads (the queue
+is the thread-safe boundary) or inline via ``run(load)`` which replays a
+timed load (e.g. ``poisson_arrivals``) in real time.
+
+Every completed request yields a ``RequestResult`` with the rendered image
+(host numpy), its end-to-end latency, and the bucket it rode in;
+``RenderServer.stats`` aggregates per-bucket latency/throughput/cache-hit
+counters (serving/stats.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.gaussians import GaussianScene
+from repro.core.pipeline import CameraBatch, render_cache_info
+from repro.serving.bucketing import Bucket, BucketingScheduler, padded_size
+from repro.serving.queue import RenderRequest, RequestQueue
+from repro.serving.sharded import render_batch_sharded
+from repro.serving.stats import ServingStats
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request_id: int
+    image: np.ndarray            # (H, W, 3) host copy
+    latency_s: float             # completion - enqueue (queue + batch + render)
+    batch_size: int              # how many requests shared the dispatch
+    signature: tuple
+    deadline_missed: bool = False
+
+
+class RenderServer:
+    """Serves render requests against a registry of scenes.
+
+    ``mesh=None`` shards each dispatch over all local devices (1-D mesh,
+    built lazily on first dispatch so constructing a server never touches
+    device state).
+    """
+
+    def __init__(
+        self,
+        scenes: Mapping[str, GaussianScene],
+        *,
+        mesh=None,
+        max_batch: int = 8,
+        max_wait: float = 0.05,
+        queue_depth: int = 64,
+        clock=time.monotonic,
+    ):
+        self.scenes = dict(scenes)
+        self._mesh = mesh
+        self._clock = clock
+        self.queue = RequestQueue(queue_depth, clock=clock)
+        self.scheduler = BucketingScheduler(max_batch, max_wait, clock=clock)
+        self.stats = ServingStats()
+        self.results: Dict[int, RequestResult] = {}
+        self._committed: Dict[str, GaussianScene] = {}
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_render_mesh
+
+            self._mesh = make_render_mesh()
+        return self._mesh
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: RenderRequest) -> bool:
+        """Non-blocking admission; False = backpressure (queue at depth).
+        Raises KeyError for an unknown scene (a caller bug, not load)."""
+        if req.scene_id not in self.scenes:
+            raise KeyError(f"unknown scene {req.scene_id!r}")
+        ok = self.queue.try_put(req)
+        if not ok:
+            self.stats.count_rejected()
+        return ok
+
+    # -- scheduling / dispatch ----------------------------------------------
+
+    def _pump_queue(self, now: Optional[float] = None) -> int:
+        """Drain the queue into buckets, dispatching any bucket that fills
+        to max_batch (partial buckets keep waiting)."""
+        n = 0
+        for req in self.queue.drain():
+            for bucket in self.scheduler.add(req, now):
+                self._dispatch(bucket)
+                n += 1
+        return n
+
+    def step(self, now: Optional[float] = None) -> int:
+        """One scheduler turn: pump the queue, then dispatch buckets past
+        max_wait. Returns the number of dispatches."""
+        n = self._pump_queue(now)
+        for bucket in self.scheduler.poll(now):
+            self._dispatch(bucket)
+            n += 1
+        return n
+
+    def drain(self) -> None:
+        """Flush everything pending (shutdown path): remaining queue items
+        are bucketed and every bucket dispatches regardless of age."""
+        while len(self.queue) or self.scheduler.pending:
+            self._pump_queue()
+            for bucket in self.scheduler.flush_all():
+                self._dispatch(bucket)
+
+    def _scene_on_mesh(self, scene_id: str) -> GaussianScene:
+        """Scene committed (replicated) to the mesh ONCE; every dispatch then
+        reuses the device copy instead of re-transferring it."""
+        if scene_id not in self._committed:
+            import jax
+            from jax.sharding import NamedSharding
+
+            from repro.sharding.policies import render_replicated_pspec
+
+            self._committed[scene_id] = jax.device_put(
+                self.scenes[scene_id],
+                NamedSharding(self.mesh, render_replicated_pspec()),
+            )
+        return self._committed[scene_id]
+
+    def _dispatch(self, bucket: Bucket) -> None:
+        reqs = bucket.requests
+        scene = self._scene_on_mesh(reqs[0].scene_id)
+        cfg = reqs[0].cfg
+        batch = CameraBatch.from_cameras([r.camera for r in reqs])
+        # Fixed dispatch shape: every bucket of a signature pads to
+        # max_batch (rounded to the device count), so ragged max_wait
+        # flushes reuse the ONE compiled program instead of tracing a new
+        # shape (DESIGN.md §9 invariant).
+        shape = padded_size(self.scheduler.max_batch, self.mesh.size)
+
+        before = render_cache_info()
+        t0 = self._clock()
+        out = render_batch_sharded(
+            scene, batch, cfg, mesh=self.mesh, pad_to=shape
+        )
+        images = np.asarray(out.image)   # blocks until device work completes
+        t1 = self._clock()
+        after = render_cache_info()
+
+        latencies = [t1 - r.enqueue_time for r in reqs]
+        self.stats.record_dispatch(
+            bucket.signature,
+            batch_size=len(reqs),
+            padded_size=shape,
+            render_s=t1 - t0,
+            latencies_s=latencies,
+            cache_before=before,
+            cache_after=after,
+        )
+        for req, img, lat in zip(reqs, images, latencies):
+            missed = req.deadline is not None and t1 > req.deadline
+            if missed:
+                self.stats.deadline_misses += 1
+            self.results[req.request_id] = RequestResult(
+                request_id=req.request_id,
+                image=img,
+                latency_s=lat,
+                batch_size=len(reqs),
+                signature=bucket.signature,
+                deadline_missed=missed,
+            )
+
+    # -- timed replay --------------------------------------------------------
+
+    def run(
+        self,
+        load: Iterable[Tuple[float, RenderRequest]],
+        realtime: bool = True,
+    ) -> Dict[int, RequestResult]:
+        """Serve a timed load of ``(arrival_offset_s, request)`` pairs.
+
+        ``realtime=True`` sleeps the inter-arrival gaps (servicing due
+        buckets while waiting) so max-wait flushes behave as in production —
+        it requires the default wall clock (an injected fake clock never
+        advances through ``time.sleep`` and would spin forever; fakes are
+        for the scheduler unit tests). ``realtime=False`` enqueues the whole
+        backlog and drains it (closed-loop throughput mode: buckets fill to
+        max_batch regardless of max_wait — what bench_serving measures).
+        Unknown-scene requests in a load are counted as rejections and
+        skipped rather than killing the requests behind them. Returns the
+        results map; ``stats.wall_s`` is stamped on exit.
+        """
+        t_start = self._clock()
+        for offset, req in load:
+            if req.scene_id not in self.scenes:
+                self.stats.count_rejected()
+                continue
+            if realtime:
+                while self._clock() - t_start < offset:
+                    self.step()
+                    gap = offset - (self._clock() - t_start)
+                    if gap > 0:
+                        time.sleep(min(gap, max(self.scheduler.max_wait, 1e-3) / 4))
+            if not self.queue.try_put(req):
+                # Backpressure inline: service the backlog, then retry once;
+                # a second failure is a real rejection.
+                self._pump_queue()
+                if not self.queue.try_put(req):
+                    self.stats.count_rejected()
+            if realtime:
+                self.step()
+        self.drain()
+        self.stats.wall_s = self._clock() - t_start
+        return self.results
+
+
+def poisson_arrivals(
+    n: int, rate_hz: float, seed: int = 0
+) -> List[float]:
+    """n arrival offsets with exponential inter-arrival gaps (Poisson
+    process at ``rate_hz``) — the synthetic open-loop load for the CLI and
+    the serving benchmark."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    return np.cumsum(gaps).tolist()

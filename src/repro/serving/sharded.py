@@ -1,0 +1,104 @@
+"""Device-sharded batched rendering: ``render_batch`` over a 1-D mesh.
+
+``render_batch_sharded`` is a drop-in superset of ``core.pipeline.
+render_batch``: same arguments plus an optional mesh, same ``RenderResult``
+(image ``(B, H, W, 3)``, stats ``(B,)``). The camera batch axis is laid over
+the mesh's data axis (sharding/policies.py) while the scene and background
+stay replicated; XLA partitions the vmapped renderer by propagating the
+input shardings — no renderer changes, the SAME lru-cached executable
+wrapper from core/pipeline.py serves sharded and unsharded calls, so the
+serving cache counters see one signature either way.
+
+Ragged batches (B not divisible by the device count) are padded by
+replicating the last camera (serving/bucketing.py ``pad_indices``) and the
+padded tail is sliced off the result tree — mask-correct because camera
+renders are independent (DESIGN.md §9).
+
+On a 1-device mesh the padded batch IS the batch and the program XLA builds
+is the unpartitioned one, so results are bitwise-identical to
+``render_batch`` (asserted in benchmarks/bench_serving.py and
+tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core.camera import Camera
+from repro.core.gaussians import GaussianScene
+from repro.core.pipeline import (
+    CameraBatch,
+    RenderConfig,
+    RenderResult,
+    _background_array,
+    _batch_renderer,
+    batch_signature,
+)
+from repro.launch.mesh import make_render_mesh
+from repro.serving.bucketing import pad_indices_to, padded_size
+from repro.sharding.policies import camera_batch_pspec, render_replicated_pspec
+
+
+def pad_camera_batch(batch: CameraBatch, target: int) -> CameraBatch:
+    """Pad the batch axis up to ``target`` lanes by replicating the last
+    camera (the ``pad_indices_to`` policy); identity when already there."""
+    n = len(batch)
+    idx = pad_indices_to(n, target)
+    if len(idx) == n:
+        return batch
+    take = np.asarray(idx)
+    return dataclasses.replace(
+        batch,
+        R=batch.R[take],
+        t=batch.t[take],
+        fx=batch.fx[take],
+        fy=batch.fy[take],
+        cx=batch.cx[take],
+        cy=batch.cy[take],
+    )
+
+
+def render_batch_sharded(
+    scene: GaussianScene,
+    cams: Union[CameraBatch, Sequence[Camera]],
+    cfg: RenderConfig,
+    background=None,
+    *,
+    mesh: Optional[Mesh] = None,
+    pad_to: Optional[int] = None,
+) -> RenderResult:
+    """Render B cameras in ONE jit call, batch axis sharded over ``mesh``.
+
+    ``mesh=None`` builds a 1-D mesh over all local devices. The batch is
+    padded to ``max(B, pad_to)`` rounded up to the device count; a serving
+    loop passes its max batch as ``pad_to`` so EVERY dispatch of a signature
+    has one fixed shape (one compiled program even for ragged max_wait
+    flushes). Returns exactly B images/stats regardless of padding.
+    """
+    batch = cams if isinstance(cams, CameraBatch) else CameraBatch.from_cameras(cams)
+    if mesh is None:
+        mesh = make_render_mesh()
+    orig = len(batch)
+    padded = pad_camera_batch(
+        batch, padded_size(max(orig, pad_to or 0), mesh.size)
+    )
+
+    shard = NamedSharding(mesh, camera_batch_pspec(mesh))
+    repl = NamedSharding(mesh, render_replicated_pspec())
+    put_b = lambda a: jax.device_put(a, shard)
+
+    fn = _batch_renderer(*batch_signature(cfg, padded))
+    out = fn(
+        jax.device_put(scene, repl),
+        put_b(padded.R), put_b(padded.t),
+        put_b(padded.fx), put_b(padded.fy),
+        put_b(padded.cx), put_b(padded.cy),
+        jax.device_put(_background_array(background), repl),
+    )
+    if len(padded) != orig:
+        out = jax.tree.map(lambda x: x[:orig], out)
+    return out

@@ -1,0 +1,171 @@
+"""Per-bucket serving statistics: latency, throughput, cache hits.
+
+Pure Python (no jax): the server records one ``record_dispatch`` per batch
+with walltimes measured around the actual device work, and folds in the
+engine's executable-cache deltas (``render_cache_info`` dicts) so the serving
+counters and the CLI ``--stats`` output agree on what a "cache hit" is — a
+dispatch that reused a compiled renderer.
+
+Latency is request-level (completion - enqueue), so it includes queueing and
+batching delay, not just device time; p50/p99 over those latencies plus
+end-to-end FPS are the numbers bench_serving.py compares against the naive
+per-request loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import threading
+from typing import Dict, List, Optional
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 100]); nan for no samples."""
+    if not values:
+        return math.nan
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    pos = (q / 100.0) * (len(xs) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Counters for one executable signature."""
+
+    signature: tuple
+    requests: int = 0
+    batches: int = 0
+    padded: int = 0              # wasted lanes added for device divisibility
+    render_s: float = 0.0        # device walltime across dispatches
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    cache_hits: int = 0          # dispatches that reused a compiled renderer
+    cache_misses: int = 0        # dispatches that compiled
+
+    @property
+    def mean_batch(self) -> float:
+        return self.requests / self.batches if self.batches else math.nan
+
+    def to_dict(self) -> dict:
+        return {
+            "signature": repr(self.signature),
+            "requests": self.requests,
+            "batches": self.batches,
+            "mean_batch": self.mean_batch,
+            "padded": self.padded,
+            "render_s": self.render_s,
+            "p50_ms": percentile(self.latencies_s, 50) * 1e3,
+            "p99_ms": percentile(self.latencies_s, 99) * 1e3,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+        }
+
+
+def cache_delta(before: dict, after: dict) -> Dict[str, int]:
+    """hits/misses deltas summed over the single+batch executable caches,
+    from two ``render_cache_info()`` snapshots."""
+    return {
+        key: sum(after[kind][key] - before[kind][key] for kind in after)
+        for key in ("hits", "misses")
+    }
+
+
+class ServingStats:
+    """Aggregates BucketStats across the server's lifetime."""
+
+    def __init__(self):
+        self.buckets: Dict[tuple, BucketStats] = {}
+        self.rejected = 0
+        self.deadline_misses = 0
+        self.wall_s: Optional[float] = None   # stamped by the driver loop
+        # Dispatch-side counters are driver-thread-only, but rejections come
+        # from submit(), which producers may call from many threads.
+        self._reject_lock = threading.Lock()
+
+    def count_rejected(self) -> None:
+        with self._reject_lock:
+            self.rejected += 1
+
+    def bucket(self, signature: tuple) -> BucketStats:
+        if signature not in self.buckets:
+            self.buckets[signature] = BucketStats(signature)
+        return self.buckets[signature]
+
+    def record_dispatch(
+        self,
+        signature: tuple,
+        batch_size: int,
+        padded_size: int,
+        render_s: float,
+        latencies_s: List[float],
+        cache_before: Optional[dict] = None,
+        cache_after: Optional[dict] = None,
+    ) -> None:
+        b = self.bucket(signature)
+        b.requests += batch_size
+        b.batches += 1
+        b.padded += padded_size - batch_size
+        b.render_s += render_s
+        b.latencies_s.extend(latencies_s)
+        if cache_before is not None and cache_after is not None:
+            delta = cache_delta(cache_before, cache_after)
+            b.cache_hits += delta["hits"]
+            b.cache_misses += delta["misses"]
+
+    # -- aggregate views ----------------------------------------------------
+
+    @property
+    def completed(self) -> int:
+        return sum(b.requests for b in self.buckets.values())
+
+    def all_latencies(self) -> List[float]:
+        return [t for b in self.buckets.values() for t in b.latencies_s]
+
+    def fps(self) -> float:
+        if not self.wall_s:
+            return math.nan
+        return self.completed / self.wall_s
+
+    def summary(self) -> dict:
+        lat = self.all_latencies()
+        return {
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "deadline_misses": self.deadline_misses,
+            "batches": sum(b.batches for b in self.buckets.values()),
+            "padded": sum(b.padded for b in self.buckets.values()),
+            "cache_hits": sum(b.cache_hits for b in self.buckets.values()),
+            "cache_misses": sum(b.cache_misses for b in self.buckets.values()),
+            "p50_ms": percentile(lat, 50) * 1e3,
+            "p99_ms": percentile(lat, 99) * 1e3,
+            "wall_s": self.wall_s,
+            "fps": self.fps(),
+            "buckets": [b.to_dict() for b in self.buckets.values()],
+        }
+
+    def to_json(self, **extra) -> str:
+        return json.dumps({**self.summary(), **extra}, indent=2)
+
+    def format(self) -> str:
+        s = self.summary()
+        wall = f"{s['wall_s']:.2f}s" if s["wall_s"] is not None else "n/a"
+        lines = [
+            f"served {s['completed']} requests in {s['batches']} batches "
+            f"({s['rejected']} rejected, {s['padded']} padded lanes)",
+            f"  latency p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms  "
+            f"throughput={s['fps']:.1f} fps  wall={wall}",
+            f"  executable cache: {s['cache_hits']} hits / "
+            f"{s['cache_misses']} misses",
+        ]
+        for b in sorted(self.buckets.values(), key=lambda b: -b.requests):
+            d = b.to_dict()
+            lines.append(
+                f"  bucket {d['signature'][:72]}: {d['requests']} reqs / "
+                f"{d['batches']} batches (mean {d['mean_batch']:.1f}), "
+                f"p99={d['p99_ms']:.1f}ms"
+            )
+        return "\n".join(lines)

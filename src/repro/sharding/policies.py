@@ -132,6 +132,24 @@ def make_constrain(cfg: ModelConfig, mesh: Optional[Mesh], batch_shardable: bool
     return constrain
 
 
+def camera_batch_pspec(mesh: Mesh) -> P:
+    """PartitionSpec for the camera-batch axis of the render serving tier.
+
+    The batch axis lays over the mesh's data axes (camera renders are
+    independent); everything else about a render — the scene, the background
+    — is replicated via ``render_replicated_pspec``. Batch sizes must be
+    padded to the data-axis extent first (serving/bucketing.py pad helpers).
+    """
+    return P(_data_axes(mesh))
+
+
+def render_replicated_pspec() -> P:
+    """Fully-replicated spec for the scene/background operands of a sharded
+    render: every device rasterizes its camera shard against the whole
+    scene (scene-level sharding is a future multi-host item, ROADMAP)."""
+    return P()
+
+
 def batch_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
     """PartitionSpecs for input batches."""
     dp = _data_axes(mesh)

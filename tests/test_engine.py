@@ -16,6 +16,7 @@ from repro.core import make_camera, orbit_cameras
 from repro.core.pipeline import (
     CameraBatch,
     RenderConfig,
+    batch_signature,
     render,
     render_batch,
     render_cache_info,
@@ -56,6 +57,26 @@ def test_backend_parity(small_scene, cam128, base_cfg, mode):
     )
     _assert_stats_identical(ref.stats, pal.stats)
     assert int(pal.stats.alpha_ops) > 0  # stats actually populated
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("bg", ["aabb", "obb", "ellipse"])
+@pytest.mark.parametrize("bt", ["aabb", "obb", "ellipse"])
+def test_backend_parity_boundary_matrix(tiny_scene, cam128, base_cfg, bg, bt):
+    """The full 9-combo boundary-method matrix (ROADMAP): reference vs pallas
+    must agree — allclose images, IDENTICAL counters — for every
+    (group-identification, tile-bitmask) method pairing, not just the
+    defaults; the bitmask/compaction kernels take method-dependent paths."""
+    cfg = dataclasses.replace(
+        base_cfg, mode="gstg", boundary_group=bg, boundary_tile=bt
+    )
+    ref = render(tiny_scene, cam128, cfg)
+    pal = render(tiny_scene, cam128, dataclasses.replace(cfg, backend="pallas"))
+    np.testing.assert_allclose(
+        np.asarray(pal.image), np.asarray(ref.image), atol=5e-6, rtol=1e-5
+    )
+    _assert_stats_identical(ref.stats, pal.stats)
+    assert int(ref.stats.overflow) == 0  # parity claim needs no drops
 
 
 def test_backend_parity_options(small_scene, cam128, base_cfg):
@@ -110,13 +131,13 @@ def test_render_batch_jit_cache(small_scene, base_cfg):
     reuses the compiled renderer."""
     cams = CameraBatch.from_cameras(orbit_cameras(2, 4.5, 128, 128))
     render_batch(small_scene, cams, base_cfg)
-    _, before = render_cache_info()
+    before = render_cache_info()["batch"]
     cfg_again = dataclasses.replace(base_cfg)  # equal by value, new instance
     assert cfg_again is not base_cfg
     render_batch(small_scene, cams, cfg_again)
-    _, after = render_cache_info()
-    assert after.hits == before.hits + 1
-    assert after.misses == before.misses
+    after = render_cache_info()["batch"]
+    assert after["hits"] == before["hits"] + 1
+    assert after["misses"] == before["misses"]
 
 
 def test_render_jit_single_camera_cache(small_scene, base_cfg):
@@ -124,11 +145,39 @@ def test_render_jit_single_camera_cache(small_scene, base_cfg):
     cam_a = make_camera((0, 1.0, 4.5), (0, 0, 0), 128, 128)
     cam_b = make_camera((1.5, 0.8, 4.0), (0, 0, 0), 128, 128)
     render_jit(small_scene, cam_a, base_cfg)
-    before, _ = render_cache_info()
+    before = render_cache_info()["single"]
     out = render_jit(small_scene, cam_b, base_cfg)
-    after, _ = render_cache_info()
-    assert after.hits == before.hits + 1
+    after = render_cache_info()["single"]
+    assert after["hits"] == before["hits"] + 1
     eager = render(small_scene, cam_b, base_cfg)
     np.testing.assert_allclose(
         np.asarray(out.image), np.asarray(eager.image), atol=1e-6, rtol=1e-6
+    )
+
+
+def test_cache_info_is_plain_dict(small_scene, base_cfg):
+    """render_cache_info returns plain dicts (the serving stats and the CLI
+    --stats output consume them without lru internals)."""
+    info = render_cache_info()
+    assert set(info) == {"single", "batch"}
+    for kind in info.values():
+        assert {"hits", "misses", "currsize", "maxsize"} <= set(kind)
+        assert all(isinstance(v, int) for v in kind.values())
+
+
+def test_batch_signature_keys_the_cache(base_cfg):
+    """batch_signature is the executable-cache key: equal for any camera of
+    the same geometry under an equal config, different across resolutions,
+    configs, and backends — the serving bucketer relies on exactly this."""
+    cam_a = make_camera((0, 1.0, 4.5), (0, 0, 0), 128, 128)
+    cam_b = make_camera((2.0, 0.5, 3.0), (1, 0, 0), 128, 128)
+    batch = CameraBatch.from_cameras([cam_a, cam_b])
+    assert batch_signature(base_cfg, cam_a) == batch_signature(base_cfg, cam_b)
+    assert batch_signature(base_cfg, cam_a) == batch_signature(
+        dataclasses.replace(base_cfg), batch
+    )
+    other_res = make_camera((0, 1.0, 4.5), (0, 0, 0), 256, 128)
+    assert batch_signature(base_cfg, cam_a) != batch_signature(base_cfg, other_res)
+    assert batch_signature(base_cfg, cam_a) != batch_signature(
+        dataclasses.replace(base_cfg, backend="pallas"), cam_a
     )
