@@ -1,0 +1,99 @@
+"""Scene-scale benchmark: throughput vs scene size, replicated vs
+gaussian-sharded dispatch (DESIGN.md §10).
+
+For each scene size the same 4-camera batch is rendered through
+``render_batch_sharded`` twice — once replicated (scene_shards=1), once
+gaussian-sharded — and the steady-state walltime is compared. Both variants
+are warmed through the EXACT call path that is then timed (same function,
+same mesh, same pad shape): the sharded dispatch compiles a different
+program (per-shard frontend + merge) and sees differently-committed inputs,
+so warming one path does not warm the other.
+
+On a multi-device host the shard axis lays over the mesh 'model' axis and
+the benchmark shows where scene sharding starts paying; on one device the
+shard axis is logical, so the sharded column isolates the pure engine-side
+overhead of the per-shard frontend + merge stage (the price of fitting a
+scene that could not be replicated at all). The report includes the
+crossover scene size, if any, where sharded dispatch matches replicated
+throughput. Parity (bitwise image) is asserted at the smallest size.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.camera import orbit_cameras
+from repro.core.gaussians import random_scene
+from repro.core.pipeline import RenderConfig, render_cache_clear
+from repro.launch.mesh import make_render_mesh, render_mesh_shards
+from repro.serving.sharded import render_batch_sharded
+
+SIZES = (2_000, 8_000, 24_000)
+N_CAMS = 4
+RES = (128, 128)
+
+
+def run() -> dict:
+    n_dev = len(jax.devices())
+    shards = n_dev if n_dev > 1 else 2   # logical shard axis on one device
+    cfg = RenderConfig(
+        mode="gstg", tile=16, group=64,
+        group_capacity=512, tile_capacity=512, span=6,
+    )
+    cams = orbit_cameras(N_CAMS, 4.5, *RES)
+    meshes = {
+        1: make_render_mesh(),
+        shards: make_render_mesh(
+            scene_shards=render_mesh_shards(n_dev, shards)
+        ),
+    }
+
+    render_cache_clear()
+    rows = []
+    for size in SIZES:
+        scene = random_scene(jax.random.key(size), size, extent=3.0)
+        row = {"gaussians": size}
+        outs = {}
+        for d in (1, shards):
+            fn = lambda: render_batch_sharded(
+                scene, cams, cfg, mesh=meshes[d], scene_shards=d
+            )
+            us, out = timed(fn, reps=3)   # timed() warms with one extra call
+            outs[d] = out
+            key = "replicated" if d == 1 else "sharded"
+            row[f"{key}_us"] = us
+            row[f"{key}_fps"] = N_CAMS / (us * 1e-6)
+        if size == SIZES[0]:
+            assert (
+                np.asarray(outs[1].image) == np.asarray(outs[shards].image)
+            ).all(), "sharded dispatch diverges from replicated"
+        row["sharded_over_replicated"] = row["sharded_us"] / row["replicated_us"]
+        rows.append(row)
+        emit(
+            f"scene_scale_n{size}", row["sharded_us"],
+            f"repl={row['replicated_fps']:.2f}fps "
+            f"shard={row['sharded_fps']:.2f}fps "
+            f"ratio={row['sharded_over_replicated']:.2f}x",
+        )
+
+    crossover = next(
+        (r["gaussians"] for r in rows if r["sharded_us"] <= r["replicated_us"]),
+        None,
+    )
+    emit(
+        "scene_scale_crossover", 0.0,
+        f"crossover_gaussians={crossover} devices={n_dev} shards={shards}",
+    )
+    return {
+        "devices": n_dev,
+        "scene_shards": shards,
+        "cameras": N_CAMS,
+        "resolution": RES,
+        "rows": rows,
+        "crossover_gaussians": crossover,
+    }
+
+
+if __name__ == "__main__":
+    run()

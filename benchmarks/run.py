@@ -21,6 +21,7 @@ def main() -> None:
         bench_boundaries,
         bench_groupsize,
         bench_render_walltime,
+        bench_scene_scale,
         bench_serving,
         bench_sharing,
         bench_stages,
@@ -37,6 +38,7 @@ def main() -> None:
         ("fig1415_accel", bench_accel.run),
         ("render_walltime", bench_render_walltime.run),
         ("serving", bench_serving.run),
+        ("scene_scale", bench_scene_scale.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

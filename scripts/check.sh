@@ -32,4 +32,14 @@ python -m repro.launch.render_serve --backend reference \
     --requests 8 --rate 200 --gaussians 600 --scenes train \
     --resolutions 96x96,128x96 --max-batch 4 --max-wait 0.05
 
+# Scene-sharded smoke: 2 virtual host devices, gaussian axis over the mesh
+# 'model' axis (DESIGN.md §10). --parity-check re-renders every request on
+# the replicated path and requires BITWISE-identical images (exit non-zero
+# otherwise); the budget gate proves the per-device footprint halves.
+echo "== smoke serve: scene-sharded (2 virtual devices, bitwise parity) =="
+python -m repro.launch.render_serve --backend reference --devices 2 \
+    --scene-shards 2 --parity-check --device-budget-mb 0.02 \
+    --requests 6 --rate 200 --gaussians 500 --scenes train \
+    --resolutions 96x96 --max-batch 2 --max-wait 0.05 --no-realtime
+
 echo "check.sh: OK"

@@ -6,6 +6,7 @@ from repro.core.pipeline import (
     RenderConfig,
     RenderResult,
     batch_signature,
+    register_render_cache,
     render,
     render_batch,
     render_cache_clear,
@@ -27,6 +28,7 @@ __all__ = [
     "RenderConfig",
     "RenderResult",
     "batch_signature",
+    "register_render_cache",
     "render",
     "render_batch",
     "render_cache_clear",

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core.boundary import boundary_test
 from repro.core.camera import Camera
 from repro.core.projection import Projected
-from repro.utils import cdiv
+from repro.utils import cdiv, wide_count_dtype, wide_count_sum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +100,8 @@ class PairSet:
     depth: jnp.ndarray      # float32, +inf for invalid
     valid: jnp.ndarray      # bool
     # -- counters (scalars) --
-    n_candidate_tests: jnp.ndarray  # boundary tests executed
+    n_candidate_tests: jnp.ndarray  # boundary tests (wide_count_dtype: can
+                                    #   exceed int32 at tile level on big scenes)
     n_pairs: jnp.ndarray            # valid (gaussian, bin) pairs == sort keys
     n_span_overflow: jnp.ndarray    # bins lost to the static span window
 
@@ -189,7 +190,7 @@ def identify(
         gauss_idx=flat(gauss_idx),
         depth=flat(depth).astype(jnp.float32),
         valid=flat(hit),
-        n_candidate_tests=jnp.sum(in_bbox.astype(jnp.int32)),
+        n_candidate_tests=wide_count_sum(in_bbox),
         n_pairs=jnp.sum(hit.astype(jnp.int32)),
         n_span_overflow=jnp.sum(lost),
     )
@@ -254,11 +255,59 @@ def sort_op_count(lengths: jnp.ndarray) -> jnp.ndarray:
 
     The n·log n model matches both the GPU radix/merge path and the paper's
     GSM comparator tree up to a constant, so *ratios* between per-tile and
-    per-group sorting are preserved.
+    per-group sorting are preserved. Accumulated in ``wide_count_dtype`` —
+    an int32 total wraps negative around ~80M sort keys (multi-million-
+    Gaussian scenes at tile granularity).
     """
     L = lengths.astype(jnp.float32)
     logL = jnp.ceil(jnp.log2(jnp.maximum(L, 2.0)))
-    return jnp.sum(L * logL).astype(jnp.int32)
+    return wide_count_sum(L * logL)
+
+
+def merge_bin_tables(tables: BinTable, depth: jnp.ndarray) -> BinTable:
+    """Merge D per-shard bin tables into the global depth-ordered table.
+
+    ``tables`` is a shard-stacked BinTable (every field with a leading shard
+    axis: gauss_idx/entry_valid ``(D, B, K)``, lengths ``(D, B)``) whose
+    ``gauss_idx`` entries are already GLOBAL gaussian indices; ``depth`` is
+    the per-entry sort key ``(D, B, K)``.
+
+    Bitwise-identity invariant (DESIGN.md §10): provided the shards partition
+    the gaussian axis contiguously in global order (sharding/scene.py layout)
+    and the per-shard capacity is >= the merged capacity K, the result equals
+    ``bin_pairs`` on the unsharded pair set, field for field:
+
+      * each shard's per-bin segment is a subsequence of the global segment
+        (stable per-shard sort preserves relative order, and within a shard
+        the flattened pair order equals the global one);
+      * concatenating shard-major and re-sorting by depth with a STABLE sort
+        breaks depth ties by concatenation position = (shard, within-shard
+        insertion) = global insertion order — exactly the 3D-GS tie-break the
+        losslessness proof needs (§7);
+      * even under capacity overflow the first K merged entries equal the
+        global top-K: any entry in the global top-K has < K predecessors in
+        its own shard, so per-shard clamping at K never drops it.
+
+    Invalid slots carry key +inf and sort last; merged lengths are the exact
+    (pre-clamp) per-bin totals, so overflow accounting matches the replicated
+    path integer for integer.
+    """
+    D, B, K = tables.gauss_idx.shape
+    key = jnp.where(tables.entry_valid, depth, jnp.inf)
+    cat = lambda a: jnp.swapaxes(a, 0, 1).reshape(B, D * K)  # shard-major
+    order = jnp.argsort(cat(key), axis=1, stable=True)[:, :K]
+    merged_idx = jnp.take_along_axis(cat(tables.gauss_idx), order, axis=1)
+
+    lengths = jnp.sum(tables.lengths, axis=0)  # (B,) exact pre-clamp totals
+    k = jnp.arange(K, dtype=jnp.int32)
+    entry_valid = k[None, :] < jnp.minimum(lengths, K)[:, None]
+    overflow = jnp.sum(jnp.maximum(lengths - K, 0))
+    return BinTable(
+        gauss_idx=jnp.where(entry_valid, merged_idx, 0),
+        entry_valid=entry_valid,
+        lengths=lengths,
+        overflow=overflow,
+    )
 
 
 def tile_rect_in_group(grid: GridSpec, group_ids: jnp.ndarray, tile_slot: jnp.ndarray):

@@ -26,6 +26,14 @@ over the camera parameters); compiled renderers are cached by the static
 (RenderConfig, camera-geometry) signature so repeated multi-view calls reuse
 the executable (DESIGN.md §6).
 
+The GAUSSIAN axis is a sharding dimension too (DESIGN.md §10): with
+``cfg.scene_shards = D`` the frontend stages (project/identify/bin) run
+per-shard on the canonical padded layout (sharding/scene.py) and a stable
+merge stage rebuilds the global depth-ordered bin table bitwise-identically
+to the replicated path; bitmask/compact/rasterize proceed unchanged on the
+merged table. ``serving/sharded.py`` lays the shard axis over a 2-D
+(data=cameras, model=gaussians) mesh for scenes too large to replicate.
+
 Losslessness guarantees (tested in tests/test_pipeline_lossless.py):
   * BITWISE image equality gstg == tile_baseline whenever the bitmask method
     is at least as tight as the group method (ellipse bitmask under any group
@@ -54,6 +62,8 @@ from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
 from repro.core.grouping import GridSpec, sort_op_count
 from repro.core.stages import Backend, get_backend
+from repro.sharding.scene import SceneLike, ShardedScene, shard_scene
+from repro.utils import wide_count_dtype, wide_count_sum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +79,8 @@ class RenderConfig:
     chunk: int = 32                    # raster gaussian chunk
     early_exit: bool = True
     backend: str = "reference"         # stage implementation: reference | pallas
+    scene_shards: int = 1              # D: gaussian-axis shards (DESIGN.md §10);
+                                       #   part of the static jit/bucket signature
 
 
 @jax.tree_util.register_dataclass
@@ -77,11 +89,13 @@ class RenderStats:
     """Operation counters for the paper's metrics + the cost model."""
 
     n_visible: jnp.ndarray           # gaussians surviving culling
-    n_candidate_tests: jnp.ndarray   # identification boundary tests
+    n_candidate_tests: jnp.ndarray   # identification boundary tests (wide)
     n_pairs_sort: jnp.ndarray        # sorting keys (the paper's redundancy axis)
-    sort_ops: jnp.ndarray            # comparator-model ops sum L log L
+    sort_ops: jnp.ndarray            # comparator-model ops sum L log L (wide)
     n_bit_tests: jnp.ndarray         # bitmask-generation tile tests (gstg only)
-    fifo_ops: jnp.ndarray            # linear compaction ops (gstg only)
+    fifo_ops: jnp.ndarray            # linear compaction ops (gstg only, wide)
+    # 'wide' counters use utils.wide_count_dtype (int64 under x64, else f32):
+    # they exceed int32 on multi-million-Gaussian scenes and must never wrap.
     alpha_ops: jnp.ndarray           # per-pixel alpha computations
     blend_ops: jnp.ndarray           # contributing blends
     tile_entries: jnp.ndarray        # total per-tile raster entries
@@ -106,26 +120,122 @@ def _grid(cam, cfg: RenderConfig) -> GridSpec:
     )
 
 
+def _scene_for_render(scene: SceneLike, cfg: RenderConfig) -> SceneLike:
+    """Resolve the scene into the layout ``cfg.scene_shards`` asks for.
+
+    A plain GaussianScene with ``scene_shards > 1`` is padded/sharded
+    in-trace (sharding/scene.py canonical layout) — a real device placement
+    only needs the caller to device_put a pre-sharded scene instead
+    (serving/sharded.py). A ShardedScene is accepted at any D as long as it
+    matches the config, including D == 1, which is how the sharded frontend
+    is exercised degenerately (bitwise-identical to the replicated path).
+    """
+    if isinstance(scene, ShardedScene):
+        if scene.num_shards != cfg.scene_shards:
+            raise ValueError(
+                f"scene has {scene.num_shards} shards but cfg.scene_shards="
+                f"{cfg.scene_shards}; the shard count is part of the static "
+                "signature and must agree"
+            )
+        return scene
+    if cfg.scene_shards > 1:
+        return shard_scene(scene, cfg.scene_shards)
+    return scene
+
+
+def _frontend(
+    backend: Backend,
+    scene: SceneLike,
+    cam,
+    grid: GridSpec,
+    level: str,
+    method: str,
+    num_bins: int,
+    capacity: int,
+):
+    """Stages 1-3 (project / identify / bin) with the gaussian axis as a
+    first-class sharding dimension.
+
+    Replicated scene: the three stages run directly. ShardedScene: each
+    stage runs per-shard (vmap over the leading shard axis D — laid over a
+    mesh 'model' axis by the caller's input shardings), then the new merge
+    stage combines the D fixed-capacity BinTables into the global
+    depth-ordered table, bitwise-identical to the replicated path
+    (core/grouping.py::merge_bin_tables, DESIGN.md §10). Downstream stages
+    (bitmask/compact/rasterize) consume the merged table + the flat padded
+    Projected unchanged.
+
+    Returns ``(proj, table, (n_candidate_tests, n_pairs, n_span_overflow))``
+    with ``proj`` flat over the (padded) gaussian axis and the counters
+    shard-summed — bitwise-equal to the replicated reduction whenever every
+    partial fits the wide dtype's exact-integer range (always under x64;
+    below 2**24 per counter under x64-off, which covers every parity test;
+    above that the f32 counters are approximate-but-monotone on BOTH paths).
+
+    Memory note: sharding covers the persistent scene PARAMETERS (what the
+    per-device HBM budget is about); the flattened ``proj`` features are
+    still materialized at full padded N per camera for the downstream
+    gathers. Feature-sharded bitmask/raster gathers are future work
+    (ROADMAP).
+    """
+    if isinstance(scene, GaussianScene):
+        proj = backend.project(scene, cam)
+        pairs = backend.identify(proj, grid, level, method)
+        table = backend.bin(pairs, num_bins, capacity)
+        return proj, table, (
+            pairs.n_candidate_tests, pairs.n_pairs, pairs.n_span_overflow
+        )
+
+    D, shard_size = scene.num_shards, scene.shard_size
+    proj_s = jax.vmap(lambda s: backend.project(s, cam))(scene.shards)
+    pairs_s = jax.vmap(lambda p: backend.identify(p, grid, level, method))(proj_s)
+    tables_s = jax.vmap(lambda p: backend.bin(p, num_bins, capacity))(pairs_s)
+
+    # Shard-local -> global gaussian indices: the canonical layout is
+    # gaussian-contiguous, so shard d starts at d * shard_size.
+    offsets = (jnp.arange(D, dtype=jnp.int32) * shard_size)[:, None, None]
+    gauss_idx = jnp.where(
+        tables_s.entry_valid, tables_s.gauss_idx + offsets, 0
+    )
+    proj = jax.tree.map(
+        lambda x: x.reshape(D * shard_size, *x.shape[2:]), proj_s
+    )
+    depth = jnp.where(tables_s.entry_valid, proj.depth[gauss_idx], jnp.inf)
+    table = backend.merge(
+        dataclasses.replace(tables_s, gauss_idx=gauss_idx), depth
+    )
+    return proj, table, (
+        jnp.sum(pairs_s.n_candidate_tests),
+        jnp.sum(pairs_s.n_pairs),
+        jnp.sum(pairs_s.n_span_overflow),
+    )
+
+
 def render(
-    scene: GaussianScene,
+    scene: SceneLike,
     cam: Camera,
     cfg: RenderConfig,
     background: Optional[jnp.ndarray] = None,
 ) -> RenderResult:
-    """Render one camera through the staged engine on ``cfg.backend``."""
+    """Render one camera through the staged engine on ``cfg.backend``.
+
+    ``scene`` is a plain (replicated) GaussianScene or a ShardedScene in the
+    canonical gaussian-sharded layout; ``cfg.scene_shards`` selects the
+    frontend and is part of every cache/bucket signature.
+    """
     backend = get_backend(cfg.backend)
-    proj = backend.project(scene, cam)
+    scene = _scene_for_render(scene, cfg)
     if cfg.mode == "gstg":
-        return _render_gstg(backend, proj, cam, cfg, background)
+        return _render_gstg(backend, scene, cam, cfg, background)
     if cfg.mode == "tile_baseline":
-        return _render_flat(backend, proj, cam, cfg, background, level="tile")
+        return _render_flat(backend, scene, cam, cfg, background, level="tile")
     if cfg.mode == "group_baseline":
-        return _render_flat(backend, proj, cam, cfg, background, level="group")
+        return _render_flat(backend, scene, cam, cfg, background, level="group")
     raise ValueError(f"unknown mode {cfg.mode!r}")
 
 
 def _render_flat(
-    backend: Backend, proj, cam, cfg, background, level: str
+    backend: Backend, scene, cam, cfg, background, level: str
 ) -> RenderResult:
     """Conventional per-bin pipeline at tile or group granularity."""
     grid = _grid(cam, cfg)
@@ -145,8 +255,9 @@ def _render_flat(
             span=cfg.span,
         )
 
-    pairs = backend.identify(proj, grid, level, cfg.boundary_tile)
-    table = backend.bin(pairs, bins_xy, capacity)
+    proj, table, (n_tests, n_pairs, n_span) = _frontend(
+        backend, scene, cam, grid, level, cfg.boundary_tile, bins_xy, capacity
+    )
     rast = backend.rasterize_tiles(
         proj,
         table,
@@ -158,42 +269,44 @@ def _render_flat(
     image = rast.image[: cam.height, : cam.width]
     stats = RenderStats(
         n_visible=jnp.sum(proj.valid.astype(jnp.int32)),
-        n_candidate_tests=pairs.n_candidate_tests,
-        n_pairs_sort=pairs.n_pairs,
+        n_candidate_tests=n_tests,
+        n_pairs_sort=n_pairs,
         sort_ops=sort_op_count(table.lengths),
         n_bit_tests=jnp.zeros((), jnp.int32),
-        fifo_ops=jnp.zeros((), jnp.int32),
+        fifo_ops=jnp.zeros((), wide_count_dtype()),
         alpha_ops=rast.alpha_ops,
         blend_ops=rast.blend_ops,
         tile_entries=jnp.sum(table.lengths),
         overflow=table.overflow,
-        span_overflow=pairs.n_span_overflow,
+        span_overflow=n_span,
     )
     return RenderResult(image=image, stats=stats)
 
 
-def _render_gstg(backend: Backend, proj, cam, cfg, background) -> RenderResult:
+def _render_gstg(backend: Backend, scene, cam, cfg, background) -> RenderResult:
     """The paper's pipeline: Fig 9."""
     grid = _grid(cam, cfg)
 
-    # 1) Group identification (coarse, cheap).
-    pairs = backend.identify(proj, grid, "group", cfg.boundary_group)
+    # 1-3) Group identification + group-wise sorting — ONE sort per group,
+    #    shared by gf^2 tiles. Per-shard + stable merge when scene-sharded.
+    proj, gtable, (n_tests, n_pairs, n_span) = _frontend(
+        backend, scene, cam, grid, "group", cfg.boundary_group,
+        grid.num_groups, cfg.group_capacity,
+    )
 
-    # 2) Group-wise sorting — ONE sort per group, shared by gf^2 tiles.
-    gtable = backend.bin(pairs, grid.num_groups, cfg.group_capacity)
-
-    # 3) Bitmask generation (BGM): tile-granularity tests on group entries.
+    # 4) Bitmask generation (BGM): tile-granularity tests on group entries.
     #    On the ASIC this overlaps GSM; in XLA the two ops have no data
     #    dependence and schedule freely (gtable order does not affect masks:
-    #    masks are per-entry).
+    #    masks are per-entry — which is also why bitmasks need no cross-shard
+    #    pass: they run on the already-merged table).
     masks = backend.bitmasks(proj, gtable, grid, cfg.boundary_tile, chunk=cfg.chunk)
 
-    # 4) RM FIFO: per-tile compaction by bitmask (linear, order-preserving).
+    # 5) RM FIFO: per-tile compaction by bitmask (linear, order-preserving).
     #    Materialized by the reference backend; virtual (in-register) for the
     #    fused pallas RM, which still reports the same length/overflow stats.
     compacted = backend.compact(gtable, masks, grid, cfg.tile_capacity)
 
-    # 5) Small-tile rasterization.
+    # 6) Small-tile rasterization.
     rast = backend.rasterize_groups(
         proj,
         gtable,
@@ -207,16 +320,16 @@ def _render_gstg(backend: Backend, proj, cam, cfg, background) -> RenderResult:
     )
     stats = RenderStats(
         n_visible=jnp.sum(proj.valid.astype(jnp.int32)),
-        n_candidate_tests=pairs.n_candidate_tests,
-        n_pairs_sort=pairs.n_pairs,
+        n_candidate_tests=n_tests,
+        n_pairs_sort=n_pairs,
         sort_ops=sort_op_count(gtable.lengths),
         n_bit_tests=masks.n_bit_tests,
-        fifo_ops=jnp.sum(gtable.lengths) * grid.tiles_per_group,
+        fifo_ops=wide_count_sum(gtable.lengths) * grid.tiles_per_group,
         alpha_ops=rast.alpha_ops,
         blend_ops=rast.blend_ops,
         tile_entries=compacted.tile_entries,
         overflow=gtable.overflow + compacted.overflow,
-        span_overflow=pairs.n_span_overflow,
+        span_overflow=n_span,
     )
     return RenderResult(image=rast.image, stats=stats)
 
@@ -331,10 +444,30 @@ def _single_renderer(cfg: RenderConfig, width, height, znear, zfar):
     return jax.jit(_render_with_traced_camera(cfg, width, height, znear, zfar))
 
 
+# Auxiliary renderer-adjacent caches (name -> (info_fn, clear_fn)). Any
+# module that builds a private cache on the render path (e.g. the sharded
+# scene-layout cache in serving/sharded.py) MUST register it here so
+# ``render_cache_clear``/``render_cache_info`` stay the single source of
+# truth — the serving cache-hit stats are deltas of render_cache_info and
+# a cache outside this registry would make them lie.
+_AUX_RENDER_CACHES: dict = {}
+
+
+def register_render_cache(name: str, *, info, clear) -> None:
+    """Register an auxiliary cache under ``name``. ``info()`` must return a
+    dict with at least ``hits``/``misses`` ints (the cache_delta contract,
+    serving/stats.py); ``clear()`` must drop every entry and reset both."""
+    if name in ("single", "batch"):
+        raise ValueError(f"cache name {name!r} is reserved")
+    _AUX_RENDER_CACHES[name] = (info, clear)
+
+
 def render_cache_clear() -> None:
-    """Drop all cached compiled renderers (single + batch)."""
+    """Drop ALL cached compiled renderers and registered auxiliary caches."""
     _batch_renderer.cache_clear()
     _single_renderer.cache_clear()
+    for _, clear in _AUX_RENDER_CACHES.values():
+        clear()
 
 
 def _info_dict(info) -> dict:
@@ -347,17 +480,22 @@ def _info_dict(info) -> dict:
 
 
 def render_cache_info() -> dict:
-    """Executable-cache statistics as plain dicts.
+    """Statistics for EVERY renderer cache as plain dicts.
 
-    ``{"single": {hits, misses, currsize, maxsize}, "batch": {...}}`` — used
-    by tests/benchmarks to assert signature reuse, by ``launch/render.py
-    --stats``, and by the serving stats (serving/stats.py) so the CLI and the
-    server report cache hits in the same units.
+    ``{"single": {hits, misses, currsize, maxsize}, "batch": {...}, **aux}``
+    where ``aux`` covers each registered auxiliary cache (e.g.
+    ``"scene_layout"`` once serving/sharded.py is imported) — used by tests/
+    benchmarks to assert signature reuse, by ``launch/render.py --stats``,
+    and by the serving stats (serving/stats.py) so the CLI and the server
+    report cache hits in the same units.
     """
-    return {
+    out = {
         "single": _info_dict(_single_renderer.cache_info()),
         "batch": _info_dict(_batch_renderer.cache_info()),
     }
+    for name, (info, _) in _AUX_RENDER_CACHES.items():
+        out[name] = info()
+    return out
 
 
 def _background_array(background) -> jnp.ndarray:
@@ -367,7 +505,7 @@ def _background_array(background) -> jnp.ndarray:
 
 
 def render_jit(
-    scene: GaussianScene,
+    scene: SceneLike,
     cam: Camera,
     cfg: RenderConfig,
     background: Optional[jnp.ndarray] = None,
@@ -389,7 +527,7 @@ def render_jit(
 
 
 def render_batch(
-    scene: GaussianScene,
+    scene: SceneLike,
     cams: Union[CameraBatch, Sequence[Camera]],
     cfg: RenderConfig,
     background: Optional[jnp.ndarray] = None,

@@ -36,7 +36,14 @@ import jax.numpy as jnp
 from repro.core.bitmask import GroupBitmasks, compact_tiles, generate_bitmasks
 from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
-from repro.core.grouping import BinTable, GridSpec, PairSet, bin_pairs, identify
+from repro.core.grouping import (
+    BinTable,
+    GridSpec,
+    PairSet,
+    bin_pairs,
+    identify,
+    merge_bin_tables,
+)
 from repro.core.projection import Projected, project
 from repro.core.raster import rasterize
 
@@ -101,6 +108,16 @@ class Backend(abc.ABC):
     # -- stage 3: binning + depth sort -----------------------------------
     def bin(self, pairs: PairSet, num_bins: int, capacity: int) -> BinTable:
         return bin_pairs(pairs, num_bins, capacity)
+
+    # -- stage 3b: cross-shard merge (scene-sharded frontend) ------------
+    def merge(self, tables: BinTable, depth: jnp.ndarray) -> BinTable:
+        """Combine D per-shard bin tables (shard-stacked, gauss_idx already
+        global) into the global depth-ordered table. Shared XLA substrate for
+        every backend: the STABLE merge is what preserves the (depth,
+        insertion-order) tie-break bitwise (core/grouping.py::
+        merge_bin_tables, DESIGN.md §10) — a kernel backend may accelerate
+        its own stages but must keep this merge order-exact."""
+        return merge_bin_tables(tables, depth)
 
     # -- stage 4: bitmask generation (BGM) -------------------------------
     @abc.abstractmethod

@@ -32,14 +32,39 @@ def make_host_mesh(data: int = 1, model: int = 1):
     )
 
 
-def make_render_mesh(devices: int | None = None):
-    """1-D ('data',) mesh for camera-batch sharding (serving/sharded.py).
+def render_mesh_shards(n_devices: int, scene_shards: int) -> int:
+    """The physical shard count a render mesh over ``n_devices`` can realize:
+    ``scene_shards`` when it divides the device count, else 1 (the shard axis
+    stays logical — correct results, no per-device memory saving). THE single
+    fallback policy: serving/sharded.py, serving/server.py,
+    launch/render_serve.py and the benchmarks all route through it."""
+    if scene_shards > 1 and n_devices % scene_shards == 0:
+        return scene_shards
+    return 1
 
-    Rendering is embarrassingly parallel over the camera axis, so the render
-    serving tier uses a pure-DP mesh: ``devices=None`` takes every local
-    device (the single-host serving deployment); an explicit count takes a
-    prefix (tests pin 1)."""
+
+def make_render_mesh(devices: int | None = None, scene_shards: int = 1):
+    """Render-serving mesh (serving/sharded.py).
+
+    ``scene_shards == 1``: the classic 1-D ('data',) pure-DP mesh — rendering
+    is embarrassingly parallel over the camera axis. ``scene_shards = D > 1``:
+    a 2-D ('data', 'model') mesh laying cameras over 'data' and the gaussian
+    shard axis of a ShardedScene over 'model' (DESIGN.md §10) — each device
+    holds one camera slice x one scene shard, which is what lets a scene
+    larger than a single device's replicated budget render at all.
+
+    ``devices=None`` takes every local device (the single-host serving
+    deployment); an explicit count takes a prefix (tests pin 1)."""
     n = len(jax.devices()) if devices is None else devices
     if n <= 0:
         raise ValueError(f"render mesh needs >= 1 device, got {n}")
-    return jax.make_mesh((n,), ("data",), **_axis_type_kwargs(1))
+    if scene_shards <= 1:
+        return jax.make_mesh((n,), ("data",), **_axis_type_kwargs(1))
+    if n % scene_shards:
+        raise ValueError(
+            f"scene_shards={scene_shards} must divide the device count {n}"
+        )
+    return jax.make_mesh(
+        (n // scene_shards, scene_shards), ("data", "model"),
+        **_axis_type_kwargs(2),
+    )

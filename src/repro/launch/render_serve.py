@@ -2,6 +2,8 @@
 
   PYTHONPATH=src python -m repro.launch.render_serve --requests 32 --rate 60
   PYTHONPATH=src python -m repro.launch.render_serve --backend pallas --devices 2
+  PYTHONPATH=src python -m repro.launch.render_serve --devices 2 \
+      --scene-shards 2 --parity-check   # gaussian-sharded scenes, DESIGN.md §10
 
 Generates an open-loop Poisson arrival stream over a mix of scenes and
 resolutions (so the bucketer has real work to do), replays it through
@@ -30,6 +32,22 @@ def parse_args(argv=None):
     ap.add_argument("--devices", type=int, default=None,
                     help="shard dispatches over N devices (CPU: forces N "
                          "virtual host devices; must run before jax init)")
+    ap.add_argument("--scene-shards", type=int, default=1,
+                    help="shard the GAUSSIAN axis D ways over the mesh "
+                         "'model' axis (DESIGN.md §10); must divide the "
+                         "device count to be physically sharded, otherwise "
+                         "the shard axis stays logical")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="refuse to serve if any scene's PER-DEVICE "
+                         "parameter bytes (full size replicated; 1/D when "
+                         "physically sharded) exceed this budget — a "
+                         "simulated HBM cap on the persistent scene "
+                         "storage; transient per-camera projected features "
+                         "are not included (DESIGN.md §10)")
+    ap.add_argument("--parity-check", action="store_true",
+                    help="re-render every completed request on the "
+                         "replicated single-camera path and require BITWISE "
+                         "identical images (the scene-sharded CI smoke)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=60.0,
                     help="Poisson arrival rate (req/s)")
@@ -88,19 +106,49 @@ def main(argv=None):
     use_dev = min(args.devices or n_dev, n_dev)
     if args.devices and args.devices > n_dev:
         print(f"warning: requested {args.devices} devices, have {n_dev}")
-    mesh = make_render_mesh(use_dev)
+    from repro.launch.mesh import render_mesh_shards
+
+    shards = max(args.scene_shards, 1)
+    phys_shards = render_mesh_shards(use_dev, shards)
+    if shards > 1 and phys_shards == 1:
+        print(f"note: scene_shards={shards} does not divide "
+              f"{use_dev} devices; shard axis stays logical")
+    mesh = make_render_mesh(use_dev, scene_shards=phys_shards)
 
     scene_ids = [s.strip() for s in args.scenes.split(",") if s.strip()]
     scenes = {
         sid: scene_like_paper(jax.random.key(i), sid, args.gaussians)
         for i, sid in enumerate(scene_ids)
     }
+
+    # Simulated device-HBM cap: the per-device scene footprint is the full
+    # scene when replicated, 1/D when PHYSICALLY gaussian-sharded over the
+    # mesh 'model' axis. A logical-only shard axis does NOT reduce per-device
+    # bytes (every device still holds the whole scene), so it counts as 1.
+    if args.device_budget_mb is not None:
+        from repro.utils import pytree_bytes
+
+        for sid, scene in scenes.items():
+            per_dev_mb = pytree_bytes(scene) / phys_shards / 2**20
+            if per_dev_mb > args.device_budget_mb:
+                layout = (
+                    f"{phys_shards}-way sharded" if phys_shards > 1
+                    else "replicated"
+                )
+                print(f"render_serve: FAILED (scene {sid!r} needs "
+                      f"{per_dev_mb:.2f} MB/device {layout}, budget "
+                      f"{args.device_budget_mb} MB — raise --scene-shards)")
+                return 2
+            print(f"scene {sid!r}: {per_dev_mb:.2f} MB/device within "
+                  f"{args.device_budget_mb} MB budget (shards={phys_shards})")
+
     cfg = RenderConfig(
         mode=args.mode,
         backend=args.backend,
         group_capacity=args.capacity,
         tile_capacity=args.capacity,
         span=6,
+        scene_shards=shards,
     )
 
     # Camera pools per resolution: orbit viewpoints, drawn round-robin per
@@ -123,12 +171,46 @@ def main(argv=None):
         max_batch=args.max_batch,
         max_wait=args.max_wait,
         queue_depth=args.queue_depth,
+        scene_shards=shards,
     )
     print(f"serving {args.requests} requests @ {args.rate:.0f} req/s "
           f"({len(scene_ids)} scenes x {len(resolutions)} resolutions, "
-          f"backend={args.backend}, devices={use_dev})")
+          f"backend={args.backend}, devices={use_dev}, "
+          f"scene_shards={shards})")
     results = server.run(load, realtime=not args.no_realtime)
     print(server.stats.format())
+
+    parity_failures = 0
+    if args.parity_check:
+        import dataclasses as _dc
+
+        from repro.serving.bucketing import padded_size
+        from repro.serving.sharded import render_batch_sharded
+        from repro.sharding.policies import data_extent
+
+        # Compare through the SAME padded dispatch shape the server compiles
+        # (pad_to=max_batch over the same mesh) — only the gaussian layout
+        # differs, which is exactly the invariant under test. (Eager render()
+        # or an unpadded B=1 batch is NOT the reference: a differently-shaped
+        # program may fuse differently, moving fp rounding by ~1 ulp for
+        # sharded and replicated alike.)
+        cfg_repl = _dc.replace(cfg, scene_shards=1)
+        pad_shape = padded_size(args.max_batch, data_extent(mesh))
+        by_id = {r.request_id: r for _, r in load}
+        for rid, res in sorted(results.items()):
+            req = by_id[rid]
+            expect = np.asarray(
+                render_batch_sharded(
+                    scenes[req.scene_id], [req.camera], cfg_repl,
+                    mesh=mesh, pad_to=pad_shape,
+                ).image[0]
+            )
+            if not (expect == res.image).all():
+                parity_failures += 1
+                print(f"parity MISMATCH: request {rid} (scene "
+                      f"{req.scene_id!r}) diverges from the replicated path")
+        print(f"parity-check: {len(results) - parity_failures}/{len(results)} "
+              f"bitwise-identical to the replicated path")
 
     if args.trace_json:
         trace = {
@@ -150,13 +232,17 @@ def main(argv=None):
             json.dump(trace, f, indent=2)
         print(f"wrote {args.trace_json}")
 
-    # CI assertions: nothing lost, latency distribution sane.
+    # CI assertions: nothing lost, latency distribution sane, parity holds.
     lost = args.requests - len(results) - server.stats.rejected
     p99 = server.stats.summary()["p99_ms"]
-    ok = lost == 0 and len(results) > 0 and math.isfinite(p99)
+    ok = (
+        lost == 0 and len(results) > 0 and math.isfinite(p99)
+        and parity_failures == 0
+    )
     print(f"render_serve: {'OK' if ok else 'FAILED'} "
           f"(completed={len(results)}/{args.requests}, "
-          f"rejected={server.stats.rejected}, lost={lost}, p99={p99:.1f}ms)")
+          f"rejected={server.stats.rejected}, lost={lost}, p99={p99:.1f}ms, "
+          f"parity_failures={parity_failures})")
     return 0 if ok else 1
 
 

@@ -19,6 +19,7 @@ from repro.serving.stats import BucketStats, ServingStats, cache_delta, percenti
 _LAZY = {
     "render_batch_sharded": "repro.serving.sharded",
     "pad_camera_batch": "repro.serving.sharded",
+    "shard_scene_cached": "repro.serving.sharded",
     "RenderServer": "repro.serving.server",
     "RequestResult": "repro.serving.server",
     "poisson_arrivals": "repro.serving.server",

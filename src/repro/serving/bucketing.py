@@ -4,7 +4,11 @@ Groups pending ``RenderRequest``s into buckets keyed by the static jit
 signature (scene id, RenderConfig, camera geometry) so that EVERY dispatch
 hits one cached executable from core/pipeline.py — mixing resolutions,
 backends, or tile/group configs in a batch would force a recompile, which is
-the one thing a serving hot loop must never do.
+the one thing a serving hot loop must never do. ``RenderConfig.scene_shards``
+rides inside the config, so the gaussian-sharded layout of a scene is
+selectable per request signature with no scheduler changes: replicated and
+sharded dispatches of the same scene land in different buckets by
+construction (DESIGN.md §10).
 
 Flush policy (the classic batching latency/throughput dial):
   * a bucket flushes immediately when it reaches ``max_batch`` requests;

@@ -47,9 +47,14 @@ class RequestResult:
 class RenderServer:
     """Serves render requests against a registry of scenes.
 
-    ``mesh=None`` shards each dispatch over all local devices (1-D mesh,
-    built lazily on first dispatch so constructing a server never touches
-    device state).
+    ``mesh=None`` shards each dispatch over all local devices (built lazily
+    on first dispatch so constructing a server never touches device state);
+    ``scene_shards = D > 1`` builds the 2-D (data, model) render mesh and
+    commits scenes gaussian-sharded over 'model' (DESIGN.md §10). Requests
+    choose their own layout via ``cfg.scene_shards`` — it is part of the
+    bucket signature, so replicated and sharded dispatches of the same scene
+    never mix in a batch; a request's shard count must be 1 or match the
+    server's mesh.
     """
 
     def __init__(
@@ -60,32 +65,57 @@ class RenderServer:
         max_batch: int = 8,
         max_wait: float = 0.05,
         queue_depth: int = 64,
+        scene_shards: int = 1,
         clock=time.monotonic,
     ):
         self.scenes = dict(scenes)
         self._mesh = mesh
+        self.scene_shards = scene_shards
         self._clock = clock
         self.queue = RequestQueue(queue_depth, clock=clock)
         self.scheduler = BucketingScheduler(max_batch, max_wait, clock=clock)
         self.stats = ServingStats()
         self.results: Dict[int, RequestResult] = {}
-        self._committed: Dict[str, GaussianScene] = {}
+        self._committed: Dict[Tuple[str, int], object] = {}
 
     @property
     def mesh(self):
         if self._mesh is None:
-            from repro.launch.mesh import make_render_mesh
+            import jax
 
-            self._mesh = make_render_mesh()
+            from repro.launch.mesh import make_render_mesh, render_mesh_shards
+
+            # Logical shard axis when D does not divide the device count
+            # (single-device tests still serve sharded layouts correctly —
+            # they just do not save per-device memory).
+            self._mesh = make_render_mesh(
+                scene_shards=render_mesh_shards(
+                    len(jax.devices()), self.scene_shards
+                )
+            )
         return self._mesh
 
     # -- admission ----------------------------------------------------------
 
+    def _layout_ok(self, req: RenderRequest) -> bool:
+        """A request's gaussian layout must be replicated (1) or match the
+        server's configured shard count — a mismatched layout would raise
+        inside the dispatch and kill the loop for everyone behind it, so it
+        is screened at admission (pure Python, no device touch)."""
+        return getattr(req.cfg, "scene_shards", 1) in (1, self.scene_shards)
+
     def submit(self, req: RenderRequest) -> bool:
         """Non-blocking admission; False = backpressure (queue at depth).
-        Raises KeyError for an unknown scene (a caller bug, not load)."""
+        Raises KeyError for an unknown scene and ValueError for a scene-shard
+        layout the server's mesh cannot serve (caller bugs, not load)."""
         if req.scene_id not in self.scenes:
             raise KeyError(f"unknown scene {req.scene_id!r}")
+        if not self._layout_ok(req):
+            raise ValueError(
+                f"request {req.request_id} wants scene_shards="
+                f"{getattr(req.cfg, 'scene_shards', 1)} but this server "
+                f"serves 1 or {self.scene_shards}"
+            )
         ok = self.queue.try_put(req)
         if not ok:
             self.stats.count_rejected()
@@ -120,31 +150,46 @@ class RenderServer:
             for bucket in self.scheduler.flush_all():
                 self._dispatch(bucket)
 
-    def _scene_on_mesh(self, scene_id: str) -> GaussianScene:
-        """Scene committed (replicated) to the mesh ONCE; every dispatch then
-        reuses the device copy instead of re-transferring it."""
-        if scene_id not in self._committed:
+    def _scene_on_mesh(self, scene_id: str, shards: int):
+        """Scene committed to the mesh ONCE per (scene, layout); every
+        dispatch then reuses the device copy instead of re-transferring it.
+        ``shards == 1`` commits the replicated scene; ``shards = D > 1``
+        commits the canonical sharded layout over the mesh's 'model' axis."""
+        key = (scene_id, shards)
+        if key not in self._committed:
             import jax
             from jax.sharding import NamedSharding
 
-            from repro.sharding.policies import render_replicated_pspec
-
-            self._committed[scene_id] = jax.device_put(
-                self.scenes[scene_id],
-                NamedSharding(self.mesh, render_replicated_pspec()),
+            from repro.serving.sharded import shard_scene_cached
+            from repro.sharding.policies import (
+                render_replicated_pspec,
+                scene_shard_pspec,
             )
-        return self._committed[scene_id]
+
+            scene = self.scenes[scene_id]
+            if shards > 1:
+                scene = shard_scene_cached(scene, shards)
+                spec = scene_shard_pspec(self.mesh)
+            else:
+                spec = render_replicated_pspec()
+            self._committed[key] = jax.device_put(
+                scene, NamedSharding(self.mesh, spec)
+            )
+        return self._committed[key]
 
     def _dispatch(self, bucket: Bucket) -> None:
         reqs = bucket.requests
-        scene = self._scene_on_mesh(reqs[0].scene_id)
         cfg = reqs[0].cfg
+        shards = getattr(cfg, "scene_shards", 1)
+        scene = self._scene_on_mesh(reqs[0].scene_id, shards)
         batch = CameraBatch.from_cameras([r.camera for r in reqs])
         # Fixed dispatch shape: every bucket of a signature pads to
-        # max_batch (rounded to the device count), so ragged max_wait
-        # flushes reuse the ONE compiled program instead of tracing a new
-        # shape (DESIGN.md §9 invariant).
-        shape = padded_size(self.scheduler.max_batch, self.mesh.size)
+        # max_batch (rounded to the camera-lane count — the mesh's DATA
+        # extent), so ragged max_wait flushes reuse the ONE compiled program
+        # instead of tracing a new shape (DESIGN.md §9 invariant).
+        from repro.sharding.policies import data_extent
+
+        shape = padded_size(self.scheduler.max_batch, data_extent(self.mesh))
 
         before = render_cache_info()
         t0 = self._clock()
@@ -194,13 +239,14 @@ class RenderServer:
         for the scheduler unit tests). ``realtime=False`` enqueues the whole
         backlog and drains it (closed-loop throughput mode: buckets fill to
         max_batch regardless of max_wait — what bench_serving measures).
-        Unknown-scene requests in a load are counted as rejections and
-        skipped rather than killing the requests behind them. Returns the
-        results map; ``stats.wall_s`` is stamped on exit.
+        Unknown-scene and unservable-layout (scene_shards mismatch) requests
+        in a load are counted as rejections and skipped rather than killing
+        the requests behind them. Returns the results map; ``stats.wall_s``
+        is stamped on exit.
         """
         t_start = self._clock()
         for offset, req in load:
-            if req.scene_id not in self.scenes:
+            if req.scene_id not in self.scenes or not self._layout_ok(req):
                 self.stats.count_rejected()
                 continue
             if realtime:

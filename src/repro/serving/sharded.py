@@ -1,15 +1,30 @@
-"""Device-sharded batched rendering: ``render_batch`` over a 1-D mesh.
+"""Device-sharded batched rendering: cameras x gaussians over a render mesh.
 
 ``render_batch_sharded`` is a drop-in superset of ``core.pipeline.
 render_batch``: same arguments plus an optional mesh, same ``RenderResult``
-(image ``(B, H, W, 3)``, stats ``(B,)``). The camera batch axis is laid over
-the mesh's data axis (sharding/policies.py) while the scene and background
-stay replicated; XLA partitions the vmapped renderer by propagating the
-input shardings — no renderer changes, the SAME lru-cached executable
-wrapper from core/pipeline.py serves sharded and unsharded calls, so the
-serving cache counters see one signature either way.
+(image ``(B, H, W, 3)``, stats ``(B,)``). Two sharding dimensions compose
+(DESIGN.md §9/§10):
 
-Ragged batches (B not divisible by the device count) are padded by
+  * the CAMERA batch axis lays over the mesh's 'data' axis
+    (``camera_batch_pspec``) — embarrassingly parallel, scales with traffic;
+  * the GAUSSIAN axis lays over the mesh's 'model' axis when
+    ``cfg.scene_shards > 1``: the scene is put in the canonical padded/
+    sharded layout (``sharding/scene.py``) and device_put with
+    ``scene_shard_pspec``, so each device holds 1/D of the scene — the
+    engine's per-shard frontend + stable merge keeps results
+    bitwise-identical to the replicated path, and scenes beyond one
+    device's replicated HBM budget become servable.
+
+XLA partitions the vmapped renderer by propagating the input shardings — no
+renderer changes, the SAME lru-cached executable wrapper from
+core/pipeline.py serves replicated and sharded calls, so the serving cache
+counters see one signature either way. The one private cache this module
+adds — the padded/sharded scene LAYOUT per (scene, D) — is registered with
+``core.pipeline.register_render_cache`` so ``render_cache_clear()`` /
+``render_cache_info()`` cover it and the server's cache-hit stats stay
+truthful.
+
+Ragged batches (B not divisible by the data extent) are padded by
 replicating the last camera (serving/bucketing.py ``pad_indices``) and the
 padded tail is sliced off the result tree — mask-correct because camera
 renders are independent (DESIGN.md §9).
@@ -17,11 +32,13 @@ renders are independent (DESIGN.md §9).
 On a 1-device mesh the padded batch IS the batch and the program XLA builds
 is the unpartitioned one, so results are bitwise-identical to
 ``render_batch`` (asserted in benchmarks/bench_serving.py and
-tests/test_serving.py).
+tests/test_serving.py); scene-sharded parity on 1..4 (virtual) devices is
+asserted in tests/test_sharding.py.
 """
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Optional, Sequence, Union
 
 import jax
@@ -37,10 +54,17 @@ from repro.core.pipeline import (
     _background_array,
     _batch_renderer,
     batch_signature,
+    register_render_cache,
 )
-from repro.launch.mesh import make_render_mesh
+from repro.launch.mesh import make_render_mesh, render_mesh_shards
 from repro.serving.bucketing import pad_indices_to, padded_size
-from repro.sharding.policies import camera_batch_pspec, render_replicated_pspec
+from repro.sharding.policies import (
+    camera_batch_pspec,
+    data_extent,
+    render_replicated_pspec,
+    scene_shard_pspec,
+)
+from repro.sharding.scene import ShardedScene, shard_scene_host
 
 
 def pad_camera_batch(batch: CameraBatch, target: int) -> CameraBatch:
@@ -62,29 +86,122 @@ def pad_camera_batch(batch: CameraBatch, target: int) -> CameraBatch:
     )
 
 
+# ---------------------------------------------------------------------------
+# Scene-layout cache (registered with the engine's cache registry)
+# ---------------------------------------------------------------------------
+
+_LAYOUT_CACHE_MAX = 16
+_layout_cache: dict = {}           # (id(scene), D) -> ShardedScene
+_layout_stats = {"hits": 0, "misses": 0}
+
+
+def _layout_info() -> dict:
+    return {
+        "hits": _layout_stats["hits"],
+        "misses": _layout_stats["misses"],
+        "currsize": len(_layout_cache),
+        "maxsize": _LAYOUT_CACHE_MAX,
+    }
+
+
+def _layout_clear() -> None:
+    _layout_cache.clear()
+    _layout_stats["hits"] = 0
+    _layout_stats["misses"] = 0
+
+
+register_render_cache("scene_layout", info=_layout_info, clear=_layout_clear)
+
+
+def shard_scene_cached(scene: GaussianScene, num_shards: int) -> ShardedScene:
+    """Host-side ``shard_scene_host`` memoized per (scene identity, D).
+
+    The padded/sharded layout of a served scene is rebuilt at most once per
+    dispatch stream and held as HOST arrays (numpy): it never pins device
+    memory — ``device_put`` with ``scene_shard_pspec`` transfers each shard
+    to its own device, with no full-scene allocation on any single device.
+    Entries are evicted when the source scene is garbage collected (weakref
+    finalizer — id() keys alone could alias a recycled object) or by FIFO
+    once the cache holds ``_LAYOUT_CACHE_MAX`` layouts. Covered by
+    ``render_cache_clear``/``render_cache_info`` ("scene_layout").
+    """
+    key = (id(scene), int(num_shards))
+    hit = _layout_cache.get(key)
+    if hit is not None:
+        _layout_stats["hits"] += 1
+        return hit
+    _layout_stats["misses"] += 1
+    out = shard_scene_host(scene, num_shards)
+    while len(_layout_cache) >= _LAYOUT_CACHE_MAX:
+        _layout_cache.pop(next(iter(_layout_cache)))
+    _layout_cache[key] = out
+    weakref.finalize(scene, _layout_cache.pop, key, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharded dispatch
+# ---------------------------------------------------------------------------
+
+
 def render_batch_sharded(
-    scene: GaussianScene,
+    scene: Union[GaussianScene, ShardedScene],
     cams: Union[CameraBatch, Sequence[Camera]],
     cfg: RenderConfig,
     background=None,
     *,
     mesh: Optional[Mesh] = None,
     pad_to: Optional[int] = None,
+    scene_shards: Optional[int] = None,
 ) -> RenderResult:
-    """Render B cameras in ONE jit call, batch axis sharded over ``mesh``.
+    """Render B cameras in ONE jit call, cameras (and optionally gaussians)
+    sharded over ``mesh``.
 
-    ``mesh=None`` builds a 1-D mesh over all local devices. The batch is
-    padded to ``max(B, pad_to)`` rounded up to the device count; a serving
-    loop passes its max batch as ``pad_to`` so EVERY dispatch of a signature
-    has one fixed shape (one compiled program even for ragged max_wait
-    flushes). Returns exactly B images/stats regardless of padding.
+    ``scene_shards`` (default: ``cfg.scene_shards``, or the layout of an
+    already-sharded scene) selects the gaussian-axis shard count D;
+    ``mesh=None`` builds the matching render mesh over all local devices
+    (2-D when D > 1). A mesh without a 'model' axis is allowed with D > 1:
+    the shard axis then stays logical (single-device tests, benchmarks). The
+    batch is padded to ``max(B, pad_to)`` rounded up to the mesh's DATA
+    extent; a serving loop passes its max batch as ``pad_to`` so EVERY
+    dispatch of a signature has one fixed shape (one compiled program even
+    for ragged max_wait flushes). Returns exactly B images/stats regardless
+    of padding.
     """
+    if scene_shards is None:
+        scene_shards = (
+            scene.num_shards
+            if isinstance(scene, ShardedScene)
+            else cfg.scene_shards
+        )
+    if cfg.scene_shards != scene_shards:
+        cfg = dataclasses.replace(cfg, scene_shards=scene_shards)
+
     batch = cams if isinstance(cams, CameraBatch) else CameraBatch.from_cameras(cams)
     if mesh is None:
-        mesh = make_render_mesh()
+        # Logical shard axis when D does not divide the local device count
+        # (the docstring's single-device contract); an explicit mesh keeps
+        # make_render_mesh's loud error.
+        mesh = make_render_mesh(
+            scene_shards=render_mesh_shards(len(jax.devices()), scene_shards)
+        )
+    model_extent = dict(mesh.shape).get("model", 1)
+    if scene_shards > 1 and model_extent not in (1, scene_shards):
+        raise ValueError(
+            f"mesh model axis ({model_extent}) must match scene_shards="
+            f"{scene_shards} (or be absent for a logical-only shard axis)"
+        )
+
     orig = len(batch)
-    padded = pad_camera_batch(
-        batch, padded_size(max(orig, pad_to or 0), mesh.size)
+    lanes = data_extent(mesh)
+    padded = pad_camera_batch(batch, padded_size(max(orig, pad_to or 0), lanes))
+
+    if scene_shards > 1 and isinstance(scene, GaussianScene):
+        scene = shard_scene_cached(scene, scene_shards)
+    scene_spec = (
+        scene_shard_pspec(mesh)
+        if isinstance(scene, ShardedScene)
+        else render_replicated_pspec()
     )
 
     shard = NamedSharding(mesh, camera_batch_pspec(mesh))
@@ -93,7 +210,7 @@ def render_batch_sharded(
 
     fn = _batch_renderer(*batch_signature(cfg, padded))
     out = fn(
-        jax.device_put(scene, repl),
+        jax.device_put(scene, NamedSharding(mesh, scene_spec)),
         put_b(padded.R), put_b(padded.t),
         put_b(padded.fx), put_b(padded.fy),
         put_b(padded.cx), put_b(padded.cy),

@@ -66,10 +66,15 @@ class BucketStats:
 
 
 def cache_delta(before: dict, after: dict) -> Dict[str, int]:
-    """hits/misses deltas summed over the single+batch executable caches,
-    from two ``render_cache_info()`` snapshots."""
+    """hits/misses deltas summed over EVERY renderer cache reported by
+    ``render_cache_info()`` — the single/batch executable caches plus any
+    registered auxiliary cache (e.g. the sharded scene-layout cache).
+    Tolerates caches that registered between the two snapshots."""
     return {
-        key: sum(after[kind][key] - before[kind][key] for kind in after)
+        key: sum(
+            after[kind].get(key, 0) - before.get(kind, {}).get(key, 0)
+            for kind in after
+        )
         for key in ("hits", "misses")
     }
 

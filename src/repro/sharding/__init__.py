@@ -1,7 +1,32 @@
-from repro.sharding.policies import (
-    activation_rules,
-    make_constrain,
-    param_rules,
-)
+"""Sharding policies (logical-axis -> mesh-axis rules) and the canonical
+scene-sharded layout.
 
-__all__ = ["activation_rules", "make_constrain", "param_rules"]
+Lazy re-exports: ``policies`` pulls in the LM model configs and ``scene``
+pulls in the render core — importing ``repro.sharding`` must stay free of
+both so either side can depend on this package without importing the other.
+"""
+
+_LAZY = {
+    "activation_rules": "repro.sharding.policies",
+    "make_constrain": "repro.sharding.policies",
+    "param_rules": "repro.sharding.policies",
+    "camera_batch_pspec": "repro.sharding.policies",
+    "data_extent": "repro.sharding.policies",
+    "render_replicated_pspec": "repro.sharding.policies",
+    "scene_shard_pspec": "repro.sharding.policies",
+    "ShardedScene": "repro.sharding.scene",
+    "shard_scene": "repro.sharding.scene",
+    "shard_scene_host": "repro.sharding.scene",
+    "scene_flat": "repro.sharding.scene",
+    "unshard_scene": "repro.sharding.scene",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -136,17 +136,41 @@ def camera_batch_pspec(mesh: Mesh) -> P:
     """PartitionSpec for the camera-batch axis of the render serving tier.
 
     The batch axis lays over the mesh's data axes (camera renders are
-    independent); everything else about a render — the scene, the background
-    — is replicated via ``render_replicated_pspec``. Batch sizes must be
-    padded to the data-axis extent first (serving/bucketing.py pad helpers).
+    independent); the background is replicated via ``render_replicated_pspec``
+    and the scene is either replicated or gaussian-sharded over 'model'
+    (``scene_shard_pspec``). Batch sizes must be padded to the DATA-axis
+    extent first (``data_extent``; serving/bucketing.py pad helpers) — on a
+    2-D (data, model) render mesh the camera axis splits over 'data' only.
     """
     return P(_data_axes(mesh))
 
 
+def data_extent(mesh: Mesh) -> int:
+    """Number of camera lanes a render mesh provides: the product of its
+    data-axis sizes (== mesh.size on a pure-DP 1-D render mesh)."""
+    axes = _data_axes(mesh)
+    axes = (axes,) if isinstance(axes, str) else axes
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
 def render_replicated_pspec() -> P:
-    """Fully-replicated spec for the scene/background operands of a sharded
-    render: every device rasterizes its camera shard against the whole
-    scene (scene-level sharding is a future multi-host item, ROADMAP)."""
+    """Fully-replicated spec for the background (and for scenes small enough
+    to replicate): every device rasterizes its camera shard against the whole
+    operand."""
+    return P()
+
+
+def scene_shard_pspec(mesh: Mesh) -> P:
+    """Spec for a ``ShardedScene`` (sharding/scene.py): the leading shard
+    axis D lays over the mesh's 'model' axis, every other axis replicated —
+    each device holds 1/D of the Gaussian set (DESIGN.md §10). On a mesh
+    without a 'model' axis the shard axis stays logical (unpartitioned),
+    which is how single-device tests exercise the sharded engine."""
+    if "model" in mesh.axis_names:
+        return P("model")
     return P()
 
 

@@ -1,0 +1,164 @@
+"""Canonical padded/sharded layout of the Gaussian axis (DESIGN.md §10).
+
+``ShardedScene`` is THE layout every scene-sharded entry point agrees on:
+the Gaussian axis is padded up to a multiple of the shard count and reshaped
+to a leading ``(D, N_pad // D)`` shard axis, gaussian-contiguous (shard ``d``
+holds global gaussians ``[d * shard_size, (d + 1) * shard_size)``). Contiguity
+is load-bearing: the engine's stable cross-shard merge
+(``core/grouping.py::merge_bin_tables``) reconstructs the replicated
+(depth, insertion-order) tie-break from *shard-major* concatenation order,
+which equals global gaussian order only for this layout.
+
+Padding rows are real (finite, NaN-free) gaussians that the projection stage
+culls: opacity logit ``PAD_OPACITY`` puts their alpha far below the 1/255
+visibility cutoff, so ``Projected.valid`` is False and every counter
+(n_visible, candidate tests, pairs) sees exactly the unpadded scene.
+
+The partition spec that lays the shard axis over a mesh lives with the other
+policies (``sharding/policies.py::scene_shard_pspec``); this module is pure
+layout so ``core/pipeline.py`` can depend on it without touching mesh or
+model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gaussians import GaussianScene
+from repro.utils import cdiv
+
+# Opacity logit for padding rows: sigmoid(-30) ~ 9e-14 << 1/255, so padded
+# gaussians fail the visible_alpha cull and never reach identification.
+PAD_OPACITY = -30.0
+
+
+@dataclasses.dataclass
+class ShardedScene:
+    """A GaussianScene in the canonical padded/sharded layout.
+
+    ``shards`` holds the ordinary scene arrays with a leading ``(D, Ns)``
+    shard axis; ``num_real`` is the unpadded gaussian count (static pytree
+    metadata, so it survives jit/vmap). Constructed by ``shard_scene``.
+    """
+
+    shards: GaussianScene   # every field with leading (D, Ns) axes
+    num_real: int           # static: gaussians before padding
+
+    @property
+    def num_shards(self) -> int:
+        return self.shards.means3d.shape[0]
+
+    @property
+    def shard_size(self) -> int:
+        return self.shards.means3d.shape[1]
+
+    @property
+    def num_gaussians(self) -> int:
+        """Unpadded count (mirrors GaussianScene.num_gaussians)."""
+        return self.num_real
+
+    @property
+    def padded_size(self) -> int:
+        return self.num_shards * self.shard_size
+
+
+jax.tree_util.register_dataclass(
+    ShardedScene, data_fields=["shards"], meta_fields=["num_real"]
+)
+
+SceneLike = Union[GaussianScene, ShardedScene]
+
+# Per-field padding fill. Everything but opacity pads with zeros (quat zero
+# normalizes to the identity rotation under the norm guard; zero scales/means
+# are finite) — the opacity logit alone guarantees the cull.
+_PAD_FILL = {"opacity": PAD_OPACITY}
+
+
+def shard_scene(scene: GaussianScene, num_shards: int) -> ShardedScene:
+    """Pad + reshape a scene into the canonical gaussian-contiguous layout.
+
+    Traceable (pure jnp), so ``render()`` can shard in-trace when handed a
+    plain scene with ``cfg.scene_shards > 1``; callers that want the device
+    placement to happen once (serving) use ``shard_scene_host`` ahead of
+    time — it builds the same layout on the host, so the full padded scene
+    never has to fit one device — and ``device_put`` the result with
+    ``scene_shard_pspec``.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    n = scene.num_gaussians
+    if n < 1:
+        raise ValueError("cannot shard an empty scene")
+    size = cdiv(n, num_shards)
+    pad = size * num_shards - n
+
+    def prep(name: str, x: jnp.ndarray) -> jnp.ndarray:
+        if pad:
+            fill = jnp.full((pad,) + x.shape[1:], _PAD_FILL.get(name, 0.0), x.dtype)
+            x = jnp.concatenate([x, fill], axis=0)
+        return x.reshape(num_shards, size, *x.shape[1:])
+
+    shards = GaussianScene(
+        **{
+            f.name: prep(f.name, getattr(scene, f.name))
+            for f in dataclasses.fields(scene)
+        }
+    )
+    return ShardedScene(shards=shards, num_real=n)
+
+
+def shard_scene_host(scene: GaussianScene, num_shards: int) -> ShardedScene:
+    """``shard_scene`` on the HOST (numpy): the staging step for serving.
+
+    Builds the identical canonical layout (pad + reshape are pure layout
+    ops — bitwise-equal to the traced version) without ever allocating the
+    full padded scene on a device: the returned leaves are host arrays, and
+    ``device_put`` with ``scene_shard_pspec`` then transfers each shard to
+    its own device. Use this ahead-of-time path for scenes near the
+    per-device HBM budget; the jnp ``shard_scene`` is for in-trace use.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    n = scene.num_gaussians
+    if n < 1:
+        raise ValueError("cannot shard an empty scene")
+    size = cdiv(n, num_shards)
+    pad = size * num_shards - n
+
+    def prep(name: str, x) -> np.ndarray:
+        x = np.asarray(x)
+        if pad:
+            fill = np.full(
+                (pad,) + x.shape[1:], _PAD_FILL.get(name, 0.0), x.dtype
+            )
+            x = np.concatenate([x, fill], axis=0)
+        return x.reshape(num_shards, size, *x.shape[1:])
+
+    shards = GaussianScene(
+        **{
+            f.name: prep(f.name, getattr(scene, f.name))
+            for f in dataclasses.fields(scene)
+        }
+    )
+    return ShardedScene(shards=shards, num_real=n)
+
+
+def scene_flat(scene: ShardedScene) -> GaussianScene:
+    """The padded flat ``(D * Ns, ...)`` view of a sharded scene.
+
+    ``scene_flat(shard_scene(s, d))`` equals ``s`` on the first
+    ``s.num_gaussians`` rows bitwise; the tail is cull-guaranteed padding.
+    """
+    return jax.tree.map(
+        lambda x: x.reshape(x.shape[0] * x.shape[1], *x.shape[2:]), scene.shards
+    )
+
+
+def unshard_scene(scene: ShardedScene) -> GaussianScene:
+    """Invert ``shard_scene``: flatten and drop the padding rows."""
+    flat = scene_flat(scene)
+    return jax.tree.map(lambda x: x[: scene.num_real], flat)

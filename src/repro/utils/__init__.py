@@ -1,3 +1,17 @@
-from repro.utils.misc import cdiv, round_up, pytree_bytes, pytree_count
+from repro.utils.misc import (
+    cdiv,
+    pytree_bytes,
+    pytree_count,
+    round_up,
+    wide_count_dtype,
+    wide_count_sum,
+)
 
-__all__ = ["cdiv", "round_up", "pytree_bytes", "pytree_count"]
+__all__ = [
+    "cdiv",
+    "round_up",
+    "pytree_bytes",
+    "pytree_count",
+    "wide_count_dtype",
+    "wide_count_sum",
+]

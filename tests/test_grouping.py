@@ -1,10 +1,20 @@
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grouping import GridSpec, bin_pairs, identify, sort_op_count
+from repro.core.grouping import (
+    GridSpec,
+    PairSet,
+    bin_pairs,
+    identify,
+    merge_bin_tables,
+    sort_op_count,
+)
 from repro.core.projection import project
 from repro.core import make_camera, random_scene
+from repro.utils import wide_count_dtype, wide_count_sum
 
 
 def _setup(seed=0, n=600, w=256, h=192):
@@ -69,3 +79,130 @@ def test_grid_spec_validation():
         GridSpec(100, 100, 16, 64)  # not tile-divisible
     with pytest.raises(ValueError):
         GridSpec(128, 128, 16, 40)  # group not multiple of tile
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard merge stage (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_pairs(rng, n_gauss, span, num_bins):
+    """Gaussian-major synthetic pair list with FORCED depth ties (depths drawn
+    from 4 values) so the merge's insertion-order tie-break is exercised."""
+    S = span * span
+    bin_id = rng.integers(0, num_bins + 1, size=(n_gauss, S)).astype(np.int32)
+    hit = bin_id < num_bins
+    depth = rng.choice([1.0, 2.0, 3.0, 5.0], size=(n_gauss, S)).astype(np.float32)
+    depth = np.where(hit, depth, np.inf)
+    bin_id = np.where(hit, bin_id, num_bins).astype(np.int32)
+    gauss = np.broadcast_to(
+        np.arange(n_gauss, dtype=np.int32)[:, None], (n_gauss, S)
+    )
+    flat = lambda a: jnp.asarray(a.reshape(-1))
+    zero = jnp.zeros((), jnp.int32)
+    return PairSet(
+        bin_id=flat(bin_id), gauss_idx=flat(gauss), depth=flat(depth),
+        valid=flat(hit), n_candidate_tests=zero, n_pairs=zero,
+        n_span_overflow=zero,
+    )
+
+
+def _shard_pairs(pairs, n_gauss, shards, span):
+    """Slice the gaussian-major pair list into contiguous gaussian shards
+    (what the sharded frontend's per-shard identify produces)."""
+    S = span * span
+    size = -(-n_gauss // shards)
+    out = []
+    for d in range(shards):
+        lo, hi = d * size, min((d + 1) * size, n_gauss)
+        sl = slice(lo * S, hi * S)
+        out.append(
+            dataclasses.replace(
+                pairs,
+                bin_id=pairs.bin_id[sl],
+                gauss_idx=pairs.gauss_idx[sl] - lo,
+                depth=pairs.depth[sl],
+                valid=pairs.valid[sl],
+            )
+        )
+    return out, size
+
+
+def test_merge_bin_tables_bitwise_vs_global():
+    """D per-shard tables + stable merge == binning the global pair set,
+    field for field — including under depth ties (insertion-order tie-break)
+    and per-bin capacity overflow (merged top-K == global top-K)."""
+    rng = np.random.default_rng(0)
+    n_gauss, span, num_bins = 60, 3, 7
+    pairs = _synthetic_pairs(rng, n_gauss, span, num_bins)
+    depth_by_gauss = rng.uniform(1.0, 9.0, size=n_gauss).astype(np.float32)
+    # Per-gaussian depths (as projection produces): rebuild pair depths so the
+    # merge's depth gather (a per-gaussian lookup) matches the pair keys.
+    depth_flat = jnp.where(
+        pairs.valid, jnp.asarray(depth_by_gauss)[pairs.gauss_idx], jnp.inf
+    )
+    # Quantize to force cross-gaussian ties.
+    depth_flat = jnp.where(
+        jnp.isfinite(depth_flat), jnp.round(depth_flat), jnp.inf
+    )
+    pairs = dataclasses.replace(pairs, depth=depth_flat)
+    gauss_depth = jnp.round(jnp.asarray(depth_by_gauss))
+
+    for capacity in (64, 6):   # no-overflow and overflow regimes
+        for shards in (1, 2, 3):
+            ref = bin_pairs(pairs, num_bins, capacity)
+            shard_pairs, size = _shard_pairs(pairs, n_gauss, shards, span)
+            tables = [bin_pairs(p, num_bins, capacity) for p in shard_pairs]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
+            offs = (jnp.arange(shards, dtype=jnp.int32) * size)[:, None, None]
+            gidx = jnp.where(
+                stacked.entry_valid, stacked.gauss_idx + offs, 0
+            )
+            pad_depth = jnp.concatenate(
+                [gauss_depth,
+                 jnp.full((shards * size - n_gauss,), jnp.inf, jnp.float32)]
+            )
+            depth = jnp.where(
+                stacked.entry_valid, pad_depth[gidx], jnp.inf
+            )
+            merged = merge_bin_tables(
+                dataclasses.replace(stacked, gauss_idx=gidx), depth
+            )
+            for field in ("gauss_idx", "entry_valid", "lengths", "overflow"):
+                a = np.asarray(getattr(ref, field))
+                b = np.asarray(getattr(merged, field))
+                assert (a == b).all(), (capacity, shards, field)
+
+
+# ---------------------------------------------------------------------------
+# Wide op counters (int32-overflow regression, multi-million-Gaussian scenes)
+# ---------------------------------------------------------------------------
+
+
+def test_sort_op_count_no_int32_wraparound():
+    """Synthetic lengths whose true op count exceeds 2**31: the old int32
+    accumulator wrapped negative; the wide counter must stay positive and
+    within fp rounding of the exact total."""
+    lengths = jnp.full((64,), 10_000_000, jnp.int32)
+    ops = float(sort_op_count(lengths))
+    exact = 64 * 10_000_000 * 24          # ceil(log2 1e7) == 24
+    assert ops > 2**31
+    assert abs(ops - exact) / exact < 1e-5
+
+
+def test_wide_count_sum_no_int32_wraparound():
+    """The fifo_ops-style accumulation (sum of lengths x tiles_per_group)
+    stays positive past 2**31."""
+    lengths = jnp.full((2048,), 2**20, jnp.int32)
+    total = float(wide_count_sum(lengths)) * 16
+    assert total == float(2**31) * 16 > 2**31
+
+
+def test_identify_counter_dtype_is_wide():
+    proj, grid = _setup()
+    pg = identify(proj, grid, "tile", "ellipse")
+    assert pg.n_candidate_tests.dtype == wide_count_dtype()
+    # small-regime exactness: the wide counter agrees with an int count
+    exact = int(np.asarray(pg.valid).sum())
+    assert int(pg.n_pairs) == exact
+    assert int(pg.n_candidate_tests) >= exact

@@ -269,6 +269,68 @@ def test_server_end_to_end(tiny_scene, serving_cfg):
     assert np.isfinite(s["p99_ms"]) and s["fps"] > 0
 
 
+def test_render_cache_covers_scene_layout(tiny_scene):
+    """render_cache_clear()/render_cache_info() must cover ALL renderer
+    caches, including the sharded scene-LAYOUT cache serving/sharded.py
+    keeps — otherwise the server's cache-hit stats (deltas of
+    render_cache_info) would lie about sharded dispatches."""
+    from repro.core.pipeline import render_cache_clear, render_cache_info
+    from repro.serving.sharded import shard_scene_cached
+
+    render_cache_clear()
+    info = render_cache_info()
+    assert "scene_layout" in info
+    assert (info["scene_layout"]["hits"], info["scene_layout"]["misses"]) == (0, 0)
+
+    a = shard_scene_cached(tiny_scene, 2)
+    b = shard_scene_cached(tiny_scene, 2)    # hit: same scene, same layout
+    shard_scene_cached(tiny_scene, 4)        # miss: different shard count
+    assert a is b
+    info = render_cache_info()["scene_layout"]
+    assert info["hits"] == 1 and info["misses"] == 2 and info["currsize"] == 2
+
+    render_cache_clear()                     # must drop the layout cache too
+    info = render_cache_info()["scene_layout"]
+    assert (info["hits"], info["misses"], info["currsize"]) == (0, 0, 0)
+
+
+def test_server_scene_sharded_end_to_end(tiny_scene, serving_cfg):
+    """Scene-sharded requests through the full queue -> bucket -> dispatch
+    path: bitwise-identical to the replicated batched render, and the
+    replicated/sharded layouts of one scene never share a bucket."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core import make_camera
+    from repro.core.pipeline import render_batch
+    from repro.launch.mesh import make_render_mesh
+    from repro.serving.queue import RenderRequest
+    from repro.serving.server import RenderServer
+
+    cfg_sh = dataclasses.replace(serving_cfg, scene_shards=2)
+    cams = [
+        make_camera((1.5 - 0.3 * i, 1.0, 4.0), (0, 0, 0), 64, 64)
+        for i in range(4)
+    ]
+    reqs = [
+        RenderRequest(i, "scene", cam, cfg_sh if i % 2 else serving_cfg)
+        for i, cam in enumerate(cams)
+    ]
+    server = RenderServer(
+        {"scene": tiny_scene}, mesh=make_render_mesh(1),
+        max_batch=2, max_wait=0.0, queue_depth=16, scene_shards=2,
+    )
+    results = server.run([(0.0, r) for r in reqs], realtime=False)
+    assert sorted(results) == [0, 1, 2, 3]
+    assert len(server.stats.buckets) == 2    # replicated vs sharded split
+    for r in reqs:
+        expect = render_batch(tiny_scene, [r.camera], serving_cfg)
+        assert (
+            results[r.request_id].image == np.asarray(expect.image[0])
+        ).all(), f"request {r.request_id} diverges from replicated batch"
+
+
 def test_server_backpressure_and_unknown_scene(tiny_scene, serving_cfg):
     from repro.core import make_camera
     from repro.serving.queue import RenderRequest
@@ -281,6 +343,53 @@ def test_server_backpressure_and_unknown_scene(tiny_scene, serving_cfg):
     assert server.stats.rejected == 1
     with pytest.raises(KeyError):
         server.submit(RenderRequest(2, "nope", cam, serving_cfg))
+
+
+def test_server_rejects_unservable_scene_shards(tiny_scene, serving_cfg):
+    """A request whose cfg.scene_shards neither is 1 nor matches the server
+    must be screened at ADMISSION (submit raises; run skips + rejects) —
+    letting it reach the dispatch would kill the loop for every queued
+    request behind it."""
+    import dataclasses
+
+    from repro.core import make_camera
+    from repro.serving.queue import RenderRequest
+    from repro.serving.server import RenderServer
+
+    cam = make_camera((0, 1, 4), (0, 0, 0), 64, 64)
+    bad_cfg = dataclasses.replace(serving_cfg, scene_shards=4)
+    server = RenderServer({"scene": tiny_scene}, scene_shards=2)
+    with pytest.raises(ValueError, match="scene_shards"):
+        server.submit(RenderRequest(0, "scene", cam, bad_cfg))
+    # run(): the bad request is rejected, the good one still completes.
+    load = [
+        (0.0, RenderRequest(1, "scene", cam, bad_cfg)),
+        (0.0, RenderRequest(2, "scene", cam, serving_cfg)),
+    ]
+    results = server.run(load, realtime=False)
+    assert sorted(results) == [2]
+    assert server.stats.rejected == 1
+
+
+def test_render_batch_sharded_default_mesh_logical_fallback(
+    tiny_scene, serving_cfg
+):
+    """mesh=None with a shard count that does not divide the device count
+    must fall back to the logical shard axis (the docstring's single-device
+    contract), not crash in make_render_mesh."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core import orbit_cameras
+    from repro.core.pipeline import render_batch
+    from repro.serving.sharded import render_batch_sharded
+
+    cams = orbit_cameras(2, 4.5, 64, 64)
+    cfg = dataclasses.replace(serving_cfg, scene_shards=3)
+    out = render_batch_sharded(tiny_scene, cams, cfg)   # 3 shards, 1 device
+    rep = render_batch(tiny_scene, cams, serving_cfg)
+    assert (np.asarray(out.image) == np.asarray(rep.image)).all()
 
 
 @pytest.mark.slow

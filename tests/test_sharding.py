@@ -1,13 +1,19 @@
-"""Distribution transparency: sharded train step == single-device step.
+"""Distribution transparency: sharded == single-device, for BOTH axes.
 
-Runs in a subprocess so the 8-device XLA host-platform flag never leaks into
-the main test process (smoke tests must see 1 device).
+Part 1 (LM): sharded train step == single-device step.
+Part 2 (render engine): the gaussian-sharded scene pipeline (DESIGN.md §10)
+is bitwise-identical — image AND integer counters — to the replicated path,
+for every mode, both backends, 1/2/3 logical shards in-process and 2/4
+virtual host devices in subprocesses (so the XLA host-platform flag never
+leaks into the main test process; smoke tests must see 1 device).
 """
+import dataclasses
 import json
 import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 _SCRIPT = r"""
@@ -86,3 +92,207 @@ def test_elastic_then_restore_shapes(tmp_path):
     mgr.save(1, tree)
     leaves, _ = mgr.restore()  # host arrays; device_put under new mesh is a
     assert (np.asarray(leaves[0]) == np.asarray(tree["w"])).all()
+
+
+# ===========================================================================
+# Scene sharding: gaussian-axis parity (DESIGN.md §10)
+# ===========================================================================
+
+
+CAM_POS = (0.0, 1.0, 4.0)
+
+
+def _cfg(**kw):
+    from repro.core.pipeline import RenderConfig
+
+    base = dict(tile=16, group=64, group_capacity=256, tile_capacity=256)
+    base.update(kw)
+    return RenderConfig(**base)
+
+
+def _assert_same_result(a, b, ctx=""):
+    assert (np.asarray(a.image) == np.asarray(b.image)).all(), (
+        f"image diverges {ctx}"
+    )
+    for name in vars(a.stats):
+        va, vb = np.asarray(getattr(a.stats, name)), np.asarray(
+            getattr(b.stats, name)
+        )
+        assert (va == vb).all(), f"counter {name} diverges {ctx}: {va} != {vb}"
+
+
+def test_shard_scene_canonical_layout(tiny_scene):
+    """Pad/shard/flatten round trip: contiguous layout, bitwise real rows,
+    cull-guaranteed padding rows."""
+    import jax
+    from repro.core.projection import project
+    from repro.core import make_camera
+    from repro.sharding.scene import scene_flat, shard_scene, unshard_scene
+
+    n = tiny_scene.num_gaussians          # 200
+    sharded = shard_scene(tiny_scene, 3)  # ragged: 200 -> 3 x 67
+    assert sharded.num_shards == 3 and sharded.shard_size == 67
+    assert sharded.num_real == n and sharded.padded_size == 201
+
+    flat = scene_flat(sharded)
+    for f in dataclasses.fields(tiny_scene):
+        a = np.asarray(getattr(tiny_scene, f.name))
+        b = np.asarray(getattr(flat, f.name))
+        assert (a == b[:n]).all(), f.name
+
+    # padding rows are culled by projection (alpha < 1/255)
+    cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
+    proj = project(flat, cam)
+    assert not np.asarray(proj.valid)[n:].any()
+
+    back = unshard_scene(sharded)
+    assert back.num_gaussians == n
+    with pytest.raises(ValueError):
+        shard_scene(tiny_scene, 0)
+
+    # The host-side staging path (serving) builds the IDENTICAL layout.
+    from repro.sharding.scene import shard_scene_host
+
+    hosted = shard_scene_host(tiny_scene, 3)
+    assert hosted.num_real == sharded.num_real
+    for f in dataclasses.fields(tiny_scene):
+        a = np.asarray(getattr(sharded.shards, f.name))
+        b = getattr(hosted.shards, f.name)
+        assert isinstance(b, np.ndarray) and (a == b).all(), f.name
+
+
+@pytest.mark.parametrize("mode", ["gstg", "tile_baseline", "group_baseline"])
+@pytest.mark.parametrize("shards", [1, 2, 3])
+def test_scene_sharded_render_parity(tiny_scene, mode, shards):
+    """The tentpole invariant: the sharded engine is bitwise-identical
+    (image + every integer counter) to the replicated path, for every mode,
+    including the degenerate 1-shard layout and ragged padding (200 % 3)."""
+    from repro.core import make_camera
+    from repro.core.pipeline import render
+    from repro.sharding.scene import shard_scene
+
+    cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
+    rep = render(tiny_scene, cam, _cfg(mode=mode))
+    # Pass the canonical layout explicitly — exercises the ShardedScene entry
+    # (the serving path) rather than the in-trace shard.
+    sh = render(
+        shard_scene(tiny_scene, shards), cam,
+        _cfg(mode=mode, scene_shards=shards),
+    )
+    _assert_same_result(rep, sh, f"(mode={mode}, shards={shards})")
+
+
+@pytest.mark.parametrize("bg,bt", [("aabb", "aabb"), ("obb", "ellipse")])
+def test_scene_sharded_lossless_combos(tiny_scene, bg, bt):
+    """Sharding composes with the §7 losslessness combos: gstg sharded ==
+    gstg replicated (bitwise) == tile_baseline (bitwise, lossless combo)."""
+    from repro.core import make_camera
+    from repro.core.pipeline import render
+
+    cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
+    cfg = _cfg(mode="gstg", boundary_group=bg, boundary_tile=bt)
+    rep = render(tiny_scene, cam, cfg)
+    sh = render(
+        tiny_scene, cam, dataclasses.replace(cfg, scene_shards=2)
+    )
+    _assert_same_result(rep, sh, f"({bg},{bt})")
+    base = render(tiny_scene, cam, _cfg(mode="tile_baseline", boundary_tile=bt))
+    assert (np.asarray(sh.image) == np.asarray(base.image)).all()
+
+
+def test_scene_shards_config_mismatch_raises(tiny_scene):
+    from repro.core import make_camera
+    from repro.core.pipeline import render
+    from repro.sharding.scene import shard_scene
+
+    cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
+    with pytest.raises(ValueError, match="scene_shards"):
+        render(shard_scene(tiny_scene, 2), cam, _cfg(scene_shards=3))
+
+
+def test_scene_sharded_batch_ragged_cameras(tiny_scene):
+    """Gaussian sharding x ragged camera padding: a B=3 batch through
+    render_batch_sharded with pad_to=4 and scene_shards=2 equals the
+    replicated render_batch row for row (both axes' padding is sliced)."""
+    from repro.core import orbit_cameras
+    from repro.core.pipeline import render_batch
+    from repro.launch.mesh import make_render_mesh
+    from repro.serving.sharded import render_batch_sharded
+
+    cams = orbit_cameras(3, 4.5, 128, 128)
+    cfg = _cfg()
+    rep = render_batch(tiny_scene, cams, cfg)
+    sh = render_batch_sharded(
+        tiny_scene, cams, cfg, mesh=make_render_mesh(1), pad_to=4,
+        scene_shards=2,
+    )
+    _assert_same_result(rep, sh, "(batch ragged)")
+
+
+@pytest.mark.slow
+def test_scene_sharded_pallas_parity(tiny_scene):
+    """Both backends honor the sharded frontend: pallas gstg sharded ==
+    pallas replicated bitwise (the kernels consume the merged table)."""
+    from repro.core import make_camera
+    from repro.core.pipeline import render
+
+    cam = make_camera(CAM_POS, (0, 0, 0), 64, 64)
+    cfg = _cfg(backend="pallas", group_capacity=128, tile_capacity=128)
+    rep = render(tiny_scene, cam, cfg)
+    sh = render(tiny_scene, cam, dataclasses.replace(cfg, scene_shards=2))
+    _assert_same_result(rep, sh, "(pallas)")
+
+
+_DEVICE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(devices)d"
+import dataclasses, json
+import jax, numpy as np
+
+from repro.core import orbit_cameras, random_scene
+from repro.core.pipeline import RenderConfig, render_batch
+from repro.launch.mesh import make_render_mesh
+from repro.serving.sharded import render_batch_sharded
+
+scene = random_scene(jax.random.key(3), 300, extent=3.0)
+cams = orbit_cameras(3, 4.5, 96, 96)   # ragged over the data axis
+failures = []
+for mode, backend in %(combos)s:
+    cfg = RenderConfig(mode=mode, backend=backend, group_capacity=256,
+                       tile_capacity=256, span=6)
+    rep = render_batch(scene, cams, cfg)
+    mesh = make_render_mesh(%(devices)d, scene_shards=%(shards)d)
+    sh = render_batch_sharded(scene, cams, cfg, mesh=mesh,
+                              scene_shards=%(shards)d)
+    if not (np.asarray(rep.image) == np.asarray(sh.image)).all():
+        failures.append((mode, backend, "image"))
+    for name in vars(rep.stats):
+        if not (np.asarray(getattr(rep.stats, name))
+                == np.asarray(getattr(sh.stats, name))).all():
+            failures.append((mode, backend, name))
+print(json.dumps({"failures": failures}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("devices,shards", [(2, 2), (4, 4), (4, 2)])
+def test_scene_sharded_virtual_devices(devices, shards):
+    """Physically sharded over 2/4 virtual host devices (2-D (data, model)
+    mesh, subprocess so the XLA flag stays contained): bitwise image +
+    identical counters vs the replicated path, gstg and tile_baseline —
+    pallas included on the 2-device mesh (interpret mode is slow)."""
+    combos = [("gstg", "reference"), ("tile_baseline", "reference")]
+    if devices == 2:
+        combos.append(("gstg", "pallas"))
+    script = _DEVICE_SCRIPT % {
+        "devices": devices, "shards": shards, "combos": repr(combos),
+    }
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["failures"] == [], res
