@@ -12,13 +12,13 @@ import time
 import jax
 
 from benchmarks.common import emit, scene_and_camera, timed
+from repro import engine
 from repro.core.camera import orbit_cameras
 from repro.core.gaussians import random_scene
 from repro.core.pipeline import (
     CameraBatch,
     RenderConfig,
     render_batch,
-    render_jit,
 )
 
 
@@ -30,8 +30,8 @@ def run() -> dict:
             mode=mode, tile=16, group=64,
             tile_capacity=1024, group_capacity=1024, span=6,
         )
-        fn = lambda s: render_jit(s, cam, cfg).image
-        us, _ = timed(fn, scene, reps=3)
+        with engine.open(scene, cfg) as r:
+            us, _ = timed(lambda: r.render(cam).image, reps=3)
         out[mode] = us
     emit(
         "render_walltime_cpu",
@@ -42,10 +42,10 @@ def run() -> dict:
 
     # --- batched multi-camera rendering: ONE jit call vs N-call loops ---
     # Cold path (first trajectory at a new resolution/config): the pre-engine
-    # idiom jits a fresh closure per camera and compiles N times; the engine
-    # compiles ONE executable — either shared across the render_jit loop or
-    # fused into a single vmapped render_batch program. Steady-state, the
-    # batch further collapses N dispatches into one (≈parity on this CPU,
+    # idiom jits a fresh closure per camera and compiles N times; a committed
+    # handle compiles ONE executable — either shared across a .render() loop
+    # or fused into a single vmapped .render_batch() program. Steady-state,
+    # the batch further collapses N dispatches into one (≈parity on this CPU,
     # where compute dominates; the dispatch amortization is the point on
     # accelerators and at serving batch sizes).
     n_views = 8
@@ -73,12 +73,11 @@ def run() -> dict:
     )
     batch_cold_us = cold(lambda: render_batch(bscene, batch, bcfg).image)
 
-    loop_us, _ = timed(
-        lambda s: [render_jit(s, c, bcfg).image for c in cams], bscene, reps=3
-    )
-    batch_us, _ = timed(
-        lambda s: render_batch(s, batch, bcfg).image, bscene, reps=3
-    )
+    with engine.open(bscene, bcfg) as r:
+        loop_us, _ = timed(
+            lambda: [r.render(c).image for c in cams], reps=3
+        )
+        batch_us, _ = timed(lambda: r.render_batch(batch).image, reps=3)
     out["multicam_percam_jit_cold"] = percam_cold_us
     out["multicam_batch_cold"] = batch_cold_us
     out["multicam_loop"] = loop_us

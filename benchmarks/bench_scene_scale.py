@@ -1,13 +1,13 @@
 """Scene-scale benchmark: throughput vs scene size, replicated vs
-gaussian-sharded dispatch (DESIGN.md §10).
+gaussian-sharded COMMITTED handles (DESIGN.md §10/§11).
 
-For each scene size the same 4-camera batch is rendered through
-``render_batch_sharded`` twice — once replicated (scene_shards=1), once
-gaussian-sharded — and the steady-state walltime is compared. Both variants
-are warmed through the EXACT call path that is then timed (same function,
-same mesh, same pad shape): the sharded dispatch compiles a different
-program (per-shard frontend + merge) and sees differently-committed inputs,
-so warming one path does not warm the other.
+For each scene size the same 4-camera batch is rendered through two engine
+handles — one committed replicated (scene_shards=1), one committed
+gaussian-sharded — and the steady-state walltime is compared. Both handles
+are warmed through the EXACT call path that is then timed (same handle,
+same mesh, same pad shape): the sharded handle compiles a different program
+(per-shard frontend + merge) against differently-committed inputs, so
+warming one does not warm the other.
 
 On a multi-device host the shard axis lays over the mesh 'model' axis and
 the benchmark shows where scene sharding starts paying; on one device the
@@ -16,6 +16,8 @@ overhead of the per-shard frontend + merge stage (the price of fitting a
 scene that could not be replicated at all). The report includes the
 crossover scene size, if any, where sharded dispatch matches replicated
 throughput. Parity (bitwise image) is asserted at the smallest size.
+Handles are closed per size, which also evicts their host scene layouts —
+the benchmark's host memory stays flat as sizes grow.
 """
 from __future__ import annotations
 
@@ -23,11 +25,11 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, timed
+from repro import engine
 from repro.core.camera import orbit_cameras
 from repro.core.gaussians import random_scene
 from repro.core.pipeline import RenderConfig, render_cache_clear
 from repro.launch.mesh import make_render_mesh, render_mesh_shards
-from repro.serving.sharded import render_batch_sharded
 
 SIZES = (2_000, 8_000, 24_000)
 N_CAMS = 4
@@ -55,10 +57,12 @@ def run() -> dict:
         scene = random_scene(jax.random.key(size), size, extent=3.0)
         row = {"gaussians": size}
         outs = {}
+        handles = {
+            d: engine.open(scene, cfg, mesh=meshes[d], scene_shards=d)
+            for d in (1, shards)
+        }
         for d in (1, shards):
-            fn = lambda: render_batch_sharded(
-                scene, cams, cfg, mesh=meshes[d], scene_shards=d
-            )
+            fn = lambda d=d: handles[d].render_batch(cams)
             us, out = timed(fn, reps=3)   # timed() warms with one extra call
             outs[d] = out
             key = "replicated" if d == 1 else "sharded"
@@ -67,7 +71,9 @@ def run() -> dict:
         if size == SIZES[0]:
             assert (
                 np.asarray(outs[1].image) == np.asarray(outs[shards].image)
-            ).all(), "sharded dispatch diverges from replicated"
+            ).all(), "sharded handle diverges from replicated"
+        for handle in handles.values():
+            handle.close()
         row["sharded_over_replicated"] = row["sharded_us"] / row["replicated_us"]
         rows.append(row)
         emit(

@@ -1,16 +1,26 @@
-"""Serving-tier benchmark: naive per-request render_jit loop vs the bucketed
-(+ sharded) serving stack, on identical request streams.
+"""Serving-tier benchmark: naive per-request handle renders vs the bucketed
+serving stack vs the handle's own futures front-end, on identical request
+streams (DESIGN.md §9/§11).
 
-Reports p50/p99 end-to-end latency and throughput (fps) for both paths,
-verifies every served image against the naive render of the same request
-(allclose), and checks the sharded entry's 1-device contract:
-``render_batch_sharded`` over a 1-device mesh is BITWISE-identical to
-``render_batch``.
+All three paths run through ONE committed engine handle topology:
 
-The served path must be >= the naive loop on throughput — both hit the same
-cached executables, the server just amortizes N python dispatches into one
-batched call (DESIGN.md §9), so losing would mean scheduler overhead exceeds
-the dispatch overhead it removes.
+  * naive     — ``Renderer.render`` per request, in arrival order (the
+                pre-serving idiom: one dispatch per camera);
+  * served    — the same backlog through ``RenderServer`` (queue ->
+                bucketer -> the server's shared handle, batched dispatch);
+  * futures   — ``Renderer.submit`` for every request, then gather (the
+                handle's internal queue+bucketing worker, same batching).
+
+Reports p50/p99 end-to-end latency and throughput (fps) for each, verifies
+every image against the naive render of the same request (allclose), and
+checks the handle's 1-device contract: ``Renderer.render_batch`` over a
+1-device mesh is BITWISE-identical to ``render_batch``.
+
+The served path must be >= the naive loop on throughput — both hit
+warm compiled renderers, the server just amortizes N python dispatches into
+one batched call (DESIGN.md §9), so losing would mean scheduler overhead
+exceeds the dispatch overhead it removes. Every path is warmed through the
+EXACT call path that is then timed (same handles, same pad shapes).
 """
 from __future__ import annotations
 
@@ -20,20 +30,14 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro import engine
 from repro.core.camera import orbit_cameras
 from repro.core.gaussians import random_scene
-from repro.core.pipeline import (
-    CameraBatch,
-    RenderConfig,
-    render_batch,
-    render_cache_clear,
-    render_jit,
-)
+from repro.core.pipeline import RenderConfig, render_batch
 from repro.launch.mesh import make_render_mesh
 from repro.serving.queue import RenderRequest
 from repro.serving.server import RenderServer
-from repro.serving.sharded import render_batch_sharded
-from repro.serving.stats import percentile
+from repro.serving.stats import ServingStats, percentile
 
 N_REQUESTS = 32
 MAX_BATCH = 8
@@ -45,31 +49,44 @@ def _requests(cfg):
     return [RenderRequest(i, "bench", cam, cfg) for i, cam in enumerate(cams)]
 
 
-def _naive(scene, reqs):
-    """The pre-serving idiom: one render_jit dispatch per request, in arrival
-    order. Latency = completion - start of the backlog (closed loop)."""
+def _naive(handle, reqs):
+    """The pre-serving idiom: one handle.render dispatch per request, in
+    arrival order. Latency = completion - start of the backlog (closed
+    loop)."""
     t0 = time.perf_counter()
     lat, images = [], []
     for r in reqs:
-        out = render_jit(scene, r.camera, r.cfg)
+        out = handle.render(r.camera)
         images.append(np.asarray(out.image))  # host copy = completion
         lat.append(time.perf_counter() - t0)
     return time.perf_counter() - t0, lat, images
 
 
-def _served(scene, reqs, mesh):
-    """Same backlog through queue -> bucketer -> sharded dispatch
-    (throughput mode: buckets fill to MAX_BATCH)."""
-    server = RenderServer(
-        {"bench": scene}, mesh=mesh,
-        max_batch=MAX_BATCH, max_wait=0.0, queue_depth=2 * N_REQUESTS,
-    )
+def _served(server, reqs):
+    """Same backlog through queue -> bucketer -> the server's committed
+    handle (throughput mode: buckets fill to MAX_BATCH)."""
     results = server.run([(0.0, r) for r in reqs], realtime=False)
     wall = server.stats.wall_s
     lat = [results[r.request_id].latency_s for r in reqs]
     images = [results[r.request_id].image for r in reqs]
     assert len(results) == len(reqs), "serving lost requests"
-    return wall, lat, images, server.stats
+    stats = server.stats
+    server.results.clear()
+    server.stats = ServingStats()          # fresh counters for the next rep
+    return wall, lat, images, stats
+
+
+def _futures(handle, reqs):
+    """Same backlog through the handle's submit() worker (the async
+    front-end): fire everything, then gather."""
+    t0 = time.perf_counter()
+    futs = [handle.submit(r.camera) for r in reqs]
+    lat, images = [], []
+    for f in futs:
+        res = f.result(timeout=600)
+        images.append(res.image)
+        lat.append(time.perf_counter() - t0)
+    return time.perf_counter() - t0, lat, images
 
 
 def run() -> dict:
@@ -81,47 +98,60 @@ def run() -> dict:
     reqs = _requests(cfg)
     mesh = make_render_mesh()
 
-    # --- contract check: sharded over 1 device == render_batch, bitwise ----
-    batch = CameraBatch.from_cameras([r.camera for r in reqs[:5]])
-    plain = render_batch(scene, batch, cfg)
-    shard1 = render_batch_sharded(scene, batch, cfg, mesh=make_render_mesh(1))
+    # --- contract check: handle batch over 1 device == render_batch --------
+    handle1 = engine.open(scene, cfg, mesh=make_render_mesh(1))
+    plain = render_batch(scene, [r.camera for r in reqs[:5]], cfg)
+    shard1 = handle1.render_batch([r.camera for r in reqs[:5]])
     assert (np.asarray(shard1.image) == np.asarray(plain.image)).all(), (
-        "render_batch_sharded(1-device) must be bitwise render_batch"
+        "Renderer.render_batch(1-device) must be bitwise render_batch"
     )
+    handle1.close()
 
-    # Warm both paths so neither pays compilation inside the timed region:
-    # the naive loop's single-camera executable, and the serving path's
-    # sharded batch executables (full buckets + the ragged tail) — the
-    # sharded call sees committed inputs, which XLA specializes separately
-    # from the uncommitted render_batch call above.
-    render_cache_clear()
-    render_jit(scene, reqs[0].camera, cfg)
-    for n in {MAX_BATCH, N_REQUESTS % MAX_BATCH} - {0}:
-        render_batch_sharded(
-            scene, CameraBatch.from_cameras([r.camera for r in reqs[:n]]),
-            cfg, mesh=mesh,
-        )
+    # ONE handle per path so each is warmed through the exact timed call
+    # path: the naive handle's single-camera executable, the server's
+    # committed batch executables (full buckets + the ragged tail), and the
+    # futures worker's padded dispatch shape.
+    naive_handle = engine.open(scene, cfg, mesh=mesh)
+    futures_handle = engine.open(
+        scene, cfg, mesh=mesh, max_batch=MAX_BATCH, max_wait=0.0,
+        queue_depth=2 * N_REQUESTS,
+    )
+    server = RenderServer(
+        {"bench": scene}, mesh=mesh,
+        max_batch=MAX_BATCH, max_wait=0.0, queue_depth=2 * N_REQUESTS,
+    )
+    _naive(naive_handle, reqs[:1])
+    _served(server, reqs)
+    _futures(futures_handle, reqs)
 
     # Best-of-2 per path: the compute is identical warmed executables either
     # way, so the honest comparison is the less-noisy rep of each (this CPU
     # is shared; a single rep can swing by more than the dispatch overhead
     # the server amortizes).
     naive_wall, naive_lat, naive_imgs = min(
-        (_naive(scene, reqs) for _ in range(2)), key=lambda r: r[0]
+        (_naive(naive_handle, reqs) for _ in range(2)), key=lambda r: r[0]
     )
     served_wall, served_lat, served_imgs, stats = min(
-        (_served(scene, reqs, mesh) for _ in range(2)), key=lambda r: r[0]
+        (_served(server, reqs) for _ in range(2)), key=lambda r: r[0]
+    )
+    fut_wall, fut_lat, fut_imgs = min(
+        (_futures(futures_handle, reqs) for _ in range(2)), key=lambda r: r[0]
     )
 
-    # Identical images for every served request.
-    for i, (a, b) in enumerate(zip(served_imgs, naive_imgs)):
+    # Identical images for every request on every path.
+    for i, (a, b, c) in enumerate(zip(served_imgs, naive_imgs, fut_imgs)):
         np.testing.assert_allclose(
             a, b, atol=1e-6, rtol=1e-6,
             err_msg=f"served image diverges from naive render (request {i})",
         )
+        np.testing.assert_allclose(
+            c, b, atol=1e-6, rtol=1e-6,
+            err_msg=f"futures image diverges from naive render (request {i})",
+        )
 
     naive_fps = N_REQUESTS / naive_wall
     served_fps = N_REQUESTS / served_wall
+    fut_fps = N_REQUESTS / fut_wall
     out = {
         "requests": N_REQUESTS,
         "max_batch": MAX_BATCH,
@@ -138,6 +168,11 @@ def run() -> dict:
             "batches": stats.summary()["batches"],
             "cache_hits": stats.summary()["cache_hits"],
         },
+        "futures": {
+            "wall_s": fut_wall, "fps": fut_fps,
+            "p50_ms": percentile(fut_lat, 50) * 1e3,
+            "p99_ms": percentile(fut_lat, 99) * 1e3,
+        },
         "speedup": served_fps / naive_fps,
     }
     emit(
@@ -150,10 +185,18 @@ def run() -> dict:
         f"fps={served_fps:.1f} p50={out['served']['p50_ms']:.0f}ms "
         f"p99={out['served']['p99_ms']:.0f}ms speedup={out['speedup']:.2f}x",
     )
+    emit(
+        "serving_futures", fut_wall / N_REQUESTS * 1e6,
+        f"fps={fut_fps:.1f} p50={out['futures']['p50_ms']:.0f}ms "
+        f"p99={out['futures']['p99_ms']:.0f}ms",
+    )
     assert served_fps >= naive_fps, (
         f"bucketed serving slower than the naive loop: "
         f"{served_fps:.1f} < {naive_fps:.1f} fps"
     )
+    server.close()
+    naive_handle.close()
+    futures_handle.close()
     return out
 
 

@@ -11,7 +11,7 @@ import numpy as np
 from repro.configs.gs_scenes import EVAL_RESOLUTION, PAPER_SCENES
 from repro.core import make_camera
 from repro.core.gaussians import scene_like_paper
-from repro.core.pipeline import RenderConfig, render_jit
+from repro.core.pipeline import RenderConfig
 
 # The four scenes the paper profiles in Figs 3/5/7/11/12/13 + the two
 # high-res scenes added for Figs 14/15.
@@ -45,9 +45,11 @@ def scene_and_camera(
 
 
 def render_stats(scene, cam, cfg: RenderConfig):
-    """Counters via the jit-cached engine entry (shared executable across
-    cameras of the same resolution and equal configs)."""
-    out = render_jit(scene, cam, cfg)
+    """Counters via the module-default engine handle (shared committed scene
+    + executable across cameras of the same resolution and equal configs)."""
+    from repro import engine
+
+    out = engine.default_renderer(scene, cfg).render(cam)
     return jax.tree.map(np.asarray, out.stats)
 
 

@@ -1,6 +1,20 @@
 """Quickstart: render a synthetic scene with GS-TG and verify losslessness.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Migration note (DESIGN.md §11): repeated rendering now goes through a
+session handle — commit the scene ONCE with ``repro.engine.open(scene,
+cfg)`` and call the handle. Each deprecated free function maps to:
+
+  render_jit(scene, cam, cfg)            -> engine.open(scene, cfg).render(cam)
+  render_image(scene, cam, cfg)          -> render(scene, cam, cfg).image
+                                            (differentiable/eager), or
+                                            handle.render(cam).image
+  render_batch_sharded(scene, cams, cfg) -> engine.open(scene, cfg,
+                                            mesh=...).render_batch(cams)
+
+``render()`` (eager single camera, the differentiable oracle) and
+``render_batch()`` (one-off batched jit) remain the low-level primitives.
 """
 import dataclasses
 import time
@@ -9,9 +23,10 @@ import numpy as np
 
 import jax
 
+from repro import engine
 from repro.core import make_camera, orbit_cameras, random_scene
 from repro.core.cost_model import GSTG_ASIC, estimate
-from repro.core.pipeline import RenderConfig, render, render_batch
+from repro.core.pipeline import RenderConfig, render
 
 
 def main():
@@ -57,19 +72,36 @@ def main():
     print(f"pallas backend           : image max|diff|={max_diff:.1e}  "
           f"counters identical={same_counters}")
 
-    # 8) batched multi-view rendering: N cameras in ONE jit call; the
-    #    compiled renderer is cached by (config, resolution) so the second
-    #    call dispatches straight to the executable.
+    # 8) the session handle (DESIGN.md §11): commit the scene ONCE, then
+    #    render single cameras, whole batches, or submit() futures through
+    #    one facade — the compiled renderers are cached per camera geometry
+    #    inside the handle, so the second batch dispatches straight to the
+    #    executable.
     small = random_scene(jax.random.key(1), 800, extent=3.0)
     cams = orbit_cameras(6, 4.5, 128, 128)
     bcfg = RenderConfig(mode="gstg", tile=16, group=64,
                         tile_capacity=256, group_capacity=256)
-    batch = render_batch(small, cams, bcfg)  # compiles
-    t0 = time.time()
-    batch = render_batch(small, cams, bcfg)  # cached
-    jax.block_until_ready(batch.image)
-    print(f"render_batch             : {batch.image.shape[0]} views "
-          f"{batch.image.shape[1:]} in {time.time()-t0:.3f}s (cached jit)")
+    with engine.open(small, bcfg, max_batch=6, max_wait=0.0) as renderer:
+        batch = renderer.render_batch(cams)  # compiles
+        t0 = time.time()
+        batch = renderer.render_batch(cams)  # cached
+        jax.block_until_ready(batch.image)
+        print(f"renderer.render_batch    : {batch.image.shape[0]} views "
+              f"{batch.image.shape[1:]} in {time.time()-t0:.3f}s (cached jit)")
+
+        # 9) the futures front-end: submit() batches concurrent requests
+        #    behind the scenes (queue -> bucketing worker) and resolves each
+        #    future with a host-side RenderResult.
+        futs = [renderer.submit(c) for c in cams]
+        imgs = [f.result(timeout=120).image for f in futs]
+        same = all(
+            (img == np.asarray(batch.image[i])).all()
+            for i, img in enumerate(imgs)
+        )
+        stats = renderer.stats()
+        print(f"renderer.submit futures  : {len(imgs)} results in "
+              f"{stats['batches']} batch(es), identical to render_batch: "
+              f"{same}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import make_camera, random_scene
-from repro.core.pipeline import RenderConfig, render_image
+from repro.core.pipeline import RenderConfig, render
 from repro.core.train import SceneTrainConfig, fit_scene
 
 
@@ -29,7 +29,7 @@ def main():
         make_camera((-3.0, 1.2, 2.5), (0, 0, 0), 96, 96),
     ]
     cfg = RenderConfig(tile=16, group=32, group_capacity=512, tile_capacity=512)
-    targets = [render_image(target_scene, c, cfg) for c in cams]
+    targets = [render(target_scene, c, cfg).image for c in cams]
 
     # start from a perturbed copy and recover the target scene
     init = dataclasses.replace(

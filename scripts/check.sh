@@ -18,25 +18,29 @@ python -m pytest "${PYTEST_ARGS[@]}"
 # them from pyproject's pythonpath, plain `python -m` does not.
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
+# Engine-handle smokes (DESIGN.md §11): both drivers run on the committed
+# Renderer handle (engine.open), so these exercise commit -> per-handle jit
+# cache -> render on each backend end to end.
 SMOKE="--scene train --gaussians 1200 --width 256 --height 192 --capacity 256"
-echo "== smoke render: reference backend =="
+echo "== engine-handle smoke render: reference backend =="
 python -m repro.launch.render $SMOKE --backend reference --stats
-echo "== smoke render: pallas backend =="
+echo "== engine-handle smoke render: pallas backend =="
 python -m repro.launch.render $SMOKE --backend pallas --stats
 
-# Serving smoke: a small synthetic load through queue -> bucketing -> sharded
-# dispatch; render_serve exits non-zero unless every request completes and
-# p99 latency is finite.
+# Serving smoke: a small synthetic load through queue -> bucketing -> the
+# server's shared handles; render_serve exits non-zero unless every request
+# completes and p99 latency is finite.
 echo "== smoke serve: reference backend =="
 python -m repro.launch.render_serve --backend reference \
     --requests 8 --rate 200 --gaussians 600 --scenes train \
     --resolutions 96x96,128x96 --max-batch 4 --max-wait 0.05
 
-# Scene-sharded smoke: 2 virtual host devices, gaussian axis over the mesh
-# 'model' axis (DESIGN.md §10). --parity-check re-renders every request on
-# the replicated path and requires BITWISE-identical images (exit non-zero
-# otherwise); the budget gate proves the per-device footprint halves.
-echo "== smoke serve: scene-sharded (2 virtual devices, bitwise parity) =="
+# Scene-sharded handle smoke: 2 virtual host devices, gaussian axis over the
+# mesh 'model' axis (DESIGN.md §10), committed through engine.open with the
+# handle-enforced --device-budget-mb gate (proves the per-device footprint
+# halves). --parity-check re-renders every request on a replicated handle
+# and requires BITWISE-identical images (exit non-zero otherwise).
+echo "== smoke serve: scene-sharded handle (2 virtual devices, bitwise parity) =="
 python -m repro.launch.render_serve --backend reference --devices 2 \
     --scene-shards 2 --parity-check --device-budget-mb 0.02 \
     --requests 6 --rate 200 --gaussians 500 --scenes train \

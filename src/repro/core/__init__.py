@@ -13,6 +13,7 @@ from repro.core.pipeline import (
     render_cache_info,
     render_image,
     render_jit,
+    unregister_render_cache,
 )
 from repro.core.projection import Projected, project
 from repro.core.stages import Backend, get_backend, register_backend
@@ -35,6 +36,7 @@ __all__ = [
     "render_cache_info",
     "render_image",
     "render_jit",
+    "unregister_render_cache",
     "Projected",
     "project",
     "Backend",

@@ -26,6 +26,11 @@ over the camera parameters); compiled renderers are cached by the static
 (RenderConfig, camera-geometry) signature so repeated multi-view calls reuse
 the executable (DESIGN.md §6).
 
+Session-style rendering lives in ``repro.engine`` (DESIGN.md §11):
+``engine.open(scene, cfg)`` commits the scene once and returns a handle with
+``.render/.render_batch/.submit``; ``render_jit``/``render_image`` here are
+deprecation shims over its module-default handle.
+
 The GAUSSIAN axis is a sharding dimension too (DESIGN.md §10): with
 ``cfg.scene_shards = D`` the frontend stages (project/identify/bin) run
 per-shard on the canonical padded layout (sharding/scene.py) and a stable
@@ -52,6 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import List, Optional, Sequence, Union
 
 import jax
@@ -334,9 +340,27 @@ def _render_gstg(backend: Backend, scene, cam, cfg, background) -> RenderResult:
     return RenderResult(image=rast.image, stats=stats)
 
 
+def _has_tracers(tree) -> bool:
+    """True when any leaf is a jax Tracer — the deprecation shims then stay
+    on the eager ``render`` path (a handle cannot commit a traced scene)."""
+    return any(isinstance(x, jax.core.Tracer) for x in jax.tree.leaves(tree))
+
+
 def render_image(scene, cam, cfg, background=None) -> jnp.ndarray:
-    """Convenience: image only (used by training/loss code)."""
-    return render(scene, cam, cfg, background).image
+    """Deprecated: ``render(scene, cam, cfg).image`` for differentiable /
+    in-trace use, or ``repro.engine.open(scene, cfg).render(cam).image`` for
+    repeated rendering through a committed handle (DESIGN.md §11)."""
+    warnings.warn(
+        "render_image() is deprecated; use render(scene, cam, cfg).image "
+        "(differentiable) or repro.engine.open(scene, cfg).render(cam).image",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if _has_tracers(scene):
+        return render(scene, cam, cfg, background).image
+    from repro import engine
+
+    return engine.default_renderer(scene, cfg).render(cam, background).image
 
 
 # ---------------------------------------------------------------------------
@@ -438,18 +462,13 @@ def _batch_renderer(cfg: RenderConfig, width, height, znear, zfar):
     return jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, None)))
 
 
-@functools.lru_cache(maxsize=64)
-def _single_renderer(cfg: RenderConfig, width, height, znear, zfar):
-    """Cached jit renderer for a single camera of the given static geometry."""
-    return jax.jit(_render_with_traced_camera(cfg, width, height, znear, zfar))
-
-
 # Auxiliary renderer-adjacent caches (name -> (info_fn, clear_fn)). Any
-# module that builds a private cache on the render path (e.g. the sharded
-# scene-layout cache in serving/sharded.py) MUST register it here so
-# ``render_cache_clear``/``render_cache_info`` stay the single source of
-# truth — the serving cache-hit stats are deltas of render_cache_info and
-# a cache outside this registry would make them lie.
+# module that builds a private cache on the render path (the sharded
+# scene-layout cache in serving/sharded.py, every open engine handle's jit
+# cache) MUST register it here so ``render_cache_clear``/
+# ``render_cache_info`` stay the single source of truth — the serving
+# cache-hit stats are deltas of render_cache_info and a cache outside this
+# registry would make them lie.
 _AUX_RENDER_CACHES: dict = {}
 
 
@@ -462,10 +481,16 @@ def register_render_cache(name: str, *, info, clear) -> None:
     _AUX_RENDER_CACHES[name] = (info, clear)
 
 
+def unregister_render_cache(name: str) -> None:
+    """Remove an auxiliary cache from the registry (a closed engine handle
+    must leave no trace in ``render_cache_info()``). Unknown names are a
+    no-op so close() stays idempotent."""
+    _AUX_RENDER_CACHES.pop(name, None)
+
+
 def render_cache_clear() -> None:
     """Drop ALL cached compiled renderers and registered auxiliary caches."""
     _batch_renderer.cache_clear()
-    _single_renderer.cache_clear()
     for _, clear in _AUX_RENDER_CACHES.values():
         clear()
 
@@ -482,15 +507,15 @@ def _info_dict(info) -> dict:
 def render_cache_info() -> dict:
     """Statistics for EVERY renderer cache as plain dicts.
 
-    ``{"single": {hits, misses, currsize, maxsize}, "batch": {...}, **aux}``
-    where ``aux`` covers each registered auxiliary cache (e.g.
-    ``"scene_layout"`` once serving/sharded.py is imported) — used by tests/
-    benchmarks to assert signature reuse, by ``launch/render.py --stats``,
-    and by the serving stats (serving/stats.py) so the CLI and the server
-    report cache hits in the same units.
+    ``{"batch": {hits, misses, currsize, maxsize}, **aux}`` where ``aux``
+    covers each registered auxiliary cache (``"scene_layout"`` once
+    serving/sharded.py is imported, one ``"engineN"`` entry per open handle)
+    — used by tests/benchmarks to assert signature reuse, by
+    ``launch/render.py --stats``, and by the serving stats
+    (serving/stats.py) so the CLI and the server report cache hits in the
+    same units.
     """
     out = {
-        "single": _info_dict(_single_renderer.cache_info()),
         "batch": _info_dict(_batch_renderer.cache_info()),
     }
     for name, (info, _) in _AUX_RENDER_CACHES.items():
@@ -510,20 +535,24 @@ def render_jit(
     cfg: RenderConfig,
     background: Optional[jnp.ndarray] = None,
 ) -> RenderResult:
-    """Single-camera render through the cached jit entry point.
+    """Deprecated: ``repro.engine.open(scene, cfg).render(cam)``.
 
-    Unlike ``jax.jit(render)`` ad hoc, repeated calls with ANY camera of the
-    same resolution reuse one compiled executable (pose/intrinsics are traced
-    arguments, not closure constants).
+    Delegates to the module-default handle for ``(scene, cfg)``
+    (``repro.engine.default_renderer``), which keeps the legacy behavior —
+    repeated calls with ANY camera of the same resolution reuse one compiled
+    executable — while the handle owns the committed scene (DESIGN.md §11).
     """
-    fn = _single_renderer(*batch_signature(cfg, cam))
-    return fn(
-        scene,
-        jnp.asarray(cam.R), jnp.asarray(cam.t),
-        jnp.float32(cam.fx), jnp.float32(cam.fy),
-        jnp.float32(cam.cx), jnp.float32(cam.cy),
-        _background_array(background),
+    warnings.warn(
+        "render_jit() is deprecated; open a handle with "
+        "repro.engine.open(scene, cfg) and call .render(cam)",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    if _has_tracers(scene):
+        return render(scene, cam, cfg, background)
+    from repro import engine
+
+    return engine.default_renderer(scene, cfg).render(cam, background)
 
 
 def render_batch(

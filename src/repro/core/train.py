@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
 from repro.core.metrics import dssim, psnr
-from repro.core.pipeline import RenderConfig, render_image
+from repro.core.pipeline import RenderConfig, render
 from repro.optim.adamw import adamw_init, adamw_update
 
 
@@ -34,7 +34,7 @@ class SceneTrainConfig:
 
 
 def scene_loss(scene: GaussianScene, cam: Camera, target, cfg: RenderConfig, lam: float):
-    img = render_image(scene, cam, cfg)
+    img = render(scene, cam, cfg).image
     l1 = jnp.mean(jnp.abs(img - target))
     return (1.0 - lam) * l1 + lam * dssim(img, target), img
 

@@ -1,0 +1,22 @@
+"""The session-style rendering engine (DESIGN.md §11).
+
+``engine.open(scene, cfg)`` commits a scene ONCE — placement (replicated or
+gaussian-sharded), render mesh, jit caches — and returns a ``Renderer``
+handle exposing ``.render``, ``.render_batch``, the futures-based
+``.submit`` front-end, ``.stats`` and context-manager ``.close``. The legacy
+free functions (``render_jit``/``render_image``/``render_batch_sharded``)
+are deprecation shims over :func:`default_renderer`.
+"""
+from repro.engine.handle import (
+    Renderer,
+    close_default_renderers,
+    default_renderer,
+    open,
+)
+
+__all__ = [
+    "Renderer",
+    "close_default_renderers",
+    "default_renderer",
+    "open",
+]

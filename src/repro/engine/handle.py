@@ -1,0 +1,629 @@
+"""Session-style rendering engine: commit a scene ONCE, render through a handle.
+
+``open(scene, cfg)`` resolves everything the five legacy free entry points
+(`render`, `render_jit`, `render_batch`, `render_batch_sharded`,
+``RenderServer``) each re-derived per call — scene placement (replicated vs
+the canonical :class:`~repro.sharding.scene.ShardedScene` layout), the 1-D or
+2-D render mesh, and the jit-cache keys — and commits them into a
+:class:`Renderer` handle (DESIGN.md §11):
+
+  * the scene is staged on the HOST (``shard_scene_cached`` when gaussian-
+    sharded, so the full padded scene never allocates on one device) and
+    ``device_put`` exactly once; every subsequent call reuses the device copy;
+  * the handle owns a per-handle jit cache, registered with the engine-wide
+    ``register_render_cache`` registry so ``render_cache_info()`` /
+    ``render_cache_clear()`` and the serving cache-hit stats keep covering it;
+  * ``.render(cam)`` / ``.render_batch(cams, pad_to=...)`` are the synchronous
+    entry points — bitwise-identical to the legacy ``render_jit`` /
+    ``render_batch`` / ``render_batch_sharded`` paths (tests/
+    test_engine_handle.py);
+  * ``.submit(cam)`` returns a ``concurrent.futures.Future`` served by an
+    internal queue -> bucketing-scheduler worker thread (the ROADMAP's
+    "threaded front-end": batching becomes an implementation detail of the
+    handle, and an asyncio caller just wraps the future);
+  * ``.close()`` (or the context manager) drains the worker, unregisters and
+    drops the jit cache, and evicts the handle's scene layouts from the
+    shared layout cache — the lifecycle fix for layouts that previously
+    stayed resident until the scene was garbage collected.
+
+The handle is intentionally a COMMIT of (scene, config): per-request knobs
+that change the compiled program (mode, backend, capacities, scene_shards)
+belong to a different handle — that is what makes the jit-cache key within a
+handle collapse to the camera geometry alone, and what gives multi-host
+serving and feature-sharded gathers a single owner of committed state to
+land in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+import weakref
+from concurrent.futures import Future
+from concurrent.futures import wait as _futures_wait
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core.camera import Camera
+from repro.core.gaussians import GaussianScene
+from repro.core.pipeline import (
+    CameraBatch,
+    RenderConfig,
+    RenderResult,
+    _background_array,
+    _render_with_traced_camera,
+    register_render_cache,
+    unregister_render_cache,
+)
+from repro.launch.mesh import make_render_mesh, render_mesh_shards
+from repro.serving.bucketing import BucketingScheduler, padded_size
+from repro.serving.queue import QueueClosed, RequestQueue
+from repro.serving.sharded import (
+    evict_scene_layouts,
+    pad_camera_batch,
+    shard_scene_cached,
+)
+from repro.sharding.policies import (
+    camera_batch_pspec,
+    data_extent,
+    render_replicated_pspec,
+    scene_shard_pspec,
+)
+from repro.sharding.scene import ShardedScene
+from repro.utils import pytree_bytes
+
+_HANDLE_SEQ = itertools.count()
+_FN_CACHE_MAX = 64          # per-handle compiled-renderer bound (mirrors the
+                            # legacy global lru maxsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Submitted:
+    """One queued ``submit()`` request: the camera plus its future.
+
+    Shaped for the serving primitives: the ``RequestQueue`` stamps
+    ``enqueue_time`` via ``dataclasses.replace`` and the
+    ``BucketingScheduler`` groups by ``signature()`` — within one handle the
+    config and scene are fixed, so the signature collapses to the camera
+    geometry (one bucket per resolution).
+    """
+
+    camera: Any
+    future: Future
+    enqueue_time: Optional[float] = None
+
+    def signature(self) -> tuple:
+        c = self.camera
+        return (c.width, c.height, c.znear, c.zfar)
+
+
+class Renderer:
+    """A committed (scene, config) pair with render/serve entry points.
+
+    Construct through :func:`open`. Not thread-safe for concurrent
+    ``render``/``render_batch`` calls from multiple threads (device dispatch
+    is serialized anyway); ``submit`` is the thread-safe entry — the bounded
+    queue is the boundary, and the internal worker owns all device work for
+    the futures path.
+    """
+
+    def __init__(
+        self,
+        scene: Union[GaussianScene, ShardedScene],
+        cfg: RenderConfig,
+        *,
+        devices: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+        scene_shards: Union[str, int] = "auto",
+        device_budget_mb: Optional[float] = None,
+        max_batch: int = 8,
+        max_wait: float = 0.05,
+        queue_depth: int = 64,
+        clock=time.monotonic,
+    ):
+        if devices is not None and mesh is not None:
+            raise ValueError("pass devices or mesh, not both")
+        shards = self._resolve_shards(scene, cfg, scene_shards)
+        self._source = scene if isinstance(scene, GaussianScene) else None
+
+        # The PHYSICAL shard count: what actually divides per-device bytes.
+        # On an explicit mesh it is the mesh's 'model' extent (a mesh without
+        # one leaves the shard axis logical — every device still holds the
+        # whole scene); otherwise the render_mesh_shards policy over the
+        # devices we are about to build the mesh from.
+        if mesh is not None:
+            n_dev = mesh.size
+            phys = (
+                shards
+                if shards > 1 and dict(mesh.shape).get("model", 1) == shards
+                else 1
+            )
+        else:
+            n_dev = devices if devices is not None else len(jax.devices())
+            phys = render_mesh_shards(n_dev, shards)
+        if device_budget_mb is not None:
+            total_mb = pytree_bytes(scene) / 2**20
+            # Budget escalation only applies when the caller left BOTH the
+            # layout and the mesh to us ('auto' shards, no explicit mesh —
+            # an explicit mesh cannot grow a 'model' axis): pick the
+            # smallest shard count the device count can realize that fits
+            # the per-device cap.
+            if (
+                scene_shards == "auto"
+                and mesh is None
+                and self._source is not None
+                and total_mb / phys > device_budget_mb
+            ):
+                for d in range(max(shards, 1), n_dev + 1):
+                    if n_dev % d == 0 and total_mb / d <= device_budget_mb:
+                        shards, phys = d, d
+                        break
+            if total_mb / phys > device_budget_mb:
+                layout = f"{phys}-way sharded" if phys > 1 else "replicated"
+                raise ValueError(
+                    f"scene needs {total_mb / phys:.2f} MB/device {layout}, "
+                    f"over the {device_budget_mb} MB budget — raise "
+                    f"scene_shards or the device count"
+                )
+
+        self._cfg = (
+            cfg if cfg.scene_shards == shards
+            else dataclasses.replace(cfg, scene_shards=shards)
+        )
+        if mesh is None:
+            mesh = make_render_mesh(devices, scene_shards=phys)
+        model_extent = dict(mesh.shape).get("model", 1)
+        if shards > 1 and model_extent not in (1, shards):
+            raise ValueError(
+                f"mesh model axis ({model_extent}) must match scene_shards="
+                f"{shards} (or be absent for a logical-only shard axis)"
+            )
+        self._mesh = mesh
+
+        # Commit: host-staged layout when sharded, then ONE device_put.
+        staged = scene
+        if shards > 1 and isinstance(scene, GaussianScene):
+            staged = shard_scene_cached(scene, shards)
+        spec = (
+            scene_shard_pspec(mesh)
+            if isinstance(staged, ShardedScene)
+            else render_replicated_pspec()
+        )
+        self._scene = jax.device_put(staged, NamedSharding(mesh, spec))
+        self._scene_mb_per_device = pytree_bytes(scene) / phys / 2**20
+        self._phys_shards = phys
+
+        # Per-handle jit cache, visible through the engine-wide registry.
+        # Registered through a weakref so the registry never pins the handle:
+        # a Renderer dropped WITHOUT close() still gets collected (freeing
+        # its executables and committed device scene), and the finalizer
+        # removes the registry entry close() would have removed.
+        self._fns: Dict[tuple, Any] = {}
+        self._fn_stats = {"hits": 0, "misses": 0}
+        self.cache_name = f"engine{next(_HANDLE_SEQ)}"
+        self_ref = weakref.ref(self)
+
+        def _info(ref=self_ref):
+            h = ref()
+            return h.cache_info() if h is not None else {
+                "hits": 0, "misses": 0, "currsize": 0,
+                "maxsize": _FN_CACHE_MAX,
+            }
+
+        def _clear(ref=self_ref):
+            h = ref()
+            if h is not None:
+                h._cache_clear()
+
+        register_render_cache(self.cache_name, info=_info, clear=_clear)
+        weakref.finalize(self, unregister_render_cache, self.cache_name)
+
+        # Futures front-end (worker started lazily on first submit()).
+        self._clock = clock
+        self._max_batch = max_batch
+        self._queue = RequestQueue(queue_depth, clock=clock)
+        self._scheduler = BucketingScheduler(max_batch, max_wait, clock=clock)
+        self._worker: Optional[threading.Thread] = None
+        self._worker_lock = threading.Lock()
+        self._flush_event = threading.Event()
+        self._outstanding: List[Future] = []
+        self._counters = {
+            "submitted": 0, "completed": 0, "batches": 0, "padded_lanes": 0,
+        }
+        self._closed = False
+
+    # -- committed-state introspection --------------------------------------
+
+    @property
+    def cfg(self) -> RenderConfig:
+        return self._cfg
+
+    @property
+    def mesh(self) -> Mesh:
+        return self._mesh
+
+    @property
+    def scene_shards(self) -> int:
+        return self._cfg.scene_shards
+
+    @property
+    def committed_scene(self):
+        """The device-resident committed scene. Pass it to another
+        ``open()`` on the same mesh/layout to SHARE the device copy —
+        ``device_put`` of an already-committed array with the same sharding
+        is a no-op, so further handles (e.g. one per config in a server)
+        add no scene HBM (serving/server.py::commit)."""
+        self._check_open()
+        return self._scene
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def stats(self) -> dict:
+        """Committed layout + per-handle cache and futures counters."""
+        return {
+            "config": self._cfg,
+            "mesh": dict(self._mesh.shape),
+            "scene_shards": self._cfg.scene_shards,
+            "physical_shards": self._phys_shards,
+            "scene_mb_per_device": self._scene_mb_per_device,
+            "cache": self.cache_info(),
+            **self._counters,
+        }
+
+    def cache_info(self) -> dict:
+        return {
+            "hits": self._fn_stats["hits"],
+            "misses": self._fn_stats["misses"],
+            "currsize": len(self._fns),
+            "maxsize": _FN_CACHE_MAX,
+        }
+
+    def _cache_clear(self) -> None:
+        self._fns.clear()
+        self._fn_stats["hits"] = 0
+        self._fn_stats["misses"] = 0
+
+    # -- shard resolution ----------------------------------------------------
+
+    @staticmethod
+    def _resolve_shards(scene, cfg, scene_shards) -> int:
+        requested = (
+            cfg.scene_shards if scene_shards == "auto" else int(scene_shards)
+        )
+        if requested < 1:
+            raise ValueError(f"scene_shards must be >= 1, got {requested}")
+        if isinstance(scene, ShardedScene):
+            if scene_shards != "auto" and requested != scene.num_shards:
+                raise ValueError(
+                    f"scene is pre-sharded {scene.num_shards} ways but "
+                    f"scene_shards={requested} was requested"
+                )
+            return scene.num_shards
+        return requested
+
+    # -- per-handle jit cache ------------------------------------------------
+
+    def _fn(self, kind: str, cam):
+        """The compiled renderer for ``kind`` x this camera's geometry.
+
+        The handle's config is committed, so the cache key is the geometry
+        alone; the jit wrappers are per-handle (close() really releases the
+        executables) and are built from the same traced-camera closure the
+        legacy entry points jit — which is what makes the outputs bitwise
+        match them.
+        """
+        key = (kind, cam.width, cam.height, cam.znear, cam.zfar)
+        fn = self._fns.get(key)
+        if fn is not None:
+            self._fn_stats["hits"] += 1
+            return fn
+        self._fn_stats["misses"] += 1
+        one = _render_with_traced_camera(
+            self._cfg, cam.width, cam.height, cam.znear, cam.zfar
+        )
+        fn = (
+            jax.jit(one)
+            if kind == "single"
+            else jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, None)))
+        )
+        while len(self._fns) >= _FN_CACHE_MAX:
+            self._fns.pop(next(iter(self._fns)))
+        self._fns[key] = fn
+        return fn
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("Renderer is closed")
+
+    # -- synchronous entry points -------------------------------------------
+
+    def render(
+        self, cam: Camera, background: Optional[jnp.ndarray] = None
+    ) -> RenderResult:
+        """Render one camera against the committed scene (jit-cached)."""
+        self._check_open()
+        fn = self._fn("single", cam)
+        return fn(
+            self._scene,
+            jnp.asarray(cam.R), jnp.asarray(cam.t),
+            jnp.float32(cam.fx), jnp.float32(cam.fy),
+            jnp.float32(cam.cx), jnp.float32(cam.cy),
+            _background_array(background),
+        )
+
+    def render_batch(
+        self,
+        cams: Union[CameraBatch, Sequence[Camera]],
+        pad_to: Optional[int] = None,
+        background: Optional[jnp.ndarray] = None,
+    ) -> RenderResult:
+        """Render B cameras in ONE jit call over the handle's mesh.
+
+        The batch is padded to ``max(B, pad_to)`` rounded up to the mesh's
+        DATA extent (serving loops pass their max batch so every dispatch of
+        a geometry compiles one shape); exactly B images/stats come back.
+        """
+        self._check_open()
+        batch = (
+            cams if isinstance(cams, CameraBatch)
+            else CameraBatch.from_cameras(cams)
+        )
+        orig = len(batch)
+        lanes = data_extent(self._mesh)
+        padded = pad_camera_batch(
+            batch, padded_size(max(orig, pad_to or 0), lanes)
+        )
+        shard = NamedSharding(self._mesh, camera_batch_pspec(self._mesh))
+        repl = NamedSharding(self._mesh, render_replicated_pspec())
+        put_b = lambda a: jax.device_put(a, shard)
+        fn = self._fn("batch", padded)
+        out = fn(
+            self._scene,
+            put_b(padded.R), put_b(padded.t),
+            put_b(padded.fx), put_b(padded.fy),
+            put_b(padded.cx), put_b(padded.cy),
+            jax.device_put(_background_array(background), repl),
+        )
+        if len(padded) != orig:
+            out = jax.tree.map(lambda x: x[:orig], out)
+        return out
+
+    # -- futures front-end ---------------------------------------------------
+
+    def submit(self, cam: Camera) -> Future:
+        """Enqueue one camera; returns a Future of its ``RenderResult``.
+
+        The result's leaves are HOST numpy arrays (the worker thread blocks
+        on device completion before resolving futures). Requests batch with
+        other submits of the same geometry up to the handle's
+        ``max_batch``/``max_wait``; a full queue blocks the producer
+        (bounded-queue backpressure). Thread-safe.
+        """
+        self._check_open()
+        fut: Future = Future()
+        self._ensure_worker()
+        # Track BEFORE enqueueing: the worker may dispatch (and untrack) the
+        # request the instant it lands in the queue.
+        with self._worker_lock:
+            self._counters["submitted"] += 1
+            self._outstanding.append(fut)
+        try:
+            self._queue.put(_Submitted(camera=cam, future=fut))
+        except QueueClosed:
+            with self._worker_lock:
+                self._counters["submitted"] -= 1
+                self._outstanding.remove(fut)
+            raise RuntimeError("Renderer is closed") from None
+        return fut
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Force-dispatch pending buckets and wait for outstanding futures."""
+        self._flush_event.set()
+        with self._worker_lock:
+            futs = list(self._outstanding)
+        _, not_done = _futures_wait(futs, timeout=timeout)
+        if not_done:
+            raise TimeoutError(f"flush timed out with {len(not_done)} pending")
+
+    def _ensure_worker(self) -> None:
+        with self._worker_lock:
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(
+                    target=self._worker_loop,
+                    name=f"{self.cache_name}-worker",
+                    daemon=True,
+                )
+                self._worker.start()
+
+    def _worker_loop(self) -> None:
+        q, sched = self._queue, self._scheduler
+        poll_s = max(min(sched.max_wait, 0.01), 0.001)
+        while True:
+            for req in q.get_batch(timeout=poll_s):
+                for bucket in sched.add(req):
+                    self._dispatch_bucket(bucket)
+            if self._flush_event.is_set():
+                self._flush_event.clear()
+                for req in q.drain():
+                    for bucket in sched.add(req):
+                        self._dispatch_bucket(bucket)
+                for bucket in sched.flush_all():
+                    self._dispatch_bucket(bucket)
+            for bucket in sched.poll():
+                self._dispatch_bucket(bucket)
+            if q.closed and len(q) == 0:
+                for bucket in sched.flush_all():
+                    self._dispatch_bucket(bucket)
+                return
+
+    def _dispatch_bucket(self, bucket) -> None:
+        reqs = bucket.requests
+        try:
+            out = self.render_batch(
+                [r.camera for r in reqs], pad_to=self._max_batch
+            )
+            host = jax.tree.map(np.asarray, out)   # blocks on device work
+            results = [
+                jax.tree.map(lambda x, i=i: x[i], host)
+                for i in range(len(reqs))
+            ]
+        except Exception as exc:                   # noqa: BLE001 — futures own it
+            with self._worker_lock:
+                for r in reqs:
+                    self._outstanding.remove(r.future)
+            for r in reqs:
+                # A future cancelled between submit and dispatch must not
+                # kill the worker (set_* on a cancelled Future raises).
+                if r.future.set_running_or_notify_cancel():
+                    r.future.set_exception(exc)
+            return
+        lanes = data_extent(self._mesh)
+        with self._worker_lock:
+            self._counters["batches"] += 1
+            self._counters["completed"] += len(reqs)
+            self._counters["padded_lanes"] += (
+                padded_size(max(len(reqs), self._max_batch), lanes) - len(reqs)
+            )
+            for r in reqs:
+                self._outstanding.remove(r.future)
+        for r, res in zip(reqs, results):
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_result(res)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Drain the worker, drop + unregister the jit cache, and evict this
+        handle's scene layouts from the shared layout cache. Idempotent; the
+        handle is unusable afterwards."""
+        if self._closed:
+            return
+        self._queue.close()                 # wakes the worker; drains pending
+        worker = self._worker
+        if worker is not None and worker.is_alive():
+            worker.join()
+        self._closed = True
+        self._worker = None
+        unregister_render_cache(self.cache_name)
+        self._cache_clear()
+        if self._source is not None:
+            # The lifecycle fix for the stale-layout case: re-committing one
+            # scene at several shard counts used to leave every layout
+            # resident until the scene was garbage collected.
+            evict_scene_layouts(self._source)
+        self._scene = None
+        self._source = None
+
+    def __enter__(self) -> "Renderer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        state = "closed" if self._closed else "open"
+        return (
+            f"<Renderer {self.cache_name} {state} mode={self._cfg.mode!r} "
+            f"backend={self._cfg.backend!r} "
+            f"scene_shards={self._cfg.scene_shards} "
+            f"mesh={dict(self._mesh.shape)}>"
+        )
+
+
+def open(  # noqa: A001 — the module-level session verb is the API
+    scene: Union[GaussianScene, ShardedScene],
+    cfg: RenderConfig,
+    *,
+    devices: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+    scene_shards: Union[str, int] = "auto",
+    device_budget_mb: Optional[float] = None,
+    max_batch: int = 8,
+    max_wait: float = 0.05,
+    queue_depth: int = 64,
+) -> Renderer:
+    """Commit ``(scene, cfg)`` and return the :class:`Renderer` handle.
+
+    * ``devices``/``mesh`` — where to commit: an explicit mesh, a local
+      device count, or (default) every local device through
+      ``make_render_mesh``.
+    * ``scene_shards`` — ``'auto'`` takes the layout from ``cfg.scene_shards``
+      (or the shard count of a pre-sharded scene); an int overrides it. The
+      physical shard count follows the ``render_mesh_shards`` policy (logical
+      shard axis when the device count cannot realize it).
+    * ``device_budget_mb`` — per-device HBM cap on the persistent scene
+      parameters. With ``scene_shards='auto'`` the handle escalates the shard
+      count until the committed scene fits; otherwise an over-budget commit
+      raises.
+    * ``max_batch``/``max_wait``/``queue_depth`` — the ``submit()`` futures
+      front-end's batching knobs (same dials as the serving tier).
+
+    Use as a context manager (``with engine.open(...) as r:``) or call
+    ``r.close()`` to release the committed state.
+    """
+    return Renderer(
+        scene, cfg,
+        devices=devices, mesh=mesh, scene_shards=scene_shards,
+        device_budget_mb=device_budget_mb,
+        max_batch=max_batch, max_wait=max_wait, queue_depth=queue_depth,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Module-default handles (the deprecation shims' delegate)
+# ---------------------------------------------------------------------------
+
+_DEFAULT_MAX = 32
+_default_handles: Dict[tuple, Renderer] = {}
+
+
+def default_renderer(
+    scene: Union[GaussianScene, ShardedScene],
+    cfg: RenderConfig,
+    *,
+    mesh: Optional[Mesh] = None,
+) -> Renderer:
+    """The module-default handle for ``(scene, cfg, mesh)``.
+
+    Backs the deprecated free functions (``render_jit``/``render_image``/
+    ``render_batch_sharded``): repeated legacy calls with the same scene and
+    config reuse ONE committed handle — same executable-reuse behavior the
+    old global lru caches provided for a fixed scene. Bounded FIFO; evicted
+    handles are closed (which also evicts their scene layouts). Known
+    tradeoff of per-handle caches: legacy callers LOOPING over many scenes
+    under one config recompile per scene (the old global cache shared the
+    executable); that is the migration pressure — new code should hold its
+    own handle from :func:`open`.
+    """
+    key = (id(scene), cfg, mesh)
+    handle = _default_handles.get(key)
+    if handle is not None and not handle.closed:
+        return handle
+    handle = Renderer(scene, cfg, mesh=mesh)
+    while len(_default_handles) >= _DEFAULT_MAX:
+        _default_handles.pop(next(iter(_default_handles))).close()
+    _default_handles[key] = handle
+    # id() keys alone could alias a recycled object (a pre-sharded scene the
+    # handle keeps no strong reference to could be collected and its id
+    # reused): drop + close the entry when the source scene goes away.
+    weakref.finalize(scene, _drop_default_handle, key)
+    return handle
+
+
+def _drop_default_handle(key) -> None:
+    handle = _default_handles.pop(key, None)
+    if handle is not None:
+        handle.close()
+
+
+def close_default_renderers() -> None:
+    """Close and drop every module-default handle (test isolation hook)."""
+    while _default_handles:
+        _default_handles.pop(next(iter(_default_handles))).close()

@@ -3,11 +3,13 @@ tile-grouping pipeline, report stats + cost-model projections.
 
   PYTHONPATH=src python -m repro.launch.render --scene train --mode gstg
   PYTHONPATH=src python -m repro.launch.render --scene train --backend pallas
+  repro-render --scene train --mode gstg          # console-script entry
 
-Either backend goes through the SAME jit-cached engine entry (render_jit):
-one render produces both the image and the RenderStats that feed the
-accelerator cost model — the Pallas path no longer re-runs the reference
-pipeline for its counters.
+Either backend goes through the SAME session-style engine handle
+(``repro.engine.open``, DESIGN.md §11): the scene is committed once, the
+render is jit-cached per camera geometry, and one render produces both the
+image and the RenderStats that feed the accelerator cost model. This is the
+CI engine-handle smoke for both backends (scripts/check.sh).
 """
 from __future__ import annotations
 
@@ -18,8 +20,9 @@ import time
 import numpy as np
 
 from benchmarks.common import scene_and_camera
+from repro import engine
 from repro.core.cost_model import GSTG_ASIC, estimate
-from repro.core.pipeline import RenderConfig, render_cache_info, render_jit
+from repro.core.pipeline import RenderConfig, render_cache_info
 
 
 def main():
@@ -36,6 +39,9 @@ def main():
                     help="stage implementation the engine dispatches to")
     ap.add_argument("--use-kernels", action="store_true",
                     help="deprecated alias for --backend pallas")
+    ap.add_argument("--scene-shards", type=int, default=1,
+                    help="commit the scene gaussian-sharded D ways "
+                         "(DESIGN.md §10/§11)")
     ap.add_argument("--gaussians", type=int, default=None)
     ap.add_argument("--width", type=int, default=None,
                     help="override camera width (smoke renders)")
@@ -61,32 +67,35 @@ def main():
         group_capacity=args.capacity,
         span=6,
         backend=backend,
+        scene_shards=args.scene_shards,
     )
-    t0 = time.time()
-    out = render_jit(scene, cam, cfg)  # ONE render: image + stats, any backend
-    img, stats = np.asarray(out.image), out.stats
-    dt = time.time() - t0
+    with engine.open(scene, cfg) as renderer:
+        t0 = time.time()
+        out = renderer.render(cam)   # ONE render: image + stats, any backend
+        img, stats = np.asarray(out.image), out.stats
+        dt = time.time() - t0
 
-    print(f"scene={args.scene} mode={args.mode} backend={backend} "
-          f"{img.shape} in {dt:.2f}s")
-    print(f"  visible gaussians : {int(stats.n_visible)}")
-    print(f"  sort keys         : {int(stats.n_pairs_sort)}")
-    print(f"  alpha ops         : {int(stats.alpha_ops)}")
-    print(f"  overflow          : {int(stats.overflow)}")
-    cost = estimate(
-        stats, GSTG_ASIC,
-        boundary_group=args.boundary_group, boundary_tile=args.boundary_tile,
-        mode=args.mode, execution="asic",
-    )
-    print(f"  accelerator model : total={cost.total_s*1e3:.3f}ms "
-          f"(pre={cost.preprocess_s*1e3:.3f} sort={cost.sort_s*1e3:.3f} "
-          f"bgm={cost.bitmask_s*1e3:.3f} raster={cost.raster_s*1e3:.3f} "
-          f"dram={cost.dram_s*1e3:.3f})  energy={cost.energy_j*1e3:.2f}mJ")
-    if args.stats:
-        for kind, info in render_cache_info().items():
-            print(f"  jit cache [{kind:6s}] : hits={info['hits']} "
-                  f"misses={info['misses']} currsize={info['currsize']}/"
-                  f"{info['maxsize']}")
+        print(f"scene={args.scene} mode={args.mode} backend={backend} "
+              f"{img.shape} in {dt:.2f}s")
+        print(f"  visible gaussians : {int(stats.n_visible)}")
+        print(f"  sort keys         : {int(stats.n_pairs_sort)}")
+        print(f"  alpha ops         : {int(stats.alpha_ops)}")
+        print(f"  overflow          : {int(stats.overflow)}")
+        cost = estimate(
+            stats, GSTG_ASIC,
+            boundary_group=args.boundary_group,
+            boundary_tile=args.boundary_tile,
+            mode=args.mode, execution="asic",
+        )
+        print(f"  accelerator model : total={cost.total_s*1e3:.3f}ms "
+              f"(pre={cost.preprocess_s*1e3:.3f} sort={cost.sort_s*1e3:.3f} "
+              f"bgm={cost.bitmask_s*1e3:.3f} raster={cost.raster_s*1e3:.3f} "
+              f"dram={cost.dram_s*1e3:.3f})  energy={cost.energy_j*1e3:.2f}mJ")
+        if args.stats:
+            for kind, info in render_cache_info().items():
+                print(f"  jit cache [{kind:6s}] : hits={info['hits']} "
+                      f"misses={info['misses']} currsize={info['currsize']}/"
+                      f"{info['maxsize']}")
     # save a PPM for quick eyeballing (no image deps offline)
     out_path = f"results/render_{args.scene}_{args.mode}_{backend}.ppm"
     os.makedirs("results", exist_ok=True)

@@ -7,8 +7,9 @@
 
 Generates an open-loop Poisson arrival stream over a mix of scenes and
 resolutions (so the bucketer has real work to do), replays it through
-queue -> bucketing -> sharded dispatch, and reports per-bucket latency,
-throughput, and executable-cache counters. ``--devices N`` on CPU forces N
+queue -> bucketing -> committed engine handles (``RenderServer`` is a thin
+loop over ``repro.engine.Renderer``s, DESIGN.md §11), and reports per-bucket
+latency, throughput, and executable-cache counters. ``--devices N`` on CPU forces N
 virtual host devices (XLA flag set BEFORE jax initializes — which is why the
 arg parsing below happens before any repro/jax import) so the sharded path
 is exercisable on a laptop.
@@ -121,27 +122,6 @@ def main(argv=None):
         for i, sid in enumerate(scene_ids)
     }
 
-    # Simulated device-HBM cap: the per-device scene footprint is the full
-    # scene when replicated, 1/D when PHYSICALLY gaussian-sharded over the
-    # mesh 'model' axis. A logical-only shard axis does NOT reduce per-device
-    # bytes (every device still holds the whole scene), so it counts as 1.
-    if args.device_budget_mb is not None:
-        from repro.utils import pytree_bytes
-
-        for sid, scene in scenes.items():
-            per_dev_mb = pytree_bytes(scene) / phys_shards / 2**20
-            if per_dev_mb > args.device_budget_mb:
-                layout = (
-                    f"{phys_shards}-way sharded" if phys_shards > 1
-                    else "replicated"
-                )
-                print(f"render_serve: FAILED (scene {sid!r} needs "
-                      f"{per_dev_mb:.2f} MB/device {layout}, budget "
-                      f"{args.device_budget_mb} MB — raise --scene-shards)")
-                return 2
-            print(f"scene {sid!r}: {per_dev_mb:.2f} MB/device within "
-                  f"{args.device_budget_mb} MB budget (shards={phys_shards})")
-
     cfg = RenderConfig(
         mode=args.mode,
         backend=args.backend,
@@ -172,7 +152,28 @@ def main(argv=None):
         max_wait=args.max_wait,
         queue_depth=args.queue_depth,
         scene_shards=shards,
+        device_budget_mb=args.device_budget_mb,
     )
+
+    # Pre-commit every scene through the engine handle (DESIGN.md §11): the
+    # simulated device-HBM cap is enforced by the handle at commit time —
+    # the per-device scene footprint is the full scene when replicated, 1/D
+    # when PHYSICALLY gaussian-sharded over the mesh 'model' axis (a
+    # logical-only shard axis does not reduce per-device bytes). An
+    # over-budget scene fails fast here instead of mid-stream.
+    for sid in scene_ids:
+        try:
+            handle = server.commit(sid, cfg)
+        except ValueError as e:
+            print(f"render_serve: FAILED (scene {sid!r}: {e})")
+            server.close()
+            return 2
+        if args.device_budget_mb is not None:
+            hs = handle.stats()
+            print(f"scene {sid!r}: {hs['scene_mb_per_device']:.2f} MB/device "
+                  f"within {args.device_budget_mb} MB budget "
+                  f"(shards={hs['physical_shards']})")
+
     print(f"serving {args.requests} requests @ {args.rate:.0f} req/s "
           f"({len(scene_ids)} scenes x {len(resolutions)} resolutions, "
           f"backend={args.backend}, devices={use_dev}, "
@@ -184,8 +185,8 @@ def main(argv=None):
     if args.parity_check:
         import dataclasses as _dc
 
+        from repro import engine
         from repro.serving.bucketing import padded_size
-        from repro.serving.sharded import render_batch_sharded
         from repro.sharding.policies import data_extent
 
         # Compare through the SAME padded dispatch shape the server compiles
@@ -197,18 +198,23 @@ def main(argv=None):
         cfg_repl = _dc.replace(cfg, scene_shards=1)
         pad_shape = padded_size(args.max_batch, data_extent(mesh))
         by_id = {r.request_id: r for _, r in load}
+        refs = {
+            sid: engine.open(scenes[sid], cfg_repl, mesh=mesh)
+            for sid in scene_ids
+        }
         for rid, res in sorted(results.items()):
             req = by_id[rid]
             expect = np.asarray(
-                render_batch_sharded(
-                    scenes[req.scene_id], [req.camera], cfg_repl,
-                    mesh=mesh, pad_to=pad_shape,
-                ).image[0]
+                refs[req.scene_id]
+                .render_batch([req.camera], pad_to=pad_shape)
+                .image[0]
             )
             if not (expect == res.image).all():
                 parity_failures += 1
                 print(f"parity MISMATCH: request {rid} (scene "
                       f"{req.scene_id!r}) diverges from the replicated path")
+        for ref in refs.values():
+            ref.close()
         print(f"parity-check: {len(results) - parity_failures}/{len(results)} "
               f"bitwise-identical to the replicated path")
 
@@ -231,6 +237,8 @@ def main(argv=None):
         with open(args.trace_json, "w") as f:
             json.dump(trace, f, indent=2)
         print(f"wrote {args.trace_json}")
+
+    server.close()   # releases every committed handle (jit caches + layouts)
 
     # CI assertions: nothing lost, latency distribution sane, parity holds.
     lost = args.requests - len(results) - server.stats.rejected

@@ -1,17 +1,24 @@
-"""The render server: queue -> bucketer -> sharded dispatch (DESIGN.md §9).
+"""The render server: a thin driver loop over shared engine handles.
 
-Single driver loop, three stages:
+Single driver loop, three stages (DESIGN.md §9/§11):
 
-  submit() --> RequestQueue --> BucketingScheduler --> _dispatch()
-   (bounded, backpressure)      (one bucket per jit       (render_batch_sharded,
-                                 signature; max-batch /    ONE cached executable
-                                 max-wait flush)           per bucket signature)
+  submit() --> RequestQueue --> BucketingScheduler --> Renderer.render_batch
+   (bounded, backpressure)      (one bucket per jit       (ONE committed handle
+                                 signature; max-batch /    per (scene, config);
+                                 max-wait flush)           fixed dispatch shape)
 
-The loop is synchronous and single-threaded on the dispatch side — device
-work is serialized anyway, and keeping scheduling single-threaded makes the
-latency accounting exact. Producers may submit from other threads (the queue
-is the thread-safe boundary) or inline via ``run(load)`` which replays a
-timed load (e.g. ``poisson_arrivals``) in real time.
+Scene placement, mesh layout, and the compiled-renderer caches all live in
+the ``repro.engine.Renderer`` handles the server opens lazily per
+(scene id, config) — the server itself only schedules: it drains the queue
+into signature buckets and hands each bucket to the right handle. The loop
+is synchronous and single-threaded on the dispatch side — device work is
+serialized anyway, and keeping scheduling single-threaded makes the latency
+accounting exact. Producers may submit from other threads (the queue is the
+thread-safe boundary) or inline via ``run(load)`` which replays a timed
+load (e.g. ``poisson_arrivals``) in real time. (A per-scene futures
+front-end without the multi-scene admission layer is just
+``Renderer.submit`` — the server adds scenes, admission screening, and
+serving stats on top.)
 
 Every completed request yields a ``RequestResult`` with the rendered image
 (host numpy), its end-to-end latency, and the bucket it rode in;
@@ -30,7 +37,6 @@ from repro.core.gaussians import GaussianScene
 from repro.core.pipeline import CameraBatch, render_cache_info
 from repro.serving.bucketing import Bucket, BucketingScheduler, padded_size
 from repro.serving.queue import RenderRequest, RequestQueue
-from repro.serving.sharded import render_batch_sharded
 from repro.serving.stats import ServingStats
 
 
@@ -50,11 +56,14 @@ class RenderServer:
     ``mesh=None`` shards each dispatch over all local devices (built lazily
     on first dispatch so constructing a server never touches device state);
     ``scene_shards = D > 1`` builds the 2-D (data, model) render mesh and
-    commits scenes gaussian-sharded over 'model' (DESIGN.md §10). Requests
-    choose their own layout via ``cfg.scene_shards`` — it is part of the
-    bucket signature, so replicated and sharded dispatches of the same scene
-    never mix in a batch; a request's shard count must be 1 or match the
-    server's mesh.
+    the handles commit scenes gaussian-sharded over 'model' (DESIGN.md §10).
+    Requests choose their own layout via ``cfg.scene_shards`` — it is part
+    of the bucket signature, so replicated and sharded dispatches of the
+    same scene never mix in a batch; a request's shard count must be 1 or
+    match the server's mesh. ``device_budget_mb`` is forwarded to every
+    handle commit (``engine.open``): a scene whose per-device parameter
+    bytes exceed it refuses to commit. Close the server (or use it as a
+    context manager) to close its handles.
     """
 
     def __init__(
@@ -66,16 +75,19 @@ class RenderServer:
         max_wait: float = 0.05,
         queue_depth: int = 64,
         scene_shards: int = 1,
+        device_budget_mb: Optional[float] = None,
         clock=time.monotonic,
     ):
         self.scenes = dict(scenes)
         self._mesh = mesh
         self.scene_shards = scene_shards
+        self.device_budget_mb = device_budget_mb
         self._clock = clock
         self.queue = RequestQueue(queue_depth, clock=clock)
         self.scheduler = BucketingScheduler(max_batch, max_wait, clock=clock)
         self.stats = ServingStats()
         self.results: Dict[int, RequestResult] = {}
+        self._renderers: Dict[Tuple[str, object], object] = {}
         self._committed: Dict[Tuple[str, int], object] = {}
 
     @property
@@ -121,6 +133,38 @@ class RenderServer:
             self.stats.count_rejected()
         return ok
 
+    # -- committed handles --------------------------------------------------
+
+    def commit(self, scene_id: str, cfg):
+        """The shared engine handle for ``(scene_id, cfg)``, opened on first
+        use. Public so drivers can pre-commit scenes before taking load — an
+        over-budget scene then fails fast here instead of mid-stream
+        (``device_budget_mb`` is enforced by ``engine.open``).
+
+        Handles are per (scene, config) — the compiled programs differ — but
+        the committed DEVICE scene is shared per (scene, layout): further
+        handles are opened on the first handle's ``committed_scene``, so two
+        configs over one scene cost one scene copy, not two."""
+        key = (scene_id, cfg)
+        handle = self._renderers.get(key)
+        if handle is None:
+            from repro import engine
+
+            shards = getattr(cfg, "scene_shards", 1)
+            scene = self._committed.get(
+                (scene_id, shards), self.scenes[scene_id]
+            )
+            handle = engine.open(
+                scene, cfg,
+                mesh=self.mesh,
+                device_budget_mb=self.device_budget_mb,
+            )
+            self._committed.setdefault(
+                (scene_id, handle.scene_shards), handle.committed_scene
+            )
+            self._renderers[key] = handle
+        return handle
+
     # -- scheduling / dispatch ----------------------------------------------
 
     def _pump_queue(self, now: Optional[float] = None) -> int:
@@ -150,38 +194,9 @@ class RenderServer:
             for bucket in self.scheduler.flush_all():
                 self._dispatch(bucket)
 
-    def _scene_on_mesh(self, scene_id: str, shards: int):
-        """Scene committed to the mesh ONCE per (scene, layout); every
-        dispatch then reuses the device copy instead of re-transferring it.
-        ``shards == 1`` commits the replicated scene; ``shards = D > 1``
-        commits the canonical sharded layout over the mesh's 'model' axis."""
-        key = (scene_id, shards)
-        if key not in self._committed:
-            import jax
-            from jax.sharding import NamedSharding
-
-            from repro.serving.sharded import shard_scene_cached
-            from repro.sharding.policies import (
-                render_replicated_pspec,
-                scene_shard_pspec,
-            )
-
-            scene = self.scenes[scene_id]
-            if shards > 1:
-                scene = shard_scene_cached(scene, shards)
-                spec = scene_shard_pspec(self.mesh)
-            else:
-                spec = render_replicated_pspec()
-            self._committed[key] = jax.device_put(
-                scene, NamedSharding(self.mesh, spec)
-            )
-        return self._committed[key]
-
     def _dispatch(self, bucket: Bucket) -> None:
         reqs = bucket.requests
-        cfg = reqs[0].cfg
-        shards = getattr(cfg, "scene_shards", 1)
-        scene = self._scene_on_mesh(reqs[0].scene_id, shards)
+        handle = self.commit(reqs[0].scene_id, reqs[0].cfg)
         batch = CameraBatch.from_cameras([r.camera for r in reqs])
         # Fixed dispatch shape: every bucket of a signature pads to
         # max_batch (rounded to the camera-lane count — the mesh's DATA
@@ -193,9 +208,7 @@ class RenderServer:
 
         before = render_cache_info()
         t0 = self._clock()
-        out = render_batch_sharded(
-            scene, batch, cfg, mesh=self.mesh, pad_to=shape
-        )
+        out = handle.render_batch(batch, pad_to=shape)
         images = np.asarray(out.image)   # blocks until device work completes
         t1 = self._clock()
         after = render_cache_info()
@@ -222,6 +235,22 @@ class RenderServer:
                 signature=bucket.signature,
                 deadline_missed=missed,
             )
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Close every committed handle (evicting their jit caches and scene
+        layouts). The server can keep admitting afterwards — handles reopen
+        lazily — but a shutdown path should not rely on that."""
+        while self._renderers:
+            self._renderers.pop(next(iter(self._renderers))).close()
+        self._committed.clear()
+
+    def __enter__(self) -> "RenderServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- timed replay --------------------------------------------------------
 

@@ -1,49 +1,32 @@
-"""Device-sharded batched rendering: cameras x gaussians over a render mesh.
+"""Serving-side scene staging + the legacy sharded-dispatch shim.
 
-``render_batch_sharded`` is a drop-in superset of ``core.pipeline.
-render_batch``: same arguments plus an optional mesh, same ``RenderResult``
-(image ``(B, H, W, 3)``, stats ``(B,)``). Two sharding dimensions compose
-(DESIGN.md §9/§10):
+The actual device-sharded dispatch (cameras over 'data', gaussians over
+'model') lives in the engine handle now (``repro.engine``, DESIGN.md §11):
+a ``Renderer`` commits the scene layout once and every ``render_batch``
+reuses it. This module keeps the two serving-side pieces the handle builds
+on, plus the deprecated free-function entry:
 
-  * the CAMERA batch axis lays over the mesh's 'data' axis
-    (``camera_batch_pspec``) — embarrassingly parallel, scales with traffic;
-  * the GAUSSIAN axis lays over the mesh's 'model' axis when
-    ``cfg.scene_shards > 1``: the scene is put in the canonical padded/
-    sharded layout (``sharding/scene.py``) and device_put with
-    ``scene_shard_pspec``, so each device holds 1/D of the scene — the
-    engine's per-shard frontend + stable merge keeps results
-    bitwise-identical to the replicated path, and scenes beyond one
-    device's replicated HBM budget become servable.
-
-XLA partitions the vmapped renderer by propagating the input shardings — no
-renderer changes, the SAME lru-cached executable wrapper from
-core/pipeline.py serves replicated and sharded calls, so the serving cache
-counters see one signature either way. The one private cache this module
-adds — the padded/sharded scene LAYOUT per (scene, D) — is registered with
-``core.pipeline.register_render_cache`` so ``render_cache_clear()`` /
-``render_cache_info()`` cover it and the server's cache-hit stats stay
-truthful.
-
-Ragged batches (B not divisible by the data extent) are padded by
-replicating the last camera (serving/bucketing.py ``pad_indices``) and the
-padded tail is sliced off the result tree — mask-correct because camera
-renders are independent (DESIGN.md §9).
-
-On a 1-device mesh the padded batch IS the batch and the program XLA builds
-is the unpartitioned one, so results are bitwise-identical to
-``render_batch`` (asserted in benchmarks/bench_serving.py and
-tests/test_serving.py); scene-sharded parity on 1..4 (virtual) devices is
-asserted in tests/test_sharding.py.
+  * ``pad_camera_batch`` — the array-level ragged-batch padding built on the
+    ``pad_indices_to`` policy (mask-correct: the padded tail replicates the
+    last camera and is sliced off after the dispatch, DESIGN.md §9);
+  * the scene-LAYOUT cache (``shard_scene_cached``): the host-staged
+    padded/sharded layout per (scene identity, D), registered with
+    ``core.pipeline.register_render_cache`` so ``render_cache_clear()`` /
+    ``render_cache_info()`` cover it and the server's cache-hit stats stay
+    truthful; ``evict_scene_layouts`` is the handle-lifecycle eviction hook;
+  * ``render_batch_sharded`` — a DeprecationWarning shim delegating to the
+    module-default handle, bitwise-identical to the handle path by
+    construction.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import weakref
 from typing import Optional, Sequence, Union
 
-import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
@@ -51,19 +34,9 @@ from repro.core.pipeline import (
     CameraBatch,
     RenderConfig,
     RenderResult,
-    _background_array,
-    _batch_renderer,
-    batch_signature,
     register_render_cache,
 )
-from repro.launch.mesh import make_render_mesh, render_mesh_shards
-from repro.serving.bucketing import pad_indices_to, padded_size
-from repro.sharding.policies import (
-    camera_batch_pspec,
-    data_extent,
-    render_replicated_pspec,
-    scene_shard_pspec,
-)
+from repro.serving.bucketing import pad_indices_to
 from repro.sharding.scene import ShardedScene, shard_scene_host
 
 
@@ -139,6 +112,22 @@ def shard_scene_cached(scene: GaussianScene, num_shards: int) -> ShardedScene:
     return out
 
 
+def evict_scene_layouts(scene: GaussianScene) -> int:
+    """Drop EVERY cached layout of ``scene``, at any shard count.
+
+    The lifecycle hook ``repro.engine.Renderer.close()`` calls: before it,
+    re-committing one scene at a different ``scene_shards`` left the old
+    layout resident until the scene itself was garbage collected (the
+    weakref finalizer is per-scene, not per-layout). Returns the number of
+    layouts evicted; the finalizers registered by ``shard_scene_cached``
+    tolerate the missing keys."""
+    sid = id(scene)
+    keys = [k for k in _layout_cache if k[0] == sid]
+    for k in keys:
+        _layout_cache.pop(k, None)
+    return len(keys)
+
+
 # ---------------------------------------------------------------------------
 # Sharded dispatch
 # ---------------------------------------------------------------------------
@@ -154,20 +143,25 @@ def render_batch_sharded(
     pad_to: Optional[int] = None,
     scene_shards: Optional[int] = None,
 ) -> RenderResult:
-    """Render B cameras in ONE jit call, cameras (and optionally gaussians)
-    sharded over ``mesh``.
+    """Deprecated: ``repro.engine.open(scene, cfg, mesh=mesh).render_batch``.
 
+    Delegates to the module-default handle for ``(scene, cfg, mesh)``
+    (``repro.engine.default_renderer``), preserving the legacy semantics:
     ``scene_shards`` (default: ``cfg.scene_shards``, or the layout of an
     already-sharded scene) selects the gaussian-axis shard count D;
     ``mesh=None`` builds the matching render mesh over all local devices
-    (2-D when D > 1). A mesh without a 'model' axis is allowed with D > 1:
-    the shard axis then stays logical (single-device tests, benchmarks). The
-    batch is padded to ``max(B, pad_to)`` rounded up to the mesh's DATA
-    extent; a serving loop passes its max batch as ``pad_to`` so EVERY
-    dispatch of a signature has one fixed shape (one compiled program even
-    for ragged max_wait flushes). Returns exactly B images/stats regardless
-    of padding.
+    with the ``render_mesh_shards`` logical fallback; the batch is padded to
+    ``max(B, pad_to)`` rounded up to the mesh's DATA extent and exactly B
+    images/stats come back. The handle is what now owns the committed scene
+    placement and the compiled-renderer cache (DESIGN.md §11).
     """
+    warnings.warn(
+        "render_batch_sharded() is deprecated; open a handle with "
+        "repro.engine.open(scene, cfg, mesh=...) and call "
+        ".render_batch(cams, pad_to=...)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     if scene_shards is None:
         scene_shards = (
             scene.num_shards
@@ -177,45 +171,7 @@ def render_batch_sharded(
     if cfg.scene_shards != scene_shards:
         cfg = dataclasses.replace(cfg, scene_shards=scene_shards)
 
-    batch = cams if isinstance(cams, CameraBatch) else CameraBatch.from_cameras(cams)
-    if mesh is None:
-        # Logical shard axis when D does not divide the local device count
-        # (the docstring's single-device contract); an explicit mesh keeps
-        # make_render_mesh's loud error.
-        mesh = make_render_mesh(
-            scene_shards=render_mesh_shards(len(jax.devices()), scene_shards)
-        )
-    model_extent = dict(mesh.shape).get("model", 1)
-    if scene_shards > 1 and model_extent not in (1, scene_shards):
-        raise ValueError(
-            f"mesh model axis ({model_extent}) must match scene_shards="
-            f"{scene_shards} (or be absent for a logical-only shard axis)"
-        )
+    from repro import engine
 
-    orig = len(batch)
-    lanes = data_extent(mesh)
-    padded = pad_camera_batch(batch, padded_size(max(orig, pad_to or 0), lanes))
-
-    if scene_shards > 1 and isinstance(scene, GaussianScene):
-        scene = shard_scene_cached(scene, scene_shards)
-    scene_spec = (
-        scene_shard_pspec(mesh)
-        if isinstance(scene, ShardedScene)
-        else render_replicated_pspec()
-    )
-
-    shard = NamedSharding(mesh, camera_batch_pspec(mesh))
-    repl = NamedSharding(mesh, render_replicated_pspec())
-    put_b = lambda a: jax.device_put(a, shard)
-
-    fn = _batch_renderer(*batch_signature(cfg, padded))
-    out = fn(
-        jax.device_put(scene, NamedSharding(mesh, scene_spec)),
-        put_b(padded.R), put_b(padded.t),
-        put_b(padded.fx), put_b(padded.fy),
-        put_b(padded.cx), put_b(padded.cy),
-        jax.device_put(_background_array(background), repl),
-    )
-    if len(padded) != orig:
-        out = jax.tree.map(lambda x: x[:orig], out)
-    return out
+    handle = engine.default_renderer(scene, cfg, mesh=mesh)
+    return handle.render_batch(cams, pad_to=pad_to, background=background)

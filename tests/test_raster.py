@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import make_camera, random_scene
-from repro.core.pipeline import RenderConfig, render, render_image
+from repro.core.pipeline import RenderConfig, render
 from repro.core.metrics import psnr, ssim
 
 
@@ -31,7 +31,7 @@ def test_gradients_flow(tiny_scene, cam128):
     cfg = RenderConfig()
 
     def loss(s):
-        return jnp.mean((render_image(s, cam128, cfg) - 0.25) ** 2)
+        return jnp.mean((render(s, cam128, cfg).image - 0.25) ** 2)
 
     g = jax.grad(loss)(tiny_scene)
     leaves = jax.tree.leaves(g)
@@ -50,7 +50,7 @@ def test_chunk_size_invariance(small_scene, cam128):
 
 
 def test_metrics_sanity(small_scene, cam128):
-    img = render_image(small_scene, cam128, RenderConfig())
+    img = render(small_scene, cam128, RenderConfig()).image
     assert float(psnr(img, img)) > 80.0
     assert float(ssim(img, img)) > 0.999
     noisy = img + 0.1 * jax.random.normal(jax.random.key(0), img.shape)

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import make_camera, random_scene
-from repro.core.pipeline import RenderConfig, render_image
+from repro.core.pipeline import RenderConfig, render
 from repro.core.train import SceneTrainConfig, fit_scene
 
 
@@ -21,7 +21,7 @@ def test_fit_scene_improves_psnr():
     cfg = RenderConfig(
         tile=16, group=32, group_capacity=256, tile_capacity=256, span=4
     )
-    targets = [render_image(target_scene, c, cfg) for c in cams]
+    targets = [render(target_scene, c, cfg).image for c in cams]
 
     # perturb the scene and recover
     k2 = jax.random.key(1)

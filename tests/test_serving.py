@@ -331,6 +331,24 @@ def test_server_scene_sharded_end_to_end(tiny_scene, serving_cfg):
         ).all(), f"request {r.request_id} diverges from replicated batch"
 
 
+def test_server_shares_committed_scene_across_configs(tiny_scene, serving_cfg):
+    """Two configs over one scene open two handles (different compiled
+    programs) but ONE committed device scene: the second handle commits on
+    the first's device copy, so per-scene HBM does not scale with the
+    config count."""
+    import dataclasses
+
+    from repro.serving.server import RenderServer
+
+    with RenderServer({"scene": tiny_scene}) as server:
+        a = server.commit("scene", serving_cfg)
+        b = server.commit(
+            "scene", dataclasses.replace(serving_cfg, mode="tile_baseline")
+        )
+        assert a is not b
+        assert a.committed_scene.means3d is b.committed_scene.means3d
+
+
 def test_server_backpressure_and_unknown_scene(tiny_scene, serving_cfg):
     from repro.core import make_camera
     from repro.serving.queue import RenderRequest
