@@ -36,6 +36,39 @@ N_CAMS = 4
 RES = (128, 128)
 
 
+def measured_temp_mb(handle, cams):
+    """Compiled temp-buffer MB of the handle's batched renderer, from XLA's
+    memory analysis — the MEASURED side of the per-camera feature scaling
+    claim (DESIGN.md §12). Returns None when the backend does not report
+    temp sizes (CPU reports 0); the analytic budget-model numbers
+    (``feature_mb_per_device`` in the handle stats) are always emitted."""
+    import jax
+
+    from repro.core.pipeline import (
+        CameraBatch,
+        _background_array,
+        _render_with_traced_camera,
+    )
+
+    batch = CameraBatch.from_cameras(cams)
+    one = _render_with_traced_camera(
+        handle.cfg, batch.width, batch.height, batch.znear, batch.zfar
+    )
+    fn = jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, None)))
+    try:
+        lowered = fn.lower(
+            handle.committed_scene,
+            batch.R, batch.t, batch.fx, batch.fy, batch.cx, batch.cy,
+            _background_array(None),
+        )
+        temp = getattr(
+            lowered.compile().memory_analysis(), "temp_size_in_bytes", 0
+        )
+        return temp / 2**20 if temp else None
+    except Exception:
+        return None
+
+
 def run() -> dict:
     n_dev = len(jax.devices())
     shards = n_dev if n_dev > 1 else 2   # logical shard axis on one device
@@ -68,6 +101,30 @@ def run() -> dict:
             key = "replicated" if d == 1 else "sharded"
             row[f"{key}_us"] = us
             row[f"{key}_fps"] = N_CAMS / (us * 1e-6)
+            hs = handles[d].stats()
+            row[f"{key}_feature_mb_model"] = hs["feature_mb_per_device"]
+            row[f"{key}_gather"] = hs["feature_gather"]
+            row[f"{key}_temp_mb_measured"] = measured_temp_mb(
+                handles[d], cams
+            )
+        # The §12 scaling claim, asserted on the budget model: with the psum
+        # gathers over a PHYSICAL 'model' axis the per-camera feature bytes
+        # per device are ~1/D of the replicated path's (exactly N_pad/D vs
+        # N). On one device the shard axis is logical and the model must
+        # report FULL N for both — feature sharding cannot save memory a
+        # mesh does not realize.
+        phys = render_mesh_shards(n_dev, shards)
+        rep_feat = row["replicated_feature_mb_model"]
+        sh_feat = row["sharded_feature_mb_model"]
+        if phys > 1:
+            pad_slack = 1.0 + shards / size
+            assert sh_feat <= rep_feat / shards * pad_slack, (
+                f"feature model not ~1/D: {sh_feat} vs {rep_feat}/{shards}"
+            )
+        else:
+            assert sh_feat >= rep_feat, (
+                "logical shard axis must not claim feature-memory savings"
+            )
         if size == SIZES[0]:
             assert (
                 np.asarray(outs[1].image) == np.asarray(outs[shards].image)
@@ -76,11 +133,17 @@ def run() -> dict:
             handle.close()
         row["sharded_over_replicated"] = row["sharded_us"] / row["replicated_us"]
         rows.append(row)
+        measured = row["sharded_temp_mb_measured"]
         emit(
             f"scene_scale_n{size}", row["sharded_us"],
             f"repl={row['replicated_fps']:.2f}fps "
             f"shard={row['sharded_fps']:.2f}fps "
-            f"ratio={row['sharded_over_replicated']:.2f}x",
+            f"ratio={row['sharded_over_replicated']:.2f}x "
+            f"feat_mb {row['replicated_feature_mb_model']:.2f}->"
+            f"{row['sharded_feature_mb_model']:.2f} "
+            f"({row['sharded_gather']}"
+            + (f", temp={measured:.2f}MB" if measured else "")
+            + ")",
         )
 
     crossover = next(

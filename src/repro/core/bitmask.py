@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.boundary import boundary_test
 from repro.core.grouping import BinTable, GridSpec, tile_rect_in_group
-from repro.core.projection import Projected
+from repro.core.projection import Projected, proj_take
 
 
 @jax.tree_util.register_dataclass
@@ -64,15 +64,20 @@ def generate_bitmasks(
 
 
 class _GatheredProj:
-    """Projected fields gathered to a (G, K) index table."""
+    """Projected fields gathered to a (G, K) index table.
 
-    def __init__(self, proj: Projected, idx: jnp.ndarray):
+    ``proj`` is a flat ``Projected`` or a ``ShardedProjected``: every field
+    access routes through ``proj_take``, which decomposes the global index
+    table into (shard, local) and fetches from the owning shard when the
+    features are kept per-shard (DESIGN.md §12) — bitwise-identical to the
+    flat gather either way."""
+
+    def __init__(self, proj, idx: jnp.ndarray):
         self._p = proj
         self._idx = idx
 
     def __getattr__(self, name):
-        v = getattr(self._p, name)
-        return v[self._idx]
+        return proj_take(self._p, name, self._idx)
 
 
 class _Expand:

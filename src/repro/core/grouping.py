@@ -291,6 +291,16 @@ def merge_bin_tables(tables: BinTable, depth: jnp.ndarray) -> BinTable:
     Invalid slots carry key +inf and sort last; merged lengths are the exact
     (pre-clamp) per-bin totals, so overflow accounting matches the replicated
     path integer for integer.
+
+    Downstream, the merged ``gauss_idx`` stays GLOBAL: feature-sharded
+    consumers (DESIGN.md §12) decompose it back into ``(idx // Ns, idx %
+    Ns)`` at each gather site (``core/projection.py::proj_take``) — the
+    contiguous layout makes the decomposition a pure arithmetic view, which
+    is why the merge needs no layout changes for feature sharding.
+
+    Property-tested standalone in tests/test_grouping.py (hypothesis: depth
+    ties, per-bin overflow, all-padding shards, D ∈ {1..4}) on top of the
+    end-to-end render parity suite (tests/test_sharding.py).
     """
     D, B, K = tables.gauss_idx.shape
     key = jnp.where(tables.entry_valid, depth, jnp.inf)

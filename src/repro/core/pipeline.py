@@ -31,13 +31,20 @@ Session-style rendering lives in ``repro.engine`` (DESIGN.md §11):
 ``.render/.render_batch/.submit``; ``render_jit``/``render_image`` here are
 deprecation shims over its module-default handle.
 
-The GAUSSIAN axis is a sharding dimension too (DESIGN.md §10): with
+The GAUSSIAN axis is a sharding dimension too (DESIGN.md §10/§12): with
 ``cfg.scene_shards = D`` the frontend stages (project/identify/bin) run
 per-shard on the canonical padded layout (sharding/scene.py) and a stable
 merge stage rebuilds the global depth-ordered bin table bitwise-identically
-to the replicated path; bitmask/compact/rasterize proceed unchanged on the
-merged table. ``serving/sharded.py`` lays the shard axis over a 2-D
-(data=cameras, model=gaussians) mesh for scenes too large to replicate.
+to the replicated path. The projected features STAY in the per-shard layout
+(``ShardedProjected``) all the way through bitmask/compact/rasterize: each
+gather site decomposes the merged table's global indices into (shard,
+local) and fetches from the owning shard (``cfg.feature_gather`` selects
+the plain indexed gather or the owner-masked psum collective — both
+bitwise-identical to the legacy flat concat), so per-camera activation
+bytes scale 1/D alongside the persistent parameters. The engine handle
+commits the strategy (engine/handle.py); ``serving/sharded.py`` lays the
+shard axis over a 2-D (data=cameras, model=gaussians) mesh for scenes too
+large to replicate.
 
 Losslessness guarantees (tested in tests/test_pipeline_lossless.py):
   * BITWISE image equality gstg == tile_baseline whenever the bitmask method
@@ -67,6 +74,11 @@ import numpy as np
 from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
 from repro.core.grouping import GridSpec, sort_op_count
+from repro.core.projection import (
+    FEATURE_GATHER_STRATEGIES,
+    ShardedProjected,
+    proj_valid_count,
+)
 from repro.core.stages import Backend, get_backend
 from repro.sharding.scene import SceneLike, ShardedScene, shard_scene
 from repro.utils import wide_count_dtype, wide_count_sum
@@ -87,6 +99,9 @@ class RenderConfig:
     backend: str = "reference"         # stage implementation: reference | pallas
     scene_shards: int = 1              # D: gaussian-axis shards (DESIGN.md §10);
                                        #   part of the static jit/bucket signature
+    feature_gather: str = "auto"       # projected-feature gather strategy when
+                                       #   scene-sharded (DESIGN.md §12):
+                                       #   auto (-> index) | index | psum | flat
 
 
 @jax.tree_util.register_dataclass
@@ -149,6 +164,28 @@ def _scene_for_render(scene: SceneLike, cfg: RenderConfig) -> SceneLike:
     return scene
 
 
+def resolve_feature_gather(cfg: RenderConfig) -> str:
+    """Resolve ``cfg.feature_gather`` to a concrete strategy.
+
+    ``'auto'`` resolves to ``'index'`` — the plain (shard, local) indexed
+    gather, correct everywhere and optimal on one device or a logical-only
+    shard axis. The engine handle commits ``'psum'`` instead when the scene
+    is PHYSICALLY sharded over a mesh 'model' axis (engine/handle.py): the
+    owner-masked collective form is what keeps per-camera features at N/D
+    per device. ``'flat'`` is the legacy full-N concat, kept so benchmarks
+    can A/B the memory/throughput tradeoff. All strategies are
+    bitwise-identical (DESIGN.md §12); only memory/layout differ.
+    """
+    if cfg.feature_gather == "auto":
+        return "index"
+    if cfg.feature_gather not in FEATURE_GATHER_STRATEGIES:
+        raise ValueError(
+            f"unknown feature_gather {cfg.feature_gather!r}; expected "
+            f"'auto' or one of {FEATURE_GATHER_STRATEGIES}"
+        )
+    return cfg.feature_gather
+
+
 def _frontend(
     backend: Backend,
     scene: SceneLike,
@@ -158,6 +195,7 @@ def _frontend(
     method: str,
     num_bins: int,
     capacity: int,
+    feature_gather: str = "index",
 ):
     """Stages 1-3 (project / identify / bin) with the gaussian axis as a
     first-class sharding dimension.
@@ -168,21 +206,20 @@ def _frontend(
     stage combines the D fixed-capacity BinTables into the global
     depth-ordered table, bitwise-identical to the replicated path
     (core/grouping.py::merge_bin_tables, DESIGN.md §10). Downstream stages
-    (bitmask/compact/rasterize) consume the merged table + the flat padded
-    Projected unchanged.
+    (bitmask/compact/rasterize) consume the merged table plus the projected
+    features in the PER-SHARD layout (`ShardedProjected`): each gather site
+    decomposes the table's global ``gauss_idx`` into (shard, local) and
+    fetches from the owning shard (core/projection.py::proj_take,
+    DESIGN.md §12) — the full padded-N flat feature concat only exists
+    under the legacy ``feature_gather='flat'`` strategy.
 
     Returns ``(proj, table, (n_candidate_tests, n_pairs, n_span_overflow))``
-    with ``proj`` flat over the (padded) gaussian axis and the counters
-    shard-summed — bitwise-equal to the replicated reduction whenever every
-    partial fits the wide dtype's exact-integer range (always under x64;
-    below 2**24 per counter under x64-off, which covers every parity test;
-    above that the f32 counters are approximate-but-monotone on BOTH paths).
-
-    Memory note: sharding covers the persistent scene PARAMETERS (what the
-    per-device HBM budget is about); the flattened ``proj`` features are
-    still materialized at full padded N per camera for the downstream
-    gathers. Feature-sharded bitmask/raster gathers are future work
-    (ROADMAP).
+    with ``proj`` a flat ``Projected`` (replicated scene or 'flat' strategy)
+    or a ``ShardedProjected``, and the counters shard-summed —
+    bitwise-equal to the replicated reduction whenever every partial fits
+    the wide dtype's exact-integer range (always under x64; below 2**24 per
+    counter under x64-off, which covers every parity test; above that the
+    f32 counters are approximate-but-monotone on BOTH paths).
     """
     if isinstance(scene, GaussianScene):
         proj = backend.project(scene, cam)
@@ -203,13 +240,23 @@ def _frontend(
     gauss_idx = jnp.where(
         tables_s.entry_valid, tables_s.gauss_idx + offsets, 0
     )
-    proj = jax.tree.map(
-        lambda x: x.reshape(D * shard_size, *x.shape[2:]), proj_s
+    # Merge keys gathered SHARD-LOCALLY (each shard reads only its own
+    # rows): bitwise-equal to the flat proj.depth[global_idx] gather because
+    # flat[d * Ns + l] == proj_s.depth[d, l].
+    depth = jnp.where(
+        tables_s.entry_valid,
+        jax.vmap(lambda p, t: p.depth[t.gauss_idx])(proj_s, tables_s),
+        jnp.inf,
     )
-    depth = jnp.where(tables_s.entry_valid, proj.depth[gauss_idx], jnp.inf)
     table = backend.merge(
         dataclasses.replace(tables_s, gauss_idx=gauss_idx), depth
     )
+    if feature_gather == "flat":
+        proj = jax.tree.map(
+            lambda x: x.reshape(D * shard_size, *x.shape[2:]), proj_s
+        )
+    else:
+        proj = ShardedProjected(shards=proj_s, gather=feature_gather)
     return proj, table, (
         jnp.sum(pairs_s.n_candidate_tests),
         jnp.sum(pairs_s.n_pairs),
@@ -262,7 +309,8 @@ def _render_flat(
         )
 
     proj, table, (n_tests, n_pairs, n_span) = _frontend(
-        backend, scene, cam, grid, level, cfg.boundary_tile, bins_xy, capacity
+        backend, scene, cam, grid, level, cfg.boundary_tile, bins_xy, capacity,
+        resolve_feature_gather(cfg),
     )
     rast = backend.rasterize_tiles(
         proj,
@@ -274,7 +322,7 @@ def _render_flat(
     )
     image = rast.image[: cam.height, : cam.width]
     stats = RenderStats(
-        n_visible=jnp.sum(proj.valid.astype(jnp.int32)),
+        n_visible=proj_valid_count(proj),
         n_candidate_tests=n_tests,
         n_pairs_sort=n_pairs,
         sort_ops=sort_op_count(table.lengths),
@@ -297,7 +345,7 @@ def _render_gstg(backend: Backend, scene, cam, cfg, background) -> RenderResult:
     #    shared by gf^2 tiles. Per-shard + stable merge when scene-sharded.
     proj, gtable, (n_tests, n_pairs, n_span) = _frontend(
         backend, scene, cam, grid, "group", cfg.boundary_group,
-        grid.num_groups, cfg.group_capacity,
+        grid.num_groups, cfg.group_capacity, resolve_feature_gather(cfg),
     )
 
     # 4) Bitmask generation (BGM): tile-granularity tests on group entries.
@@ -325,7 +373,7 @@ def _render_gstg(backend: Backend, scene, cam, cfg, background) -> RenderResult:
         tile_capacity=cfg.tile_capacity,
     )
     stats = RenderStats(
-        n_visible=jnp.sum(proj.valid.astype(jnp.int32)),
+        n_visible=proj_valid_count(proj),
         n_candidate_tests=n_tests,
         n_pairs_sort=n_pairs,
         sort_ops=sort_op_count(gtable.lengths),

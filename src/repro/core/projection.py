@@ -46,6 +46,151 @@ class Projected:
     valid: jnp.ndarray       # (N,) bool frustum/size cull mask
 
 
+# Per-field trailing widths of Projected — the basis of the per-camera
+# activation term in the device-budget model (engine/handle.py): every field
+# is float32 except ``valid`` (bool, 1 byte).
+PROJECTED_FIELD_WIDTHS = {
+    "mean2d": 2, "cov2d": 3, "conic": 3, "depth": 1, "radius": 1,
+    "axis_radius": 2, "eigvec": 2, "eigval": 2, "rgb": 3, "alpha": 1,
+    "valid": 1,
+}
+
+
+def projected_bytes_per_gaussian() -> int:
+    """Bytes of projected per-camera features one (padded) gaussian costs.
+
+    This is the N-proportional transient the feature-sharded gathers divide
+    by D (DESIGN.md §12): with ``feature_gather != 'flat'`` each device
+    materializes only its own ``N/D`` rows of every field below.
+    """
+    # Guard against schema drift: a Projected field added without updating
+    # the widths dict would silently undercount the device-budget model.
+    assert set(PROJECTED_FIELD_WIDTHS) == {
+        f.name for f in dataclasses.fields(Projected)
+    }, "PROJECTED_FIELD_WIDTHS out of sync with Projected's fields"
+    return sum(
+        w * (1 if name == "valid" else 4)
+        for name, w in PROJECTED_FIELD_WIDTHS.items()
+    )
+
+
+@dataclasses.dataclass
+class ShardedProjected:
+    """Projected features kept in the per-shard layout (DESIGN.md §12).
+
+    ``shards`` holds the ordinary :class:`Projected` arrays with a leading
+    ``(D, Ns)`` shard axis — the direct output of the per-shard projection
+    stage, NEVER concatenated to the flat padded ``(D * Ns, ...)`` view (the
+    concat is the full-N per-camera allocation feature sharding removes).
+    ``gather`` (static metadata) selects how downstream consumers fetch an
+    entry's features from its owning shard:
+
+      * ``'index'`` — plain 2-D indexed gather ``field[shard, local]``; the
+        right strategy on one device or a logical-only shard axis.
+      * ``'psum'``  — owner-masked per-shard gathers summed across the shard
+        axis ON THE RAW BIT PATTERNS (exactly one shard owns each entry, so
+        the integer sum reproduces the owner's float bits exactly). Under a
+        2-D ``('data', 'model')`` mesh the sum over the sharded axis lowers
+        to partial per-device gathers + an all-reduce — the Megatron-style
+        collective form that never materializes full-N features per device.
+
+    Both strategies are bitwise-identical to the flat gather
+    ``concat(shards)[global_idx]`` because gathers commute with
+    concatenation: ``flat[g] == shards[g // Ns, g % Ns]``.
+
+    Differentiability: ``'index'`` (the default resolution of ``'auto'``)
+    is an ordinary gather and differentiates like the flat path; ``'psum'``
+    routes floats through a bit view (``bitcast_convert_type``) and is
+    inference-only — exactly the serving paths the engine handle commits it
+    for. Training with a sharded scene stays on ``'index'``/``'flat'``.
+    """
+
+    shards: Projected        # every field with leading (D, Ns) axes
+    gather: str = "index"    # static: 'index' | 'psum'
+
+    @property
+    def num_shards(self) -> int:
+        return self.shards.depth.shape[0]
+
+    @property
+    def shard_size(self) -> int:
+        return self.shards.depth.shape[1]
+
+    @property
+    def valid(self) -> jnp.ndarray:
+        """(D, Ns) cull mask — reductions over it equal the flat ones."""
+        return self.shards.valid
+
+
+jax.tree_util.register_dataclass(
+    ShardedProjected, data_fields=["shards"], meta_fields=["gather"]
+)
+
+FEATURE_GATHER_STRATEGIES = ("index", "psum", "flat")
+
+
+def _gather_owner_sum(x: jnp.ndarray, shard: jnp.ndarray, local: jnp.ndarray):
+    """Owner-masked gather-and-sum over the shard axis, bit-exact.
+
+    ``x``: (D, Ns, *F); ``shard``/``local``: any index shape. Each shard
+    contributes its own rows where it owns the entry and zero bits
+    elsewhere; the cross-shard sum runs on the raw bit patterns (uint view),
+    so exactly-one-owner implies the result is the owner's bits verbatim —
+    float signed zeros, NaN payloads and all. This is the form GSPMD
+    partitions as per-device gathers + all-reduce when the leading axis lays
+    over the mesh 'model' axis (sharding/policies.py::feature_shard_pspec).
+    """
+    D = x.shape[0]
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        bits = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}[x.dtype.itemsize]
+        view, restore = (
+            jax.lax.bitcast_convert_type(x, bits),
+            lambda v: jax.lax.bitcast_convert_type(v, x.dtype),
+        )
+    elif x.dtype == jnp.bool_:
+        view, restore = x.astype(jnp.uint8), lambda v: v.astype(jnp.bool_)
+    else:
+        view, restore = x, lambda v: v
+
+    def contrib(d, xd):
+        own = shard == d
+        g = xd[jnp.where(own, local, 0)]
+        mask = own.reshape(own.shape + (1,) * (g.ndim - own.ndim))
+        return jnp.where(mask, g, jnp.zeros((), view.dtype))
+
+    # Pin the accumulator dtype: under x64, jnp.sum would promote a uint32
+    # bit-view to uint64 and the bitcast back to float32 would then SPLIT a
+    # trailing dimension. Exactly one contribution is nonzero, so the
+    # same-width sum cannot overflow.
+    out = jnp.sum(
+        jax.vmap(contrib)(jnp.arange(D, dtype=shard.dtype), view),
+        axis=0,
+        dtype=view.dtype,
+    )
+    return restore(out)
+
+
+def proj_take(proj, name: str, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather field ``name`` of a flat OR sharded Projected at global
+    gaussian indices ``idx`` — THE single gather primitive every downstream
+    consumer (reference bitmask/raster gathers, the pallas feature packer)
+    routes through, so the (shard, local) index decomposition lives in one
+    place and the bitwise-parity argument is made once (DESIGN.md §12)."""
+    if not isinstance(proj, ShardedProjected):
+        return getattr(proj, name)[idx]
+    x = getattr(proj.shards, name)
+    shard, local = jnp.divmod(idx, jnp.int32(proj.shard_size))
+    if proj.gather == "psum":
+        return _gather_owner_sum(x, shard, local)
+    return x[shard, local]
+
+
+def proj_valid_count(proj) -> jnp.ndarray:
+    """Visible-gaussian count for flat or sharded features (exact integer
+    reduction, so the shard-summed total equals the flat one bitwise)."""
+    return jnp.sum(proj.valid.astype(jnp.int32))
+
+
 def eval_sh(sh: jnp.ndarray, dirs: jnp.ndarray) -> jnp.ndarray:
     """Evaluate SH color (deg 0 or 1 supported; higher coeffs ignored).
 

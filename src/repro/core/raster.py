@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grouping import BinTable, GridSpec
-from repro.core.projection import Projected, QMAX_3SIGMA
+from repro.core.projection import Projected, QMAX_3SIGMA, proj_take
 
 ALPHA_MIN = 1.0 / 255.0
 ALPHA_MAX = 0.99
@@ -82,10 +82,15 @@ def rasterize(
     P = T * T
     pix = tile_pixel_coords(grid)  # (num_tiles, P, 2)
 
-    mean2d = proj.mean2d[table.gauss_idx]   # (num_tiles, K, 2)
-    conic = proj.conic[table.gauss_idx]
-    rgb = proj.rgb[table.gauss_idx]
-    opac = jnp.where(table.entry_valid, proj.alpha[table.gauss_idx], 0.0)
+    # proj_take handles flat AND shard-kept features (DESIGN.md §12): the
+    # global table indices decompose to (shard, local) and each entry's
+    # features come from its owning shard, bitwise-equal to the flat gather.
+    mean2d = proj_take(proj, "mean2d", table.gauss_idx)   # (num_tiles, K, 2)
+    conic = proj_take(proj, "conic", table.gauss_idx)
+    rgb = proj_take(proj, "rgb", table.gauss_idx)
+    opac = jnp.where(
+        table.entry_valid, proj_take(proj, "alpha", table.gauss_idx), 0.0
+    )
 
     n_chunks = -(-K // chunk)
     pad = n_chunks * chunk - K

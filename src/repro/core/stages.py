@@ -18,6 +18,14 @@ Both backends consume/produce the same dataclasses and emit the same
 RenderStats counters, so they are interchangeable under ``render()`` and the
 losslessness guarantees can be asserted across backends (tests/test_engine.py).
 
+Every stage that consumes projected features (bitmask / rasterize) takes
+``proj`` as a flat ``Projected`` OR a ``ShardedProjected`` kept in the
+per-shard layout (DESIGN.md §12): the gathers route through
+``core.projection.proj_take``, which decomposes the table's global gaussian
+indices into (shard, local) and fetches from the owning shard —
+bitwise-identical to the flat gather, so neither backend needs a sharded
+fork of any stage.
+
 The pallas 'compact' stage is *virtual*: the fused RM kernel applies the
 bitmask filter in-register (paper Fig 10), so no per-tile table is ever
 materialized — only the per-tile lengths/overflow counters are computed (a

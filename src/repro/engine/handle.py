@@ -27,11 +27,14 @@ the canonical :class:`~repro.sharding.scene.ShardedScene` layout), the 1-D or
     stayed resident until the scene was garbage collected.
 
 The handle is intentionally a COMMIT of (scene, config): per-request knobs
-that change the compiled program (mode, backend, capacities, scene_shards)
-belong to a different handle — that is what makes the jit-cache key within a
-handle collapse to the camera geometry alone, and what gives multi-host
-serving and feature-sharded gathers a single owner of committed state to
-land in.
+that change the compiled program (mode, backend, capacities, scene_shards,
+feature_gather) belong to a different handle — that is what makes the
+jit-cache key within a handle collapse to the camera geometry alone. The
+feature-sharded gathers (DESIGN.md §12) land exactly here as promised: the
+commit resolves ``feature_gather='auto'`` to the owner-masked psum
+collective when the mesh realizes a physical 'model' axis, and the budget
+model counts the per-camera projected features at N/D accordingly;
+multi-host serving remains the next commit-time decision to land.
 """
 from __future__ import annotations
 
@@ -58,8 +61,10 @@ from repro.core.pipeline import (
     _background_array,
     _render_with_traced_camera,
     register_render_cache,
+    resolve_feature_gather,
     unregister_render_cache,
 )
+from repro.core.projection import projected_bytes_per_gaussian
 from repro.launch.mesh import make_render_mesh, render_mesh_shards
 from repro.serving.bucketing import BucketingScheduler, padded_size
 from repro.serving.queue import QueueClosed, RequestQueue
@@ -147,33 +152,60 @@ class Renderer:
             n_dev = devices if devices is not None else len(jax.devices())
             phys = render_mesh_shards(n_dev, shards)
         if device_budget_mb is not None:
-            total_mb = pytree_bytes(scene) / 2**20
+            # Per-device budget model (DESIGN.md §12): persistent scene
+            # parameters at 1/phys PLUS the transient per-camera projected
+            # features — N/phys ONLY under the resolved 'psum' strategy
+            # over a physical 'model' axis (_feature_div: an explicit
+            # 'index' gather may be all-gathered by GSPMD, so it counts
+            # full N, as do replicated/logical-only/'flat' commits).
+            scene_mb = pytree_bytes(scene) / 2**20
+            # model(s, p) = per-device MB at shard count s realized p ways:
+            # parameters at 1/p + per-camera features at N_pad(s)/fdiv.
+            model = lambda s, p: (
+                scene_mb / p
+                + self._feature_mb(scene, s) / self._feature_div(cfg, s, p)
+            )
             # Budget escalation only applies when the caller left BOTH the
             # layout and the mesh to us ('auto' shards, no explicit mesh —
             # an explicit mesh cannot grow a 'model' axis): pick the
             # smallest shard count the device count can realize that fits
-            # the per-device cap.
+            # the per-device cap (candidate counts are evaluated as a
+            # PHYSICAL d-way commit: d divides both terms).
             if (
                 scene_shards == "auto"
                 and mesh is None
                 and self._source is not None
-                and total_mb / phys > device_budget_mb
+                and model(shards, phys) > device_budget_mb
             ):
                 for d in range(max(shards, 1), n_dev + 1):
-                    if n_dev % d == 0 and total_mb / d <= device_budget_mb:
+                    if n_dev % d == 0 and model(d, d) <= device_budget_mb:
                         shards, phys = d, d
                         break
-            if total_mb / phys > device_budget_mb:
+            if model(shards, phys) > device_budget_mb:
                 layout = f"{phys}-way sharded" if phys > 1 else "replicated"
+                fdiv = self._feature_div(cfg, shards, phys)
                 raise ValueError(
-                    f"scene needs {total_mb / phys:.2f} MB/device {layout}, "
-                    f"over the {device_budget_mb} MB budget — raise "
-                    f"scene_shards or the device count"
+                    f"scene needs {model(shards, phys):.2f} MB/device "
+                    f"{layout} ({scene_mb / phys:.2f} MB parameters + "
+                    f"{self._feature_mb(scene, shards) / fdiv:.2f} MB "
+                    f"per-camera projected features at N/{fdiv}), over the "
+                    f"{device_budget_mb} MB budget — raise scene_shards or "
+                    f"the device count"
                 )
 
+        cfg_updates = {}
+        if cfg.scene_shards != shards:
+            cfg_updates["scene_shards"] = shards
+        # The gather strategy is a commit-time decision (DESIGN.md §12):
+        # 'auto' resolves to the owner-masked collective form when the
+        # scene is PHYSICALLY sharded over a mesh 'model' axis — the form
+        # whose per-device feature footprint is N/D — and to the plain
+        # (shard, local) indexed gather otherwise. An explicit strategy in
+        # cfg is respected (benchmarks A/B the legacy 'flat' concat).
+        if shards > 1 and cfg.feature_gather == "auto":
+            cfg_updates["feature_gather"] = "psum" if phys > 1 else "index"
         self._cfg = (
-            cfg if cfg.scene_shards == shards
-            else dataclasses.replace(cfg, scene_shards=shards)
+            dataclasses.replace(cfg, **cfg_updates) if cfg_updates else cfg
         )
         if mesh is None:
             mesh = make_render_mesh(devices, scene_shards=phys)
@@ -196,6 +228,12 @@ class Renderer:
         )
         self._scene = jax.device_put(staged, NamedSharding(mesh, spec))
         self._scene_mb_per_device = pytree_bytes(scene) / phys / 2**20
+        self._feature_mb_per_device = self._feature_mb(scene, shards) / (
+            self._feature_div(cfg, shards, phys)
+        )
+        # What the commit actually RUNS ('flat' for a replicated frontend,
+        # even though cfg.feature_gather may still read 'auto').
+        self._feature_gather = self._resolved_gather(cfg, shards, phys)
         self._phys_shards = phys
 
         # Per-handle jit cache, visible through the engine-wide registry.
@@ -273,6 +311,8 @@ class Renderer:
             "scene_shards": self._cfg.scene_shards,
             "physical_shards": self._phys_shards,
             "scene_mb_per_device": self._scene_mb_per_device,
+            "feature_mb_per_device": self._feature_mb_per_device,
+            "feature_gather": self._feature_gather,
             "cache": self.cache_info(),
             **self._counters,
         }
@@ -289,6 +329,40 @@ class Renderer:
         self._fns.clear()
         self._fn_stats["hits"] = 0
         self._fn_stats["misses"] = 0
+
+    # -- budget model (DESIGN.md §12) ----------------------------------------
+
+    @staticmethod
+    def _feature_mb(scene, shards: int) -> float:
+        """Per-camera projected-feature MB at the PADDED gaussian count
+        (padding rows project too; they are culled, not skipped)."""
+        if isinstance(scene, ShardedScene):
+            n_pad = scene.padded_size
+        else:
+            n = scene.num_gaussians
+            n_pad = -(-n // max(shards, 1)) * max(shards, 1)
+        return n_pad * projected_bytes_per_gaussian() / 2**20
+
+    @staticmethod
+    def _resolved_gather(cfg: RenderConfig, shards: int, phys: int) -> str:
+        """The gather strategy this commit would run (mirrors the 'auto'
+        resolution applied to the committed cfg)."""
+        if shards <= 1:
+            return "flat"       # replicated frontend: features are flat-N
+        if cfg.feature_gather == "auto":
+            return "psum" if phys > 1 else "index"
+        return resolve_feature_gather(cfg)
+
+    @classmethod
+    def _feature_div(cls, cfg: RenderConfig, shards: int, phys: int) -> int:
+        """What divides the per-camera feature bytes per device: phys only
+        when the owner-gather collective keeps them sharded over a PHYSICAL
+        'model' axis; 1 for replicated scenes, logical-only shard axes, the
+        plain indexed gather (GSPMD may gather the operand), and the legacy
+        'flat' concat."""
+        if phys > 1 and cls._resolved_gather(cfg, shards, phys) == "psum":
+            return phys
+        return 1
 
     # -- shard resolution ----------------------------------------------------
 
@@ -558,10 +632,15 @@ def open(  # noqa: A001 — the module-level session verb is the API
       (or the shard count of a pre-sharded scene); an int overrides it. The
       physical shard count follows the ``render_mesh_shards`` policy (logical
       shard axis when the device count cannot realize it).
-    * ``device_budget_mb`` — per-device HBM cap on the persistent scene
-      parameters. With ``scene_shards='auto'`` the handle escalates the shard
-      count until the committed scene fits; otherwise an over-budget commit
-      raises.
+    * ``device_budget_mb`` — per-device HBM cap counting the persistent
+      scene parameters (1/D when physically sharded) PLUS the transient
+      per-camera projected features — N/D under the feature-sharded psum
+      gathers, full N otherwise (DESIGN.md §12). With
+      ``scene_shards='auto'`` the handle escalates the shard count until
+      the committed scene fits; otherwise an over-budget commit raises.
+      The commit also resolves ``cfg.feature_gather='auto'``: 'psum' (the
+      owner-masked collective) over a physical 'model' axis, 'index'
+      otherwise.
     * ``max_batch``/``max_wait``/``queue_depth`` — the ``submit()`` futures
       front-end's batching knobs (same dials as the serving tier).
 

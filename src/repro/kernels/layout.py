@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.projection import proj_take
 from repro.utils import round_up
 
 F_MEAN_X = 0
@@ -43,14 +44,21 @@ def pack_features(
     gauss_idx/entry_valid: (B, K). Invalid entries get opacity 0 (=> alpha 0 in
     the raster kernel) and valid flag 0. ``multiple`` sets the K padding
     granularity — pass lcm(LANE, chunk) so any raster chunk size divides K_pad.
+
+    ``proj`` may be a flat ``Projected`` or a ``ShardedProjected`` kept in
+    the per-shard layout (DESIGN.md §12): the gathers route through
+    ``proj_take``, so the kernel-facing packed block is built straight from
+    the owning shards without ever materializing the flat full-N features —
+    and is bitwise-identical to the flat-gathered block.
     """
     B, K = gauss_idx.shape
     K_pad = round_up(max(K, 1), max(int(multiple), 1))
     v = entry_valid
 
     def g(field, ch=None):
-        arr = getattr(proj, field)
-        out = arr[gauss_idx] if ch is None else arr[gauss_idx, ch]
+        out = proj_take(proj, field, gauss_idx)
+        if ch is not None:
+            out = out[..., ch]
         return jnp.where(v, out, 0.0).astype(jnp.float32)
 
     feats = [

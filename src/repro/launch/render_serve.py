@@ -39,12 +39,14 @@ def parse_args(argv=None):
                          "device count to be physically sharded, otherwise "
                          "the shard axis stays logical")
     ap.add_argument("--device-budget-mb", type=float, default=None,
-                    help="refuse to serve if any scene's PER-DEVICE "
-                         "parameter bytes (full size replicated; 1/D when "
-                         "physically sharded) exceed this budget — a "
-                         "simulated HBM cap on the persistent scene "
-                         "storage; transient per-camera projected features "
-                         "are not included (DESIGN.md §10)")
+                    help="refuse to serve if any scene's PER-DEVICE bytes "
+                         "exceed this budget — a simulated HBM cap counting "
+                         "the persistent scene parameters (full size "
+                         "replicated; 1/D physically sharded) PLUS the "
+                         "transient per-camera projected features, which "
+                         "the feature-sharded gathers keep at N/D per "
+                         "device (full N replicated or with the legacy "
+                         "'flat' gather; DESIGN.md §12)")
     ap.add_argument("--parity-check", action="store_true",
                     help="re-render every completed request on the "
                          "replicated single-camera path and require BITWISE "
@@ -170,8 +172,12 @@ def main(argv=None):
             return 2
         if args.device_budget_mb is not None:
             hs = handle.stats()
-            print(f"scene {sid!r}: {hs['scene_mb_per_device']:.2f} MB/device "
-                  f"within {args.device_budget_mb} MB budget "
+            print(f"scene {sid!r}: "
+                  f"{hs['scene_mb_per_device'] + hs['feature_mb_per_device']:.2f}"
+                  f" MB/device ({hs['scene_mb_per_device']:.2f} params + "
+                  f"{hs['feature_mb_per_device']:.2f} per-camera features, "
+                  f"gather={hs['feature_gather']}) within "
+                  f"{args.device_budget_mb} MB budget "
                   f"(shards={hs['physical_shards']})")
 
     print(f"serving {args.requests} requests @ {args.rate:.0f} req/s "

@@ -2,9 +2,12 @@
 
 The actual device-sharded dispatch (cameras over 'data', gaussians over
 'model') lives in the engine handle now (``repro.engine``, DESIGN.md §11):
-a ``Renderer`` commits the scene layout once and every ``render_batch``
-reuses it. This module keeps the two serving-side pieces the handle builds
-on, plus the deprecated free-function entry:
+a ``Renderer`` commits the scene layout once — and, with it, the
+projected-feature gather strategy (DESIGN.md §12: the owner-masked psum
+form when the 'model' axis is physical, so per-camera features stay at N/D
+per device) — and every ``render_batch`` reuses both. This module keeps the
+two serving-side pieces the handle builds on, plus the deprecated
+free-function entry:
 
   * ``pad_camera_batch`` — the array-level ragged-batch padding built on the
     ``pad_indices_to`` policy (mask-correct: the padded tail replicates the

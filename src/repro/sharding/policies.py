@@ -174,6 +174,19 @@ def scene_shard_pspec(mesh: Mesh) -> P:
     return P()
 
 
+def feature_shard_pspec(mesh: Mesh) -> P:
+    """Spec for per-camera projected features in the per-shard layout
+    (``core/projection.py::ShardedProjected``, DESIGN.md §12): the leading
+    shard axis lays over 'model' exactly like the persistent scene
+    parameters, so each device materializes only its own N/D feature rows.
+    GSPMD propagates this from the scene's input sharding through the
+    per-shard frontend; the explicit spec exists for pinning it at jit
+    boundaries (out_shardings in tests/benchmarks) and for the budget
+    model's 1/D per-camera feature term. Without a 'model' axis the shard
+    axis stays logical, mirroring ``scene_shard_pspec``."""
+    return scene_shard_pspec(mesh)
+
+
 def batch_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
     """PartitionSpecs for input batches."""
     dp = _data_axes(mesh)

@@ -5,6 +5,43 @@ import pytest
 from repro.core import GaussianScene, make_camera, random_scene
 from repro.core.pipeline import RenderConfig
 
+# Session-wide compiled-renderer cache for parity-style tests: jitting the
+# whole render (the same traced-camera closure the engine handle compiles)
+# costs ~1.4s per (config, geometry) vs ~8s for a first EAGER render()
+# (which traces/compiles its internal scans piecemeal) — the single biggest
+# lever of the `-m "not slow"` fast lane. Tests that specifically assert
+# the eager differentiable oracle keep calling render() directly.
+_JIT_RENDER_FNS = {}
+
+
+def jit_render(scene, cam, cfg, background=None):
+    from repro.core.pipeline import (
+        _background_array,
+        _render_with_traced_camera,
+    )
+
+    key = (cfg, cam.width, cam.height, cam.znear, cam.zfar)
+    fn = _JIT_RENDER_FNS.get(key)
+    if fn is None:
+        fn = jax.jit(
+            _render_with_traced_camera(
+                cfg, cam.width, cam.height, cam.znear, cam.zfar
+            )
+        )
+        _JIT_RENDER_FNS[key] = fn
+    return fn(
+        scene,
+        jnp.asarray(cam.R), jnp.asarray(cam.t),
+        jnp.float32(cam.fx), jnp.float32(cam.fy),
+        jnp.float32(cam.cx), jnp.float32(cam.cy),
+        _background_array(background),
+    )
+
+
+@pytest.fixture(scope="session")
+def jit_render_fn():
+    return jit_render
+
 
 @pytest.fixture(scope="session")
 def small_scene():

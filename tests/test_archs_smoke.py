@@ -49,7 +49,26 @@ def test_full_config_consistency(arch):
     assert spec["embed"].shape[0] % 256 == 0
 
 
-@pytest.mark.parametrize("arch", sorted(ARCHS))
+# Fast-lane representatives: one arch per family (dense/moe/encoder/
+# hybrid.../ssm/vlm). The remaining archs exercise the same code paths with
+# different dims and ride the slow lane; jamba (hybrid attn+ssm+moe) is the
+# single heaviest smoke config and is slow on every heavy test.
+_FAST_ARCHS = {
+    "granite-3-2b", "granite-moe-1b-a400m", "hubert-xlarge",
+    "mamba2-370m", "llava-next-34b", "smollm-360m",
+}
+
+
+def _arch_params(archs):
+    return [
+        pytest.param(
+            a, marks=[] if a in _FAST_ARCHS else [pytest.mark.slow]
+        )
+        for a in archs
+    ]
+
+
+@pytest.mark.parametrize("arch", _arch_params(sorted(ARCHS)))
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
     params = init_from_spec(build_param_spec(cfg), jax.random.key(0))
@@ -71,7 +90,8 @@ def test_smoke_forward_and_train_step(arch):
 
 
 @pytest.mark.parametrize(
-    "arch", [a for a in sorted(ARCHS) if ARCHS[a].family != "encoder"]
+    "arch",
+    _arch_params(a for a in sorted(ARCHS) if ARCHS[a].family != "encoder"),
 )
 def test_smoke_decode_step(arch):
     cfg = get_smoke_config(arch)

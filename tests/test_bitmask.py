@@ -1,3 +1,5 @@
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,15 +13,24 @@ from repro.core.grouping import (
 )
 from repro.core.projection import project
 
+# Jitted stage wrappers (GridSpec is a frozen, hashable dataclass): a first
+# EAGER pass through identify/bin/bitmask traces each op separately and
+# dominated this file's walltime; one jit compile per (shape, statics) is
+# ~5x cheaper and shared across the module's tests.
+identify_j = jax.jit(identify, static_argnames=("grid", "level", "method"))
+bin_pairs_j = jax.jit(bin_pairs, static_argnames=("num_bins", "capacity"))
+bitmasks_j = jax.jit(generate_bitmasks, static_argnames=("grid", "method"))
+compact_j = jax.jit(compact_tiles, static_argnames=("grid", "tile_capacity"))
 
-def _pipeline(seed=0, method="ellipse", w=256, h=192):
-    scene = random_scene(jax.random.key(seed), 500, extent=3.0)
+
+def _pipeline(seed=0, method="ellipse", w=192, h=128):
+    scene = random_scene(jax.random.key(seed), 350, extent=3.0)
     cam = make_camera((0, 1.2, 5.0), (0, 0, 0), w, h)
     proj = project(scene, cam)
     grid = GridSpec(w, h, 16, 64, span=4)
-    pairs = identify(proj, grid, "group", method)
-    gtable = bin_pairs(pairs, grid.num_groups, 512)
-    masks = generate_bitmasks(proj, gtable, grid, method)
+    pairs = identify_j(proj, grid, "group", method)
+    gtable = bin_pairs_j(pairs, grid.num_groups, 512)
+    masks = bitmasks_j(proj, gtable, grid, method)
     return proj, grid, gtable, masks
 
 
@@ -27,10 +38,10 @@ def test_bitmask_soundness_vs_tile_identify():
     """bit t of gaussian g in group G set <=> tile-level identification
     includes (g, global_tile(G,t)) — computational independence (Fig 8b)."""
     proj, grid, gtable, masks = _pipeline()
-    ttable = compact_tiles(gtable, masks, grid, 256)
+    ttable = compact_j(gtable, masks, grid, 256)
 
-    pairs_t = identify(proj, grid, "tile", "ellipse")
-    ref_table = bin_pairs(pairs_t, grid.num_tiles, 256)
+    pairs_t = identify_j(proj, grid, "tile", "ellipse")
+    ref_table = bin_pairs_j(pairs_t, grid.num_tiles, 256)
 
     gi = np.asarray(ttable.gauss_idx)
     vi = np.asarray(ttable.entry_valid)
@@ -44,7 +55,7 @@ def test_bitmask_soundness_vs_tile_identify():
 
 def test_compaction_preserves_depth_order():
     proj, grid, gtable, masks = _pipeline(1)
-    ttable = compact_tiles(gtable, masks, grid, 256)
+    ttable = compact_j(gtable, masks, grid, 256)
     depth = np.asarray(proj.depth)
     gi = np.asarray(ttable.gauss_idx)
     vi = np.asarray(ttable.entry_valid)
@@ -63,6 +74,6 @@ def test_masks_zero_for_invalid_entries():
 def test_out_of_image_tiles_masked():
     # 200x120 image: groups extend past the right/bottom edge
     proj, grid, gtable, masks = _pipeline(3, w=208, h=128)
-    ttable = compact_tiles(gtable, masks, grid, 256)
+    ttable = compact_j(gtable, masks, grid, 256)
     assert ttable.num_bins == grid.num_tiles
     assert int(ttable.overflow) == 0

@@ -16,8 +16,15 @@ from repro.core.projection import project
 from repro.core import make_camera, random_scene
 from repro.utils import wide_count_dtype, wide_count_sum
 
+# Jitted stage wrappers for the full-scene tests (GridSpec is hashable):
+# one compile per (shape, statics) instead of per-op eager tracing. The
+# synthetic merge tests below stay eager — their many tiny shapes would
+# each recompile.
+identify_j = jax.jit(identify, static_argnames=("grid", "level", "method"))
+bin_pairs_j = jax.jit(bin_pairs, static_argnames=("num_bins", "capacity"))
 
-def _setup(seed=0, n=600, w=256, h=192):
+
+def _setup(seed=0, n=400, w=192, h=128):
     scene = random_scene(jax.random.key(seed), n, extent=3.0)
     cam = make_camera((0, 1.2, 5.0), (0, 0, 0), w, h)
     proj = project(scene, cam)
@@ -29,8 +36,8 @@ def test_pairs_group_leq_tile():
     """The paper's core quantity: group-level sorting keys are a strict
     subset of tile-level ones (Table I / Fig 5)."""
     proj, grid = _setup()
-    pt = identify(proj, grid, "tile", "ellipse")
-    pg = identify(proj, grid, "group", "ellipse")
+    pt = identify_j(proj, grid, "tile", "ellipse")
+    pg = identify_j(proj, grid, "group", "ellipse")
     assert int(pg.n_pairs) <= int(pt.n_pairs)
     assert int(pg.n_pairs) > 0
     # every tile hit implies its group hit => tile pairs >= group pairs and
@@ -40,16 +47,16 @@ def test_pairs_group_leq_tile():
 
 def test_no_overflow_small_scene():
     proj, grid = _setup()
-    pg = identify(proj, grid, "group", "ellipse")
+    pg = identify_j(proj, grid, "group", "ellipse")
     assert int(pg.n_span_overflow) == 0
-    table = bin_pairs(pg, grid.num_groups, 512)
+    table = bin_pairs_j(pg, grid.num_groups, 512)
     assert int(table.overflow) == 0
 
 
 def test_bin_table_depth_sorted():
     proj, grid = _setup(1)
-    pg = identify(proj, grid, "group", "ellipse")
-    table = bin_pairs(pg, grid.num_groups, 512)
+    pg = identify_j(proj, grid, "group", "ellipse")
+    table = bin_pairs_j(pg, grid.num_groups, 512)
     depth = np.asarray(proj.depth)
     gidx = np.asarray(table.gauss_idx)
     valid = np.asarray(table.entry_valid)
@@ -60,8 +67,8 @@ def test_bin_table_depth_sorted():
 
 def test_bin_lengths_match_pairs():
     proj, grid = _setup(2)
-    pg = identify(proj, grid, "group", "ellipse")
-    table = bin_pairs(pg, grid.num_groups, 512)
+    pg = identify_j(proj, grid, "group", "ellipse")
+    table = bin_pairs_j(pg, grid.num_groups, 512)
     assert int(jnp.sum(table.lengths)) == int(pg.n_pairs)
 
 
@@ -206,3 +213,122 @@ def test_identify_counter_dtype_is_wide():
     exact = int(np.asarray(pg.valid).sum())
     assert int(pg.n_pairs) == exact
     assert int(pg.n_candidate_tests) >= exact
+
+
+# ---------------------------------------------------------------------------
+# merge_bin_tables property test (hypothesis): the merge invariant holds for
+# ANY gaussian-major pair population — forced depth ties, per-bin capacity
+# overflow, all-padding shards, D in {1..4} — not just the scenes the render
+# parity suite happens to produce.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests degrade gracefully without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _merge_case(n_gauss, shards, capacity, num_bins, depth_levels,
+                dead_tail, seed):
+    """One merge-vs-global comparison on a synthetic pair population.
+
+    Mirrors the canonical sharded layout (sharding/scene.py): the gaussian
+    axis is padded to a multiple of D and every padding gaussian's pairs
+    are invalid (culled rows still occupy pair slots) — so EVERY shard has
+    the same size, and a shard can be entirely padding.
+    """
+    rng = np.random.default_rng(seed)
+    span = 2
+    size = -(-n_gauss // shards)
+    n_pad = size * shards
+    pairs = _synthetic_pairs(rng, n_pad, span, num_bins)
+    # Per-gaussian depths from a tiny pool => heavy cross-gaussian ties, so
+    # the stable tie-break (insertion order == global gaussian order) is the
+    # only thing that can make the comparison pass.
+    gauss_depth = np.full((n_pad,), np.inf, np.float32)
+    gauss_depth[:n_gauss] = rng.choice(
+        np.arange(1.0, depth_levels + 1.0, dtype=np.float32), size=n_gauss
+    )
+    gauss_depth = jnp.asarray(gauss_depth)
+    # Cull padding rows; dead_tail additionally kills the whole LAST shard
+    # (an all-padding shard must contribute nothing and not disturb the
+    # tie-break).
+    cut = (shards - 1) * size if dead_tail and shards > 1 else n_gauss
+    alive = np.asarray(pairs.gauss_idx) < min(cut, n_gauss)
+    valid = pairs.valid & jnp.asarray(alive)
+    depth_flat = jnp.where(valid, gauss_depth[pairs.gauss_idx], jnp.inf)
+    pairs = dataclasses.replace(
+        pairs,
+        depth=depth_flat,
+        valid=valid,
+        bin_id=jnp.where(valid, pairs.bin_id, num_bins).astype(jnp.int32),
+    )
+
+    ref = bin_pairs(pairs, num_bins, capacity)
+    shard_pairs, size = _shard_pairs(pairs, n_pad, shards, span)
+    tables = [bin_pairs(p, num_bins, capacity) for p in shard_pairs]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
+    offs = (jnp.arange(shards, dtype=jnp.int32) * size)[:, None, None]
+    gidx = jnp.where(stacked.entry_valid, stacked.gauss_idx + offs, 0)
+    depth = jnp.where(stacked.entry_valid, gauss_depth[gidx], jnp.inf)
+    merged = merge_bin_tables(
+        dataclasses.replace(stacked, gauss_idx=gidx), depth
+    )
+    for field in ("gauss_idx", "entry_valid", "lengths", "overflow"):
+        a = np.asarray(getattr(ref, field))
+        b = np.asarray(getattr(merged, field))
+        assert (a == b).all(), (
+            f"{field} diverges (n={n_gauss}, D={shards}, K={capacity}, "
+            f"bins={num_bins}, levels={depth_levels}, dead_tail={dead_tail})"
+        )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n_gauss=st.integers(1, 24),
+        shards=st.integers(1, 4),
+        capacity=st.sampled_from([3, 8, 64]),   # overflow and no-overflow
+        num_bins=st.integers(1, 6),
+        depth_levels=st.integers(1, 3),          # 1 => EVERY depth ties
+        dead_tail=st.booleans(),                 # all-padding last shard
+        seed=st.integers(0, 2**20),
+    )
+    def test_merge_bin_tables_property(
+        n_gauss, shards, capacity, num_bins, depth_levels, dead_tail, seed
+    ):
+        """merge_bin_tables == bin_pairs on the global pair set, field for
+        field, for arbitrary pair populations — the standalone contract the
+        render parity suite only exercises end-to-end."""
+        _merge_case(
+            n_gauss, shards, capacity, num_bins, depth_levels, dead_tail,
+            seed,
+        )
+
+else:
+
+    import pytest as _pytest
+
+    @_pytest.mark.parametrize("shards", [1, 2, 3, 4])
+    @_pytest.mark.parametrize(
+        "n_gauss,capacity,depth_levels,dead_tail",
+        [
+            (1, 3, 1, False),     # single gaussian, everything ties
+            (5, 3, 1, True),      # overflow + all-padding last shard
+            (17, 8, 2, False),    # ragged shard sizes + ties
+            (24, 64, 3, True),    # no overflow, dead tail
+        ],
+    )
+    def test_merge_bin_tables_property(
+        n_gauss, shards, capacity, depth_levels, dead_tail
+    ):
+        """Deterministic fallback sweep of the same merge property when
+        hypothesis is unavailable (the property test proper randomizes the
+        pair population; this pins the named edge cases)."""
+        for seed in (0, 1):
+            _merge_case(
+                n_gauss, shards, capacity, 5, depth_levels, dead_tail, seed
+            )

@@ -13,9 +13,11 @@ from repro.kernels.layout import pack_features
 
 
 def _setup(method, gf, seed=0):
+    # Smallest interpret-mode shapes that still cover the kernel's lane
+    # logic: >1 group on each axis at both gf values, K > one block.
     tile = 16
-    w = h = 128
-    scene = random_scene(jax.random.key(seed), 600, extent=3.0)
+    w = h = 96
+    scene = random_scene(jax.random.key(seed), 400, extent=3.0)
     cam = make_camera((0, 1.0, 4.5), (0, 0, 0), w, h)
     proj = project(scene, cam)
     grid = GridSpec(w, h, tile, tile * gf, span=4)

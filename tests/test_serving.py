@@ -236,8 +236,9 @@ def test_server_end_to_end(tiny_scene, serving_cfg):
     signatures, cache counters see the executable reuse."""
     import numpy as np
 
+    from conftest import jit_render
+
     from repro.core import make_camera
-    from repro.core.pipeline import render
     from repro.serving.queue import RenderRequest
     from repro.serving.server import RenderServer
 
@@ -258,7 +259,9 @@ def test_server_end_to_end(tiny_scene, serving_cfg):
     for r in reqs:
         got = results[r.request_id]
         assert got.signature == r.signature()
-        expect = render(tiny_scene, r.camera, serving_cfg)
+        # jit'd oracle (conftest session cache): the dispatch path is jit
+        # too, and the 1e-6 tolerance absorbs batched-vs-single fusion.
+        expect = jit_render(tiny_scene, r.camera, serving_cfg)
         np.testing.assert_allclose(
             got.image, np.asarray(expect.image), atol=1e-6, rtol=1e-6
         )

@@ -110,6 +110,24 @@ def _cfg(**kw):
     return RenderConfig(**base)
 
 
+_REP_CACHE = {}
+
+
+def _replicated(scene, mode):
+    """Module-shared replicated reference render per mode (the jit'd
+    production path every sharded/strategy variant is compared against —
+    rendering it once keeps the parity matrix inside the fast lane)."""
+    key = (id(scene), mode)
+    if key not in _REP_CACHE:
+        from conftest import jit_render
+
+        from repro.core import make_camera
+
+        cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
+        _REP_CACHE[key] = jit_render(scene, cam, _cfg(mode=mode))
+    return _REP_CACHE[key]
+
+
 def _assert_same_result(a, b, ctx=""):
     assert (np.asarray(a.image) == np.asarray(b.image)).all(), (
         f"image diverges {ctx}"
@@ -163,40 +181,158 @@ def test_shard_scene_canonical_layout(tiny_scene):
 
 @pytest.mark.parametrize("mode", ["gstg", "tile_baseline", "group_baseline"])
 @pytest.mark.parametrize("shards", [1, 2, 3])
-def test_scene_sharded_render_parity(tiny_scene, mode, shards):
+def test_scene_sharded_render_parity(tiny_scene, jit_render_fn, mode, shards):
     """The tentpole invariant: the sharded engine is bitwise-identical
     (image + every integer counter) to the replicated path, for every mode,
-    including the degenerate 1-shard layout and ragged padding (200 % 3)."""
+    including the degenerate 1-shard layout and ragged padding (200 % 3).
+    Since DESIGN.md §12 this runs WITH feature-sharded gathers on (the
+    default 'auto' strategy resolves to the (shard, local) indexed gather):
+    the projected features stay per-shard through bitmask/compact/raster.
+    Both sides run the jit'd production closure (the eager oracle differs
+    from ANY jit path by ~1 ulp of fusion rounding, sharded or not)."""
     from repro.core import make_camera
-    from repro.core.pipeline import render
     from repro.sharding.scene import shard_scene
 
     cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
-    rep = render(tiny_scene, cam, _cfg(mode=mode))
+    rep = _replicated(tiny_scene, mode)
     # Pass the canonical layout explicitly — exercises the ShardedScene entry
     # (the serving path) rather than the in-trace shard.
-    sh = render(
+    sh = jit_render_fn(
         shard_scene(tiny_scene, shards), cam,
         _cfg(mode=mode, scene_shards=shards),
     )
     _assert_same_result(rep, sh, f"(mode={mode}, shards={shards})")
 
 
-@pytest.mark.parametrize("bg,bt", [("aabb", "aabb"), ("obb", "ellipse")])
-def test_scene_sharded_lossless_combos(tiny_scene, bg, bt):
-    """Sharding composes with the §7 losslessness combos: gstg sharded ==
-    gstg replicated (bitwise) == tile_baseline (bitwise, lossless combo)."""
+@pytest.mark.parametrize(
+    "mode,gather",
+    [
+        ("gstg", "index"),
+        ("gstg", "psum"),
+        ("gstg", "flat"),
+        ("tile_baseline", "psum"),
+        ("group_baseline", "psum"),
+        ("group_baseline", "flat"),
+    ],
+)
+def test_feature_gather_strategy_parity(tiny_scene, jit_render_fn, mode, gather):
+    """Every feature-gather strategy (DESIGN.md §12) lands on the SAME bits
+    as the replicated path: the plain (shard, local) indexed gather, the
+    owner-masked psum collective (whose cross-shard sum runs on raw bit
+    patterns — the partition-friendly form), and the legacy flat concat.
+    Gathers commute with concatenation; this is the test of that claim.
+    ('index' is the default strategy, so the full mode matrix above already
+    covers it; the explicit combos here pin psum/flat on every mode.)"""
+    from repro.core import make_camera
+
+    cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
+    rep = _replicated(tiny_scene, mode)
+    sh = jit_render_fn(
+        tiny_scene, cam,
+        _cfg(mode=mode, scene_shards=3, feature_gather=gather),
+    )
+    _assert_same_result(rep, sh, f"(mode={mode}, gather={gather})")
+
+
+def test_feature_gather_unknown_strategy_raises(tiny_scene):
     from repro.core import make_camera
     from repro.core.pipeline import render
 
     cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
+    with pytest.raises(ValueError, match="feature_gather"):
+        render(
+            tiny_scene, cam,
+            _cfg(scene_shards=2, feature_gather="bogus"),
+        )
+
+
+def test_sharded_proj_take_matches_flat_gather(tiny_scene):
+    """proj_take unit contract: on a ShardedProjected, both strategies
+    reproduce the flat gather bit for bit, for every Projected field —
+    including NaN-free specials like signed zeros (the psum path sums raw
+    bits, so exactly-one-owner == owner's bits verbatim)."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import make_camera
+    from repro.core.projection import (
+        ShardedProjected,
+        proj_take,
+        proj_valid_count,
+        project,
+    )
+    from repro.sharding.scene import shard_scene
+
+    cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
+    sharded = shard_scene(tiny_scene, 3)
+    proj_s = jax.vmap(lambda s: project(s, cam))(sharded.shards)
+    flat = jax.tree.map(
+        lambda x: x.reshape(x.shape[0] * x.shape[1], *x.shape[2:]), proj_s
+    )
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(
+        rng.integers(0, sharded.padded_size, size=(7, 13)).astype(np.int32)
+    )
+    for gather in ("index", "psum"):
+        sp = ShardedProjected(shards=proj_s, gather=gather)
+        for f in dc.fields(flat):
+            want = np.asarray(getattr(flat, f.name)[idx])
+            got = np.asarray(proj_take(sp, f.name, idx))
+            assert want.dtype == got.dtype and (
+                want.view(np.uint8) == got.view(np.uint8)
+            ).all(), f"{gather}/{f.name} diverges from flat gather"
+        assert int(proj_valid_count(sp)) == int(proj_valid_count(flat))
+
+
+def test_feature_budget_model_scales_inverse_d(tiny_scene):
+    """The --device-budget-mb model (engine/handle.py): per-camera projected
+    feature bytes divide by D exactly when the commit runs the psum gathers
+    over a PHYSICAL 'model' axis; logical shard axes and the legacy 'flat'
+    strategy count full N (asserted without devices — the model is pure
+    arithmetic; the virtual-device suite asserts the committed stats)."""
+    import dataclasses as dc
+
+    from repro.core.pipeline import RenderConfig
+    from repro.core.projection import projected_bytes_per_gaussian
+    from repro.engine import Renderer
+
+    cfg = RenderConfig(scene_shards=4)
+    full = Renderer._feature_mb(tiny_scene, 4)
+    n_pad = -(-tiny_scene.num_gaussians // 4) * 4
+    assert full == n_pad * projected_bytes_per_gaussian() / 2**20
+    # physical 4-way shard + auto (-> psum): 1/D
+    assert Renderer._feature_div(cfg, 4, 4) == 4
+    # logical-only shard axis: full N per device
+    assert Renderer._feature_div(cfg, 4, 1) == 1
+    # legacy flat concat: full N even when physically sharded
+    flat_cfg = dc.replace(cfg, feature_gather="flat")
+    assert Renderer._feature_div(flat_cfg, 4, 4) == 1
+    # replicated scene: no sharded features at all
+    assert Renderer._feature_div(RenderConfig(), 1, 1) == 1
+
+
+@pytest.mark.parametrize("bg,bt", [("aabb", "aabb"), ("obb", "ellipse")])
+def test_scene_sharded_lossless_combos(tiny_scene, jit_render_fn, bg, bt):
+    """Sharding composes with the §7 losslessness combos: gstg sharded ==
+    gstg replicated (bitwise) == tile_baseline (bitwise, lossless combo) —
+    all through the jit'd production closure (the §7 combos hold under jit
+    because the per-tile entry TABLES are identical arrays, so the blended
+    programs see the same inputs; the eager-oracle combos are
+    tests/test_pipeline_lossless.py)."""
+    from repro.core import make_camera
+
+    cam = make_camera(CAM_POS, (0, 0, 0), 128, 128)
     cfg = _cfg(mode="gstg", boundary_group=bg, boundary_tile=bt)
-    rep = render(tiny_scene, cam, cfg)
-    sh = render(
+    rep = jit_render_fn(tiny_scene, cam, cfg)
+    sh = jit_render_fn(
         tiny_scene, cam, dataclasses.replace(cfg, scene_shards=2)
     )
     _assert_same_result(rep, sh, f"({bg},{bt})")
-    base = render(tiny_scene, cam, _cfg(mode="tile_baseline", boundary_tile=bt))
+    base = jit_render_fn(
+        tiny_scene, cam, _cfg(mode="tile_baseline", boundary_tile=bt)
+    )
     assert (np.asarray(sh.image) == np.asarray(base.image)).all()
 
 
@@ -229,26 +365,49 @@ def test_scene_sharded_batch_ragged_cameras(tiny_scene):
     _assert_same_result(rep, sh, "(batch ragged)")
 
 
+_PALLAS_REP = {}
+
+
 @pytest.mark.slow
-def test_scene_sharded_pallas_parity(tiny_scene):
-    """Both backends honor the sharded frontend: pallas gstg sharded ==
-    pallas replicated bitwise (the kernels consume the merged table)."""
+@pytest.mark.parametrize("mode", ["gstg", "tile_baseline", "group_baseline"])
+@pytest.mark.parametrize("shards", [2, 3])
+def test_scene_sharded_pallas_parity(tiny_scene, jit_render_fn, mode, shards):
+    """Both backends honor the sharded frontend WITH feature-sharded
+    gathers: pallas sharded == pallas replicated bitwise for every mode x
+    D (the kernels' feature packer gathers straight from the owning shards
+    — kernels/layout.py::pack_features via proj_take). Completes the
+    acceptance matrix: all modes x backends x D in {1, 2, 3} (D=1 pallas
+    rides tests/test_engine_handle.py and tests/test_golden.py)."""
     from repro.core import make_camera
-    from repro.core.pipeline import render
 
     cam = make_camera(CAM_POS, (0, 0, 0), 64, 64)
-    cfg = _cfg(backend="pallas", group_capacity=128, tile_capacity=128)
-    rep = render(tiny_scene, cam, cfg)
-    sh = render(tiny_scene, cam, dataclasses.replace(cfg, scene_shards=2))
-    _assert_same_result(rep, sh, "(pallas)")
+    cfg = _cfg(
+        mode=mode, backend="pallas", group_capacity=128, tile_capacity=128
+    )
+    if mode not in _PALLAS_REP:
+        _PALLAS_REP[mode] = jit_render_fn(tiny_scene, cam, cfg)
+    rep = _PALLAS_REP[mode]
+    sh = jit_render_fn(
+        tiny_scene, cam, dataclasses.replace(cfg, scene_shards=shards)
+    )
+    _assert_same_result(rep, sh, f"(pallas, mode={mode}, D={shards})")
+    # The psum collective form too (what a physical mesh commits).
+    sh_psum = jit_render_fn(
+        tiny_scene, cam,
+        dataclasses.replace(cfg, scene_shards=shards, feature_gather="psum"),
+    )
+    _assert_same_result(
+        rep, sh_psum, f"(pallas psum, mode={mode}, D={shards})"
+    )
 
 
 _DEVICE_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(devices)d"
-import dataclasses, json
+import dataclasses, json, warnings
 import jax, numpy as np
 
+from repro import engine
 from repro.core import orbit_cameras, random_scene
 from repro.core.pipeline import RenderConfig, render_batch
 from repro.launch.mesh import make_render_mesh
@@ -270,6 +429,56 @@ for mode, backend in %(combos)s:
         if not (np.asarray(getattr(rep.stats, name))
                 == np.asarray(getattr(sh.stats, name))).all():
             failures.append((mode, backend, name))
+
+# Commit-time gather decision (DESIGN.md S12): a PHYSICAL 'model' axis must
+# commit the psum collective, with the budget model's per-camera feature
+# term at N/D per device; and the per-shard features must actually lay over
+# 'model' (the feature_shard_pspec layout).
+mesh = make_render_mesh(%(devices)d, scene_shards=%(shards)d)
+cfg = RenderConfig(group_capacity=256, tile_capacity=256, span=6,
+                   scene_shards=%(shards)d)
+h = engine.open(scene, cfg, mesh=mesh)
+hs = h.stats()
+if hs["feature_gather"] != "psum":
+    failures.append(("commit", "feature_gather", hs["feature_gather"]))
+from repro.core.projection import projected_bytes_per_gaussian
+n_pad = -(-scene.num_gaussians // %(shards)d) * %(shards)d
+want_mb = n_pad * projected_bytes_per_gaussian() / 2**20 / %(shards)d
+if abs(hs["feature_mb_per_device"] - want_mb) > 1e-9:
+    failures.append(("commit", "feature_mb", hs["feature_mb_per_device"]))
+h.close()
+
+# Budget-driven auto escalation under the full (params + features) model: a
+# budget only a physical %(shards)d-way commit can meet must escalate a
+# scene_shards=1 'auto' open() to %(shards)d with psum gathers.
+from repro.utils import pytree_bytes
+full_mb = pytree_bytes(scene) / 2**20 + n_pad * projected_bytes_per_gaussian() / 2**20
+h = engine.open(
+    scene,
+    RenderConfig(group_capacity=256, tile_capacity=256, span=6),
+    devices=%(devices)d,
+    device_budget_mb=full_mb / %(shards)d * 1.2,
+)
+hs = h.stats()
+if hs["physical_shards"] < 2 or hs["feature_gather"] != "psum":
+    failures.append(("escalation", hs["physical_shards"], hs["feature_gather"]))
+h.close()
+
+from jax.sharding import NamedSharding
+from repro.core.projection import project
+from repro.sharding.policies import feature_shard_pspec, scene_shard_pspec
+from repro.sharding.scene import shard_scene_host
+staged = jax.device_put(
+    shard_scene_host(scene, %(shards)d),
+    NamedSharding(mesh, scene_shard_pspec(mesh)),
+)
+proj_s = jax.jit(
+    lambda s: jax.vmap(lambda x: project(x, cams[0]))(s.shards),
+    out_shardings=NamedSharding(mesh, feature_shard_pspec(mesh)),
+)(staged)
+spec = proj_s.depth.sharding.spec
+if tuple(spec)[:1] != ("model",):
+    failures.append(("pspec", "feature_shard", str(spec)))
 print(json.dumps({"failures": failures}))
 """
 
