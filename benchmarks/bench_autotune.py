@@ -1,0 +1,341 @@
+"""The (tile x group x capacity) sweep benchmark + persisted BENCH trajectory.
+
+One sweep, three outputs (DESIGN.md §13):
+
+  * the paper figures the two retired standalone benches covered —
+    Figs 3/5/7 tile-size effects (bench_tilesize) and the Fig 11 tile+group
+    speedup grid (bench_groupsize) — now derived from the SAME phase-1
+    stats passes the autotune search runs;
+  * real measured walltime for EVERY feasible grid point through the exact
+    jit'd engine-handle path (``repro.autotune.sweep``), so the selected
+    config's walltime is <= every other swept point by construction;
+  * a schema-versioned ``BENCH_autotune_<host>.json`` at the repo root —
+    the persisted perf trajectory the ROADMAP asks for (committed, so it
+    survives re-anchors; re-running the bench refreshes it).
+
+Defaults are CPU-tractable (reduced gaussian counts at the paper's reduced
+eval resolutions); on real hardware raise ``--gaussians`` / pass
+``--backend pallas`` (with ``REPRO_PALLAS_INTERPRET=0`` the kernels
+compile, DESIGN.md §13). ``--smoke`` is the CI entry: a 2x2 (group x
+capacity) grid at the default tile on a tiny scene, schema-validated, and
+the tuned config is asserted BITWISE-identical to the default config
+(group/capacity are the lossless axes; the tile axis only reassociates fp).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import re
+import sys
+import time
+
+import numpy as np
+
+SCHEMA = "repro.bench_autotune/v1"
+
+DEFAULT_SCENES = ("train", "truck")
+DEFAULT_GAUSSIANS = 6000
+
+
+def _host() -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "-", platform.node() or "unknown")
+
+
+def default_out_path(host: str | None = None) -> str:
+    return f"BENCH_autotune_{host or _host()}.json"
+
+
+def validate_bench(doc: dict, min_points: int = 1) -> list:
+    """Schema check for a BENCH_autotune document. Returns a list of
+    problems (empty = valid). ``min_points`` is the required number of
+    distinct (tile, group) points per scene — 9 for the real trajectory,
+    lower for the CI smoke grid."""
+    from repro.core.cost_model import StageCosts
+
+    errs = []
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, expected {SCHEMA!r}")
+    for key in ("host", "timestamp", "backend", "config", "scenes"):
+        if key not in doc:
+            errs.append(f"missing top-level key {key!r}")
+    scenes = doc.get("scenes") or {}
+    if not scenes:
+        errs.append("no scenes")
+    for name, sc in scenes.items():
+        grid = sc.get("grid") or []
+        points = {(e.get("tile"), e.get("group")) for e in grid}
+        if len(points) < min_points:
+            errs.append(
+                f"scene {name}: {len(points)} (tile, group) points "
+                f"< required {min_points}"
+            )
+        measured = []
+        for e in grid:
+            where = f"scene {name} point {e.get('tile')}+{e.get('group')}"
+            for k in ("tile", "group", "tile_capacity"):
+                if not isinstance(e.get(k), int):
+                    errs.append(f"{where}: non-int {k!r}")
+            try:
+                StageCosts.from_dict(e["est"])
+            except (KeyError, TypeError, ValueError) as exc:
+                errs.append(f"{where}: bad cost estimate ({exc})")
+            if e.get("feasible"):
+                if not isinstance(e.get("measured_ms"), (int, float)):
+                    errs.append(f"{where}: feasible but no measured_ms")
+                else:
+                    measured.append(e)
+        sel = sc.get("selected")
+        if not sel:
+            errs.append(f"scene {name}: no selected config")
+        elif measured:
+            best = min(measured, key=lambda e: e["measured_ms"])
+            if sel.get("measured_ms") > best["measured_ms"]:
+                errs.append(
+                    f"scene {name}: selected measured_ms "
+                    f"{sel.get('measured_ms')} > best swept point "
+                    f"{best['measured_ms']} — selection must be the minimum"
+                )
+    return errs
+
+
+def _scene_report(scene, cam, base_cfg, tiles, factors, capacities,
+                  warmup, reps):
+    """Sweep one scene; fold in the retired benches' figure headlines."""
+    from repro.autotune import Candidate, config_for, stats_pass, sweep
+    from repro.core.cost_model import GSTG_ASIC, estimate
+
+    res = sweep(
+        scene, cam, base_cfg,
+        tiles=tiles, group_factors=factors, capacities=capacities,
+        warmup=warmup, reps=reps,
+    )
+
+    # Fig 11 normalization + Figs 5/7 ratios: tile_baseline stats passes at
+    # the swept extremes and the paper's 16px reference tile.
+    cap = max(capacities)
+    t_lo, t_hi = min(tiles), max(tiles)
+    base_stats = {}
+    for t in {t_lo, t_hi, 16}:
+        cfg_t = dataclasses.replace(
+            config_for(base_cfg, Candidate(t, 2 * t, cap)),
+            mode="tile_baseline",
+        )
+        base_stats[t] = stats_pass(scene, cam, cfg_t)
+    est_base16 = estimate(
+        base_stats[16], GSTG_ASIC, mode="tile_baseline", execution="gpu",
+    ).total_s
+
+    for e in res.trajectory:
+        e["speedup_est_vs_16px_baseline"] = (
+            est_base16 / e["est_total_s"] if e["est_total_s"] > 0 else None
+        )
+
+    def _tpg(t):   # Fig 5: intersecting tiles per gaussian
+        s = base_stats[t]
+        return float(s.n_pairs_sort) / max(int(s.n_visible), 1)
+
+    def _gpp(t):   # Fig 7: gaussians processed per pixel
+        s = base_stats[t]
+        return float(s.tile_entries) * t * t / (cam.width * cam.height)
+
+    best_est = min(
+        (e for e in res.trajectory if e["feasible"]),
+        key=lambda e: e["est_total_s"],
+    )
+    headlines = {
+        "tiles_per_gaussian_ratio": _tpg(t_lo) / max(_tpg(t_hi), 1e-9),
+        "gaussians_per_pixel_ratio": _gpp(t_hi) / max(_gpp(t_lo), 1e-9),
+        "best_combo_est": f"{best_est['tile']}+{best_est['group']}",
+        "best_combo_est_speedup": best_est["speedup_est_vs_16px_baseline"],
+        "selected_speedup_est": next(
+            e["speedup_est_vs_16px_baseline"] for e in res.trajectory
+            if (e["tile"], e["group"], e["tile_capacity"])
+            == (res.tile, res.group, res.tile_capacity)
+        ),
+    }
+    return {
+        "signature": repr(res.signature),
+        "grid": res.trajectory,
+        "selected": {
+            "tile": res.tile,
+            "group": res.group,
+            "tile_capacity": res.tile_capacity,
+            "measured_ms": res.measured_ms,
+        },
+        "headlines": headlines,
+    }
+
+
+def run(
+    scenes=DEFAULT_SCENES,
+    n_gaussians: int = DEFAULT_GAUSSIANS,
+    width: int | None = None,
+    height: int | None = None,
+    backend: str = "reference",
+    tiles=None,
+    factors=None,
+    capacities=None,
+    warmup: int = 1,
+    reps: int = 3,
+    out_path: str | None = None,
+    min_points: int | None = None,
+) -> dict:
+    """The sweep over ``scenes``; writes the BENCH json and returns the doc.
+
+    ``out_path=None`` writes ``BENCH_autotune_<host>.json`` in the current
+    directory (the repo root under ``benchmarks/run.py`` and check.sh).
+    """
+    import jax
+
+    from benchmarks.common import emit, scene_and_camera
+    from repro.autotune import (
+        DEFAULT_CAPACITIES,
+        DEFAULT_GROUP_FACTORS,
+        DEFAULT_TILES,
+    )
+    from repro.core.pipeline import RenderConfig
+
+    tiles = tuple(tiles or DEFAULT_TILES)
+    factors = tuple(factors or DEFAULT_GROUP_FACTORS)
+    capacities = tuple(capacities or DEFAULT_CAPACITIES)
+    if min_points is None:
+        min_points = len(tiles) * len(factors)
+
+    base_cfg = RenderConfig(mode="gstg", backend=backend, span=6)
+    doc = {
+        "schema": SCHEMA,
+        "host": _host(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "jax_backend": jax.default_backend(),
+        "backend": backend,
+        "config": {
+            "n_gaussians": n_gaussians,
+            "tiles": list(tiles),
+            "group_factors": list(factors),
+            "capacities": list(capacities),
+            "warmup": warmup,
+            "reps": reps,
+            "mode": base_cfg.mode,
+        },
+        "scenes": {},
+    }
+    for name in scenes:
+        scene, cam = scene_and_camera(
+            name, n_gaussians, width=width, height=height
+        )
+        t0 = time.time()
+        sc = _scene_report(
+            scene, cam, base_cfg, tiles, factors, capacities, warmup, reps
+        )
+        doc["scenes"][name] = sc
+        sel = sc["selected"]
+        emit(
+            f"autotune_{name}",
+            sel["measured_ms"] * 1e3,
+            f"selected {sel['tile']}+{sel['group']}@{sel['tile_capacity']} "
+            f"{sel['measured_ms']:.1f}ms "
+            f"est_speedup={sc['headlines']['selected_speedup_est']:.2f}x "
+            f"({time.time() - t0:.0f}s sweep)",
+        )
+
+    errs = validate_bench(doc, min_points=min_points)
+    if errs:
+        raise AssertionError("BENCH document invalid: " + "; ".join(errs))
+    out = out_path or default_out_path()
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    emit("bench_autotune_written", 0.0, out)
+    return doc
+
+
+def _smoke(args) -> int:
+    """CI smoke (scripts/check.sh): 2x2 grid at the default tile on a tiny
+    scene — validates the emitted schema and asserts the tuned config
+    renders BITWISE-identical to the default config."""
+    import jax
+
+    from benchmarks.common import scene_and_camera
+    from repro import engine
+    from repro.core.pipeline import RenderConfig
+
+    scene, cam = scene_and_camera("train", 500, width=96, height=96)
+    base_cfg = RenderConfig(mode="gstg", backend=args.backend, span=6)
+    doc = run(
+        scenes=("train",),
+        n_gaussians=500,
+        width=96, height=96,
+        backend=args.backend,
+        tiles=(base_cfg.tile,),            # tile fixed => bitwise guarantee
+        factors=(2, 4),
+        capacities=(256, 512),
+        warmup=1, reps=1,
+        out_path=args.out,
+        min_points=2,
+    )
+    sel = doc["scenes"]["train"]["selected"]
+    with engine.open(scene, base_cfg) as rd, engine.open(
+        scene, base_cfg,
+        tile_params=(sel["tile"], sel["group"], sel["tile_capacity"]),
+    ) as rt:
+        a = np.asarray(rd.render(cam).image)
+        b = np.asarray(rt.render(cam).image)
+    if not (a == b).all():
+        print("bench_autotune --smoke: FAILED (tuned config not "
+              "bitwise-identical to the default config)")
+        return 1
+    print(f"bench_autotune --smoke: OK (selected {sel['tile']}+"
+          f"{sel['group']}@{sel['tile_capacity']}, bitwise == default, "
+          f"schema valid, wrote {args.out})")
+    return 0
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenes", default=",".join(DEFAULT_SCENES))
+    ap.add_argument("--gaussians", type=int, default=DEFAULT_GAUSSIANS)
+    ap.add_argument("--width", type=int, default=None)
+    ap.add_argument("--height", type=int, default=None)
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"])
+    ap.add_argument("--tiles", default=None,
+                    help="comma-separated tile sizes (default 8,16,32)")
+    ap.add_argument("--factors", default=None,
+                    help="comma-separated group factors (default 2,4,8)")
+    ap.add_argument("--capacities", default=None,
+                    help="comma-separated tile capacities (default 256,512)")
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=None,
+                    help="output path (default BENCH_autotune_<host>.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny scene, 2x2 group x capacity grid, "
+                         "schema validation + bitwise-vs-default assert")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        if args.out is None:
+            args.out = os.path.join("results", "BENCH_autotune_smoke.json")
+            os.makedirs("results", exist_ok=True)
+        return _smoke(args)
+
+    ints = lambda s: tuple(int(x) for x in s.split(",")) if s else None
+    run(
+        scenes=tuple(s.strip() for s in args.scenes.split(",") if s.strip()),
+        n_gaussians=args.gaussians,
+        width=args.width, height=args.height,
+        backend=args.backend,
+        tiles=ints(args.tiles),
+        factors=ints(args.factors),
+        capacities=ints(args.capacities),
+        warmup=args.warmup, reps=args.reps,
+        out_path=args.out,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,10 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV lines (plus a JSON dump per benchmark
 under results/bench/). Figures covered:
-  Table I  -> bench_sharing        Fig 11 -> bench_groupsize
-  Fig 3/5/7-> bench_tilesize       Fig 12 -> bench_boundaries
-  Fig 13   -> bench_stages         Fig 14/15 -> bench_accel
+  Table I     -> bench_sharing     Fig 12 -> bench_boundaries
+  Fig 3/5/7/11-> bench_autotune    Fig 13 -> bench_stages
+  (the tile/group sweep)           Fig 14/15 -> bench_accel
 plus the wall-time microbenchmark of the JAX renderer itself.
+bench_autotune additionally refreshes ``BENCH_autotune_<host>.json`` at the
+repo root — the committed perf trajectory (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -18,21 +20,19 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_accel,
+        bench_autotune,
         bench_boundaries,
-        bench_groupsize,
         bench_render_walltime,
         bench_scene_scale,
         bench_serving,
         bench_sharing,
         bench_stages,
-        bench_tilesize,
     )
 
     os.makedirs("results/bench", exist_ok=True)
     suites = [
         ("table1_sharing", bench_sharing.run),
-        ("fig357_tilesize", bench_tilesize.run),
-        ("fig11_groupsize", bench_groupsize.run),
+        ("autotune_sweep", bench_autotune.run),
         ("fig12_boundaries", bench_boundaries.run),
         ("fig13_stages", bench_stages.run),
         ("fig1415_accel", bench_accel.run),

@@ -3,6 +3,10 @@
 #
 #   scripts/check.sh          # fast lane, then the slow remainder = full tier-1
 #   scripts/check.sh --fast   # fast lane only (-m "not slow", target < 5 min)
+#   scripts/check.sh --accel  # ONLY the compiled-Pallas lane (-m accel):
+#                             # REPRO_PALLAS_INTERPRET=0 parity on real
+#                             # TPU/GPU hardware (tests skip on CPU) —
+#                             # DESIGN.md §13
 #
 # The fast lane is the quick signal: golden-image checksums (both backends),
 # every non-slow parity/unit suite, with per-test timings reported so creep
@@ -12,6 +16,14 @@
 # anything twice.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--accel" ]]; then
+    echo "== compiled-Pallas lane (-m accel, REPRO_PALLAS_INTERPRET=0) =="
+    REPRO_PALLAS_INTERPRET=0 python -m pytest -x -q -m "accel" \
+        --durations=15 -rs
+    echo "check.sh --accel: OK"
+    exit 0
+fi
 
 echo "== tier-1 tests: fast lane (-m 'not slow') =="
 python -m pytest -x -q -m "not slow" --durations=15
@@ -56,5 +68,15 @@ python -m repro.launch.render_serve --backend reference --devices 2 \
     --scene-shards 2 --parity-check --device-budget-mb 0.04 \
     --requests 6 --rate 200 --gaussians 500 --scenes train \
     --resolutions 96x96 --max-batch 2 --max-wait 0.05 --no-realtime
+
+# Autotune smoke (DESIGN.md §13): a 2x2 (group x capacity) grid at the
+# default tile on a tiny scene through the full sweep -> BENCH emission
+# path. Validates the schema-versioned document AND asserts the tuned
+# config renders BITWISE-identical to the default config (group/capacity
+# are the lossless axes; the smoke pins the tile so the guarantee is exact).
+# Exits non-zero on any failure; writes under results/ so the committed
+# BENCH_autotune_<host>.json trajectory is never clobbered by CI.
+echo "== autotune smoke: 2x2 sweep, schema + bitwise tuned-vs-default =="
+python benchmarks/bench_autotune.py --smoke
 
 echo "check.sh: OK"

@@ -1,0 +1,47 @@
+"""Autotuned tile-grouping (DESIGN.md §13).
+
+Sweeps the paper's core trade-off — ``tile x group x tile_capacity`` — for a
+committed scene: a cost-model-guided pruning phase over cheap stats-only
+frontend passes, then real walltime on the survivors through the exact
+jit'd engine-handle path. Winners are cached per (scene geometry,
+resolution, backend, mesh) signature in the render-cache registry and
+persisted to disk; ``engine.open(..., tile_params='auto')`` consults the
+cache and commits the tuned config.
+"""
+from repro.autotune.cache import (
+    autotune_signature,
+    cache_path,
+    evict_autotune_entries,
+)
+from repro.autotune.search import (
+    DEFAULT_CAPACITIES,
+    DEFAULT_GROUP_FACTORS,
+    DEFAULT_TILES,
+    AutotuneResult,
+    Candidate,
+    autotune,
+    candidate_grid,
+    config_for,
+    cost_phase,
+    measure_phase,
+    stats_pass,
+    sweep,
+)
+
+__all__ = [
+    "AutotuneResult",
+    "Candidate",
+    "DEFAULT_CAPACITIES",
+    "DEFAULT_GROUP_FACTORS",
+    "DEFAULT_TILES",
+    "autotune",
+    "autotune_signature",
+    "cache_path",
+    "candidate_grid",
+    "config_for",
+    "cost_phase",
+    "evict_autotune_entries",
+    "measure_phase",
+    "stats_pass",
+    "sweep",
+]

@@ -1,0 +1,317 @@
+"""Cost-model-guided (tile x group x tile_capacity) search (DESIGN.md §13).
+
+GS-TG's contribution is a trade-off knob — group small tiles during sorting,
+rasterize the original small tiles through bitmasks — and the optimal
+setting shifts with scene scale and resolution (FlashGS, PAPERS.md). This
+module picks it automatically, in two phases:
+
+  phase 1 (``cost_phase``)    — for every candidate, ONE cheap stats-only
+      frontend pass (``core.pipeline.frontend_stats``: project/identify/bin
+      + bitmask/compact, no rasterization) feeds
+      ``core.cost_model.estimate``; candidates whose tables overflow are
+      INFEASIBLE (overflow breaks the losslessness guarantee) and the rest
+      are ranked by modeled total seconds.
+  phase 2 (``measure_phase``) — the top-k survivors are measured for real
+      walltime through the exact jit'd engine-handle path
+      (``engine.open`` -> ``Renderer.render``), warm-up excluded,
+      median-of-n. The winner is the measured minimum.
+
+Losslessness: the group and tile_capacity axes are BITWISE-lossless
+(identical per-tile entry tables whenever nothing overflows — DESIGN.md §7;
+infeasible candidates are discarded for exactly that reason). The tile axis
+changes the rasterization partition, which reorders interleaved zero-alpha
+blends — images then agree to fp reassociation (~1e-7), not bitwise.
+``autotune(verify=True)`` asserts the applicable guarantee against the base
+config after every fresh search; selecting params via ``tile_params='auto'``
+is ALWAYS bitwise-identical to committing the same params fixed (the handle
+compiles the identical program — tests/test_autotune.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.autotune.cache import autotune_signature, lookup, store
+from repro.core.cost_model import GSTG_ASIC, HardwareConfig, estimate
+from repro.core.pipeline import RenderConfig, frontend_stats
+
+# The default sweep: 3 tiles x 3 group factors = 9 (tile, group) points
+# (the acceptance floor of the BENCH trajectory), each at two capacities.
+DEFAULT_TILES: Tuple[int, ...] = (8, 16, 32)
+DEFAULT_GROUP_FACTORS: Tuple[int, ...] = (2, 4, 8)
+DEFAULT_CAPACITIES: Tuple[int, ...] = (256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the paper's trade-off grid."""
+
+    tile: int
+    group: int
+    tile_capacity: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    """The winner plus the full search trajectory (what the BENCH persists).
+
+    ``trajectory`` holds one dict per swept candidate: the knobs, the
+    feasibility verdict, the phase-1 cost-model estimate (``est``,
+    ``StageCosts.as_dict()``) and — for measured candidates — the phase-2
+    ``measured_ms`` median. ``source`` is ``"search"`` for a fresh sweep or
+    ``"cache"``/``"disk"`` when the signature hit the autotune cache.
+    """
+
+    tile: int
+    group: int
+    tile_capacity: int
+    measured_ms: Optional[float]
+    source: str
+    signature: tuple
+    trajectory: list
+
+    @property
+    def candidate(self) -> Candidate:
+        return Candidate(self.tile, self.group, self.tile_capacity)
+
+
+def candidate_grid(
+    tiles: Sequence[int] = DEFAULT_TILES,
+    group_factors: Sequence[int] = DEFAULT_GROUP_FACTORS,
+    capacities: Sequence[int] = DEFAULT_CAPACITIES,
+) -> list:
+    """The sweep grid: group = tile x factor keeps every candidate a legal
+    GridSpec (group must be a tile multiple)."""
+    out = []
+    for t in tiles:
+        for f in group_factors:
+            for c in capacities:
+                out.append(Candidate(tile=int(t), group=int(t * f),
+                                     tile_capacity=int(c)))
+    return out
+
+
+def config_for(base: RenderConfig, cand: Candidate) -> RenderConfig:
+    """The base config with one candidate's knobs committed.
+
+    ``group_capacity`` rides along: a group table can never be smaller than
+    its member tiles' capacity (entries are compacted INTO tiles from it),
+    so it is floored at both the base value and the candidate tile
+    capacity. Everything else — mode, backend, boundaries, sharding — is
+    part of the autotune signature, not the sweep.
+    """
+    return dataclasses.replace(
+        base,
+        tile=cand.tile,
+        group=cand.group,
+        tile_capacity=cand.tile_capacity,
+        group_capacity=max(base.group_capacity, cand.tile_capacity),
+    )
+
+
+def stats_pass(scene, cam, cfg: RenderConfig):
+    """One jit'd stats-only frontend pass -> host RenderStats (phase 1)."""
+    out = jax.jit(lambda s: frontend_stats(s, cam, cfg))(scene)
+    return jax.tree.map(np.asarray, out)
+
+
+def cost_phase(
+    scene,
+    cam,
+    base_cfg: RenderConfig,
+    candidates: Sequence[Candidate],
+    hw: HardwareConfig = GSTG_ASIC,
+) -> list:
+    """Rank candidates by the cost model; flag overflow as infeasible.
+
+    Returns one trajectory entry per candidate (Candidate knobs + ``est`` +
+    ``feasible`` + the raw counters the figures derive from), ordered as
+    given — ranking happens on the ``est_total_s`` field.
+    """
+    execution = "asic" if base_cfg.mode == "gstg" else "gpu"
+    entries = []
+    for cand in candidates:
+        cfg = config_for(base_cfg, cand)
+        s = stats_pass(scene, cam, cfg)
+        est = estimate(
+            s, hw,
+            boundary_group=cfg.boundary_group,
+            boundary_tile=cfg.boundary_tile,
+            mode=cfg.mode,
+            execution=execution,
+        )
+        overflow = int(s.overflow) + int(s.span_overflow)
+        entries.append({
+            **cand.as_dict(),
+            "feasible": overflow == 0,
+            "overflow": overflow,
+            "est": est.as_dict(),
+            "est_total_s": est.total_s,
+            "n_visible": int(s.n_visible),
+            "n_pairs_sort": float(s.n_pairs_sort),
+            "tile_entries": float(s.tile_entries),
+            "measured_ms": None,
+        })
+    return entries
+
+
+def measure_phase(
+    scene,
+    cam,
+    base_cfg: RenderConfig,
+    candidates: Sequence[Candidate],
+    mesh=None,
+    warmup: int = 1,
+    reps: int = 3,
+) -> dict:
+    """Median real walltime (ms) per candidate through the EXACT production
+    path: a committed engine handle's jit'd ``render`` (warm-up renders
+    excluded, so compile time never pollutes the median)."""
+    from repro import engine
+
+    out = {}
+    for cand in candidates:
+        cfg = config_for(base_cfg, cand)
+        with engine.open(scene, cfg, mesh=mesh) as r:
+            for _ in range(max(warmup, 1)):
+                jax.block_until_ready(r.render(cam).image)
+            times = []
+            for _ in range(max(reps, 1)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(r.render(cam).image)
+                times.append((time.perf_counter() - t0) * 1e3)
+            out[cand] = statistics.median(times)
+    return out
+
+
+def autotune(
+    scene,
+    cam,
+    base_cfg: RenderConfig,
+    *,
+    mesh=None,
+    tiles: Sequence[int] = DEFAULT_TILES,
+    group_factors: Sequence[int] = DEFAULT_GROUP_FACTORS,
+    capacities: Sequence[int] = DEFAULT_CAPACITIES,
+    top_k: Optional[int] = 3,
+    warmup: int = 1,
+    reps: int = 3,
+    hw: HardwareConfig = GSTG_ASIC,
+    use_cache: bool = True,
+    persist: bool = True,
+    verify: bool = False,
+) -> AutotuneResult:
+    """The full two-phase search for one (scene, camera, config) commit.
+
+    ``top_k=None`` measures EVERY feasible candidate (the benchmark sweep);
+    otherwise only the k best by modeled cost are measured. With
+    ``use_cache`` the signature is consulted first (memory, then the
+    persisted file) and a fresh result is stored back (``persist`` controls
+    the disk write). ``verify`` renders the winner and the base config once
+    and asserts the losslessness guarantee (bitwise when the tile is
+    unchanged, allclose across tiles — module docstring).
+    """
+    sig = autotune_signature(scene, cam.width, cam.height, base_cfg, mesh)
+    if use_cache:
+        hit = lookup(sig, scene=scene)
+        if hit is not None:
+            return AutotuneResult(
+                tile=int(hit["tile"]),
+                group=int(hit["group"]),
+                tile_capacity=int(hit["tile_capacity"]),
+                measured_ms=hit.get("measured_ms"),
+                source=hit.get("source", "cache"),
+                signature=sig,
+                trajectory=[],
+            )
+
+    entries = cost_phase(
+        scene, cam, base_cfg,
+        candidate_grid(tiles, group_factors, capacities), hw,
+    )
+    feasible = [e for e in entries if e["feasible"]]
+    if not feasible:
+        raise ValueError(
+            "no feasible autotune candidate (every swept point overflowed); "
+            "raise the capacity axis or group_capacity"
+        )
+    ranked = sorted(feasible, key=lambda e: e["est_total_s"])
+    survivors = ranked if top_k is None else ranked[: max(top_k, 1)]
+
+    measured = measure_phase(
+        scene, cam, base_cfg,
+        [Candidate(e["tile"], e["group"], e["tile_capacity"])
+         for e in survivors],
+        mesh=mesh, warmup=warmup, reps=reps,
+    )
+    for e in survivors:
+        e["measured_ms"] = measured[
+            Candidate(e["tile"], e["group"], e["tile_capacity"])
+        ]
+    win = min(survivors, key=lambda e: e["measured_ms"])
+    result = AutotuneResult(
+        tile=win["tile"],
+        group=win["group"],
+        tile_capacity=win["tile_capacity"],
+        measured_ms=win["measured_ms"],
+        source="search",
+        signature=sig,
+        trajectory=entries,
+    )
+    if verify:
+        _verify_lossless(scene, cam, base_cfg, result.candidate, mesh)
+    if use_cache:
+        store(
+            sig,
+            {
+                "tile": result.tile,
+                "group": result.group,
+                "tile_capacity": result.tile_capacity,
+                "measured_ms": result.measured_ms,
+            },
+            scene=scene,
+            persist=persist,
+        )
+    return result
+
+
+def sweep(scene, cam, base_cfg: RenderConfig, **kw) -> AutotuneResult:
+    """Measure EVERY feasible grid point (the BENCH trajectory mode): the
+    selected config's measured walltime is <= every other swept point by
+    construction. Never consults or writes the cache — a benchmark must
+    re-measure."""
+    kw.setdefault("top_k", None)
+    return autotune(scene, cam, base_cfg, use_cache=False, persist=False, **kw)
+
+
+def _verify_lossless(scene, cam, base_cfg, cand: Candidate, mesh) -> None:
+    """Assert the knobs' losslessness for this scene: winner vs base config
+    through the same handle path — bitwise when the tile is unchanged
+    (group/capacity reorder nothing), allclose (fp reassociation of
+    zero-alpha interleaving, DESIGN.md §7) across tiles."""
+    from repro import engine
+
+    tuned = config_for(base_cfg, cand)
+    with engine.open(scene, base_cfg, mesh=mesh) as rb, \
+            engine.open(scene, tuned, mesh=mesh) as rt:
+        a = np.asarray(rb.render(cam).image)
+        b = np.asarray(rt.render(cam).image)
+    if cand.tile == base_cfg.tile:
+        if not (a == b).all():
+            raise AssertionError(
+                f"autotuned {cand} is not bitwise-identical to the base "
+                f"config (tile unchanged — group/capacity must be lossless)"
+            )
+    elif not np.allclose(a, b, atol=1e-5, rtol=1e-5):
+        raise AssertionError(
+            f"autotuned {cand} diverges from the base config beyond fp "
+            f"reassociation tolerance"
+        )

@@ -6,6 +6,7 @@ from repro.core.pipeline import (
     RenderConfig,
     RenderResult,
     batch_signature,
+    frontend_stats,
     register_render_cache,
     render,
     render_batch,
@@ -29,6 +30,7 @@ __all__ = [
     "RenderConfig",
     "RenderResult",
     "batch_signature",
+    "frontend_stats",
     "register_render_cache",
     "render",
     "render_batch",

@@ -77,6 +77,19 @@ class StageCosts:
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
 
+    @classmethod
+    def from_dict(cls, d: Dict[str, float]) -> "StageCosts":
+        """Inverse of :meth:`as_dict` — the (de)serialization the autotune
+        cache and the BENCH_autotune_*.json trajectory files rely on.
+        Rejects unknown/missing keys so a schema drift fails loudly instead
+        of silently zero-filling a stage."""
+        names = [f.name for f in dataclasses.fields(cls)]
+        if set(d) != set(names):
+            raise ValueError(
+                f"StageCosts dict keys {sorted(d)} != fields {sorted(names)}"
+            )
+        return cls(**{k: float(d[k]) for k in names})
+
 
 def _f(x) -> float:
     return float(np.asarray(x))

@@ -388,6 +388,81 @@ def _render_gstg(backend: Backend, scene, cam, cfg, background) -> RenderResult:
     return RenderResult(image=rast.image, stats=stats)
 
 
+def frontend_stats(
+    scene: SceneLike, cam: Camera, cfg: RenderConfig
+) -> RenderStats:
+    """Counters WITHOUT rasterization: the autotune phase-1 probe.
+
+    Runs stages 1-5 (project / identify / bin, plus bitmask + compact for
+    gstg) and returns a :class:`RenderStats` whose frontend counters are
+    exactly what ``render()`` would report for the same config. The raster
+    counters that would need the (expensive) stage 6 are replaced by the
+    cost model's worst-case alpha estimate — ``tile_entries`` x pixels per
+    bin, i.e. every surviving entry alpha-tested against every pixel of its
+    bin, which is the no-early-exit upper bound and is MONOTONE across
+    candidate configs (the property the phase-1 pruning needs;
+    autotune/search.py). ``blend_ops`` is reported as 0 (the cost model
+    never reads it). Traceable: jit it per candidate config.
+    """
+    backend = get_backend(cfg.backend)
+    scene = _scene_for_render(scene, cfg)
+    grid = _grid(cam, cfg)
+    gather = resolve_feature_gather(cfg)
+
+    if cfg.mode == "gstg":
+        proj, gtable, (n_tests, n_pairs, n_span) = _frontend(
+            backend, scene, cam, grid, "group", cfg.boundary_group,
+            grid.num_groups, cfg.group_capacity, gather,
+        )
+        masks = backend.bitmasks(
+            proj, gtable, grid, cfg.boundary_tile, chunk=cfg.chunk
+        )
+        compacted = backend.compact(gtable, masks, grid, cfg.tile_capacity)
+        pixels_per_bin = cfg.tile * cfg.tile
+        return RenderStats(
+            n_visible=proj_valid_count(proj),
+            n_candidate_tests=n_tests,
+            n_pairs_sort=n_pairs,
+            sort_ops=sort_op_count(gtable.lengths),
+            n_bit_tests=masks.n_bit_tests,
+            fifo_ops=wide_count_sum(gtable.lengths) * grid.tiles_per_group,
+            alpha_ops=compacted.tile_entries * pixels_per_bin,
+            blend_ops=jnp.zeros((), jnp.int32),
+            tile_entries=compacted.tile_entries,
+            overflow=gtable.overflow + compacted.overflow,
+            span_overflow=n_span,
+        )
+
+    if cfg.mode == "tile_baseline":
+        level, bins_xy, capacity, bin_px = (
+            "tile", grid.num_tiles, cfg.tile_capacity, cfg.tile
+        )
+    elif cfg.mode == "group_baseline":
+        level, bins_xy, capacity, bin_px = (
+            "group", grid.num_groups, cfg.group_capacity, cfg.group
+        )
+    else:
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+    proj, table, (n_tests, n_pairs, n_span) = _frontend(
+        backend, scene, cam, grid, level, cfg.boundary_tile, bins_xy,
+        capacity, gather,
+    )
+    tile_entries = jnp.sum(table.lengths)
+    return RenderStats(
+        n_visible=proj_valid_count(proj),
+        n_candidate_tests=n_tests,
+        n_pairs_sort=n_pairs,
+        sort_ops=sort_op_count(table.lengths),
+        n_bit_tests=jnp.zeros((), jnp.int32),
+        fifo_ops=jnp.zeros((), wide_count_dtype()),
+        alpha_ops=tile_entries * (bin_px * bin_px),
+        blend_ops=jnp.zeros((), jnp.int32),
+        tile_entries=tile_entries,
+        overflow=table.overflow,
+        span_overflow=n_span,
+    )
+
+
 def _has_tracers(tree) -> bool:
     """True when any leaf is a jax Tracer — the deprecation shims then stay
     on the eager ``render`` path (a handle cannot commit a traced scene)."""

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import sys
 import threading
 import time
 import weakref
@@ -129,10 +130,35 @@ class Renderer:
         max_batch: int = 8,
         max_wait: float = 0.05,
         queue_depth: int = 64,
+        tile_params: Union[None, str, tuple] = None,
+        autotune_opts: Optional[dict] = None,
         clock=time.monotonic,
     ):
         if devices is not None and mesh is not None:
             raise ValueError("pass devices or mesh, not both")
+        # Tile-grouping params (DESIGN.md §13): an explicit (tile, group,
+        # tile_capacity) triple commits immediately; 'auto' defers to the
+        # autotune cache/search at FIRST render — the search needs a camera
+        # resolution, which the handle only learns then. The committed cfg
+        # is frozen from that point on; images are bitwise-identical to a
+        # fixed-config open of the same params (same compiled program).
+        self._autotune_opts = dict(autotune_opts or {})
+        self._tune_pending = False
+        self._tune_lock = threading.Lock()
+        if tile_params == "auto":
+            self._tune_pending = True
+        elif tile_params is not None:
+            try:
+                t, g, c = (int(x) for x in tile_params)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"tile_params must be None, 'auto', or a (tile, group, "
+                    f"tile_capacity) triple; got {tile_params!r}"
+                ) from None
+            cfg = dataclasses.replace(
+                cfg, tile=t, group=g, tile_capacity=c,
+                group_capacity=max(cfg.group_capacity, c),
+            )
         shards = self._resolve_shards(scene, cfg, scene_shards)
         self._source = scene if isinstance(scene, GaussianScene) else None
 
@@ -303,10 +329,19 @@ class Renderer:
     def closed(self) -> bool:
         return self._closed
 
+    @property
+    def tile_params(self) -> Union[str, tuple]:
+        """The committed (tile, group, tile_capacity) — or 'auto (pending)'
+        while an 'auto' open is still waiting for its first camera."""
+        if self._tune_pending:
+            return "auto (pending)"
+        return (self._cfg.tile, self._cfg.group, self._cfg.tile_capacity)
+
     def stats(self) -> dict:
         """Committed layout + per-handle cache and futures counters."""
         return {
             "config": self._cfg,
+            "tile_params": self.tile_params,
             "mesh": dict(self._mesh.shape),
             "scene_shards": self._cfg.scene_shards,
             "physical_shards": self._phys_shards,
@@ -416,6 +451,37 @@ class Renderer:
         if self._closed:
             raise RuntimeError("Renderer is closed")
 
+    # -- deferred tile-param autotune (DESIGN.md §13) -------------------------
+
+    def _resolve_tile_params(self, cam) -> None:
+        """Resolve a pending ``tile_params='auto'`` against this camera's
+        resolution: consult the autotune cache (memory, then disk) and run
+        the two-phase search on a miss, then commit the winner into the
+        handle's config. Runs at most once per handle — before the first
+        compiled renderer exists, so every subsequent geometry reuses the
+        tuned knobs. Thread-safe (the submit() worker may race a direct
+        render call here)."""
+        if not self._tune_pending:
+            return
+        with self._tune_lock:
+            if not self._tune_pending:
+                return
+            from repro.autotune import autotune as _autotune
+
+            scene = self._source if self._source is not None else self._scene
+            res = _autotune(
+                scene, cam, self._cfg, mesh=self._mesh, **self._autotune_opts
+            )
+            self._cfg = dataclasses.replace(
+                self._cfg,
+                tile=res.tile,
+                group=res.group,
+                tile_capacity=res.tile_capacity,
+                group_capacity=max(self._cfg.group_capacity,
+                                   res.tile_capacity),
+            )
+            self._tune_pending = False
+
     # -- synchronous entry points -------------------------------------------
 
     def render(
@@ -423,6 +489,7 @@ class Renderer:
     ) -> RenderResult:
         """Render one camera against the committed scene (jit-cached)."""
         self._check_open()
+        self._resolve_tile_params(cam)
         fn = self._fn("single", cam)
         return fn(
             self._scene,
@@ -449,6 +516,16 @@ class Renderer:
             cams if isinstance(cams, CameraBatch)
             else CameraBatch.from_cameras(cams)
         )
+        if self._tune_pending:
+            # The search probes through lane 0 — any lane would do, the
+            # signature only reads the shared geometry.
+            self._resolve_tile_params(Camera(
+                R=np.asarray(batch.R[0]), t=np.asarray(batch.t[0]),
+                fx=float(batch.fx[0]), fy=float(batch.fy[0]),
+                cx=float(batch.cx[0]), cy=float(batch.cy[0]),
+                width=batch.width, height=batch.height,
+                znear=batch.znear, zfar=batch.zfar,
+            ))
         orig = len(batch)
         lanes = data_extent(self._mesh)
         padded = pad_camera_batch(
@@ -592,6 +669,14 @@ class Renderer:
             # scene at several shard counts used to leave every layout
             # resident until the scene was garbage collected.
             evict_scene_layouts(self._source)
+            # Same fix for the autotune result cache: drop this scene's
+            # in-memory entries (the persisted file keeps them, so a
+            # re-open still skips the search). Lazy import — only a process
+            # that autotuned has the cache registered/populated.
+            if "repro.autotune.cache" in sys.modules:
+                sys.modules["repro.autotune.cache"].evict_autotune_entries(
+                    self._source
+                )
         self._scene = None
         self._source = None
 
@@ -622,6 +707,8 @@ def open(  # noqa: A001 — the module-level session verb is the API
     max_batch: int = 8,
     max_wait: float = 0.05,
     queue_depth: int = 64,
+    tile_params: Union[None, str, tuple] = None,
+    autotune_opts: Optional[dict] = None,
 ) -> Renderer:
     """Commit ``(scene, cfg)`` and return the :class:`Renderer` handle.
 
@@ -643,6 +730,15 @@ def open(  # noqa: A001 — the module-level session verb is the API
       otherwise.
     * ``max_batch``/``max_wait``/``queue_depth`` — the ``submit()`` futures
       front-end's batching knobs (same dials as the serving tier).
+    * ``tile_params`` — ``None`` keeps the config's (tile, group,
+      tile_capacity); an explicit triple overrides them at commit;
+      ``'auto'`` consults the autotune cache (memory, then the persisted
+      file) at FIRST render and runs the cost-model-guided search on a miss
+      (DESIGN.md §13), committing the winner — images are bitwise-identical
+      to a fixed-config open of the same resolved params.
+      ``autotune_opts`` forwards search knobs (tiles/group_factors/
+      capacities/top_k/warmup/reps/verify/persist) to
+      :func:`repro.autotune.autotune`.
 
     Use as a context manager (``with engine.open(...) as r:``) or call
     ``r.close()`` to release the committed state.
@@ -652,6 +748,7 @@ def open(  # noqa: A001 — the module-level session verb is the API
         devices=devices, mesh=mesh, scene_shards=scene_shards,
         device_budget_mb=device_budget_mb,
         max_batch=max_batch, max_wait=max_wait, queue_depth=queue_depth,
+        tile_params=tile_params, autotune_opts=autotune_opts,
     )
 
 

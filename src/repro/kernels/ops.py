@@ -10,12 +10,33 @@ Identification and group binning stay on the XLA sort substrate (DESIGN.md
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
+# Pallas lowers natively on these platforms (Mosaic on TPU, Triton on GPU);
+# everywhere else the kernels run through the interpreter.
+_ACCEL_PLATFORMS = ("tpu", "gpu", "cuda", "rocm")
+
 
 def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Should Pallas kernels run in interpret mode?
+
+    Resolution order (DESIGN.md §13, the real-hardware lane):
+      1. ``REPRO_PALLAS_INTERPRET`` env var — ``0/false/off`` forces
+         compiled kernels, anything else truthy forces the interpreter
+         (useful to keep interpret mode ON for debugging on a TPU host).
+      2. Platform auto-detect: compile on TPU/GPU, interpret elsewhere
+         (CPU has no Mosaic/Triton lowering).
+
+    Per-call ``interpret=`` arguments on the kernel wrappers and
+    ``PallasBackend(interpret=...)`` still override both.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None and env.strip() != "":
+        return env.strip().lower() not in ("0", "false", "off", "no")
+    return jax.default_backend() not in _ACCEL_PLATFORMS
 
 
 def group_origins(grid) -> jnp.ndarray:

@@ -49,6 +49,12 @@ def main():
                     help="override camera height (smoke renders)")
     ap.add_argument("--capacity", type=int, default=1024,
                     help="group/tile table capacity")
+    ap.add_argument("--autotune", action="store_true",
+                    help="ignore --tile/--group/--capacity and open the "
+                         "handle with tile_params='auto' (DESIGN.md §13): "
+                         "the first render pays the tuning sweep — or hits "
+                         "the persisted autotune cache — and commits the "
+                         "tuned knobs")
     ap.add_argument("--stats", action="store_true",
                     help="print executable-cache statistics after the render")
     args = ap.parse_args()
@@ -69,14 +75,18 @@ def main():
         backend=backend,
         scene_shards=args.scene_shards,
     )
-    with engine.open(scene, cfg) as renderer:
+    with engine.open(
+        scene, cfg, tile_params="auto" if args.autotune else None
+    ) as renderer:
         t0 = time.time()
         out = renderer.render(cam)   # ONE render: image + stats, any backend
         img, stats = np.asarray(out.image), out.stats
         dt = time.time() - t0
 
         print(f"scene={args.scene} mode={args.mode} backend={backend} "
-              f"{img.shape} in {dt:.2f}s")
+              f"{img.shape} in {dt:.2f}s"
+              + (f" tile_params={renderer.tile_params}"
+                 if args.autotune else ""))
         print(f"  visible gaussians : {int(stats.n_visible)}")
         print(f"  sort keys         : {int(stats.n_pairs_sort)}")
         print(f"  alpha ops         : {int(stats.alpha_ops)}")

@@ -68,6 +68,12 @@ def parse_args(argv=None):
     ap.add_argument("--mode", default="gstg",
                     choices=["gstg", "tile_baseline", "group_baseline"])
     ap.add_argument("--capacity", type=int, default=512)
+    ap.add_argument("--autotune", action="store_true",
+                    help="open every handle with tile_params='auto' "
+                         "(DESIGN.md §13): the first dispatch per (scene, "
+                         "resolution) pays a tuning sweep — or hits the "
+                         "persisted autotune cache — then serves the tuned "
+                         "tile/group/capacity")
     ap.add_argument("--no-realtime", action="store_true",
                     help="replay arrivals as fast as possible (throughput mode)")
     ap.add_argument("--trace-json", default=None,
@@ -155,6 +161,12 @@ def main(argv=None):
         queue_depth=args.queue_depth,
         scene_shards=shards,
         device_budget_mb=args.device_budget_mb,
+        autotune=args.autotune,
+        # Serving tunes on the critical path of the first dispatch, so keep
+        # the measured phase short; the cost-model phase still prunes the
+        # full default grid.
+        autotune_opts={"top_k": 2, "warmup": 1, "reps": 2}
+        if args.autotune else None,
     )
 
     # Pre-commit every scene through the engine handle (DESIGN.md §11): the
@@ -186,6 +198,11 @@ def main(argv=None):
           f"scene_shards={shards})")
     results = server.run(load, realtime=not args.no_realtime)
     print(server.stats.format())
+    if args.autotune:
+        for (sid, _), handle in sorted(
+            server._renderers.items(), key=lambda kv: kv[0][0]
+        ):
+            print(f"autotuned {sid!r}: tile_params={handle.tile_params}")
 
     parity_failures = 0
     if args.parity_check:

@@ -62,8 +62,12 @@ class RenderServer:
     same scene never mix in a batch; a request's shard count must be 1 or
     match the server's mesh. ``device_budget_mb`` is forwarded to every
     handle commit (``engine.open``): a scene whose per-device parameter
-    bytes exceed it refuses to commit. Close the server (or use it as a
-    context manager) to close its handles.
+    bytes exceed it refuses to commit. ``autotune=True`` opens every handle
+    with ``tile_params='auto'`` (DESIGN.md §13): the first dispatch of each
+    (scene, config) pays a tuning sweep — or hits the persisted autotune
+    cache — and serves the tuned tiling from then on (``autotune_opts`` is
+    forwarded to ``repro.autotune.autotune``). Close the server (or use it
+    as a context manager) to close its handles.
     """
 
     def __init__(
@@ -76,12 +80,16 @@ class RenderServer:
         queue_depth: int = 64,
         scene_shards: int = 1,
         device_budget_mb: Optional[float] = None,
+        autotune: bool = False,
+        autotune_opts: Optional[dict] = None,
         clock=time.monotonic,
     ):
         self.scenes = dict(scenes)
         self._mesh = mesh
         self.scene_shards = scene_shards
         self.device_budget_mb = device_budget_mb
+        self.autotune = autotune
+        self.autotune_opts = autotune_opts
         self._clock = clock
         self.queue = RequestQueue(queue_depth, clock=clock)
         self.scheduler = BucketingScheduler(max_batch, max_wait, clock=clock)
@@ -158,6 +166,8 @@ class RenderServer:
                 scene, cfg,
                 mesh=self.mesh,
                 device_budget_mb=self.device_budget_mb,
+                tile_params="auto" if self.autotune else None,
+                autotune_opts=self.autotune_opts,
             )
             self._committed.setdefault(
                 (scene_id, handle.scene_shards), handle.committed_scene

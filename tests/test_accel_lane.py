@@ -1,0 +1,107 @@
+"""The real-hardware Pallas lane (DESIGN.md §13).
+
+Two halves:
+
+  * unit tests for ``kernels.ops.default_interpret`` — the env-var override
+    and platform auto-detect that decide whether Pallas kernels interpret
+    (CPU, this container) or compile (Mosaic on TPU, Triton on GPU);
+  * ``@pytest.mark.accel`` parity tests that only run when jax actually has
+    an accelerator backend: the COMPILED pallas lane against the reference
+    backend, through the same engine-handle path the interpret-mode parity
+    suite uses. On CPU they skip — ``scripts/check.sh --accel`` is the hook
+    that selects them the day real hardware appears.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels.ops import _ACCEL_PLATFORMS, default_interpret
+
+ON_ACCEL = jax.default_backend() in _ACCEL_PLATFORMS
+
+
+# -- default_interpret resolution --------------------------------------------
+
+
+@pytest.mark.parametrize("val", ["0", "false", "OFF", " no "])
+def test_env_forces_compiled(monkeypatch, val):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", val)
+    assert default_interpret() is False
+
+
+@pytest.mark.parametrize("val", ["1", "true", "on", "yes"])
+def test_env_forces_interpreter(monkeypatch, val):
+    # explicit ON beats platform detect — debugging on a TPU host
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", val)
+    assert default_interpret() is True
+
+
+@pytest.mark.parametrize("val", [None, "", "  "])
+def test_unset_or_blank_falls_back_to_platform(monkeypatch, val):
+    if val is None:
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    else:
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", val)
+    assert default_interpret() is (jax.default_backend()
+                                   not in _ACCEL_PLATFORMS)
+
+
+def test_explicit_arg_still_overrides(monkeypatch, tiny_scene):
+    """Per-call interpret= beats both env and platform (ops docstring)."""
+    from repro.kernels.ops import sort_groups_bitonic
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    import jax.numpy as jnp
+
+    keys = jnp.array([[3.0, 1.0, 2.0, jnp.inf]], jnp.float32)
+    idx = jnp.array([[0, 1, 2, 3]], jnp.int32)
+    # interpret=True must run fine on CPU even with the env forcing compiled
+    k, v = sort_groups_bitonic(keys, idx, interpret=True)
+    assert np.asarray(k)[0, 0] == 1.0
+    assert list(np.asarray(v)[0, :3]) == [1, 2, 0]
+
+
+# -- compiled-lane parity (auto-skipped off-accelerator) ----------------------
+
+
+@pytest.mark.accel
+@pytest.mark.skipif(
+    not ON_ACCEL,
+    reason=f"jax backend {jax.default_backend()!r} has no native Pallas "
+           f"lowering; compiled-lane parity needs TPU/GPU",
+)
+def test_compiled_pallas_matches_reference(monkeypatch, tiny_scene, cam128):
+    """The whole point of the lane: the COMPILED kernels (not the
+    interpreter) must agree with the reference backend on real hardware."""
+    from repro import engine
+    from repro.core.pipeline import RenderConfig
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert default_interpret() is False
+    kw = dict(tile=16, group=64, group_capacity=256, tile_capacity=256,
+              mode="gstg", span=6)
+    with engine.open(tiny_scene, RenderConfig(backend="reference", **kw)) as rr, \
+            engine.open(tiny_scene, RenderConfig(backend="pallas", **kw)) as rp:
+        ref = np.asarray(rr.render(cam128).image)
+        pal = np.asarray(rp.render(cam128).image)
+    # cross-substrate fp tolerance (same bound as the interpret-mode parity
+    # suite); bitwise is not expected across compilers
+    assert np.allclose(ref, pal, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.accel
+@pytest.mark.skipif(
+    not ON_ACCEL,
+    reason="bitonic kernel compiled-lane check needs TPU/GPU",
+)
+def test_compiled_bitonic_sort_matches_xla(monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import sort_groups_bitonic
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    keys = jax.random.uniform(jax.random.key(0), (8, 64))
+    keys = jnp.where(keys > 0.9, jnp.inf, keys)
+    idx = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32), (8, 64))
+    k, _ = sort_groups_bitonic(keys, idx)  # interpret=None -> compiled here
+    assert np.allclose(np.asarray(k), np.sort(np.asarray(keys), axis=-1))

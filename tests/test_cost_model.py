@@ -1,7 +1,10 @@
+import types
+
 import jax
+import pytest
 
 from repro.core import make_camera, random_scene
-from repro.core.cost_model import GSTG_ASIC, estimate
+from repro.core.cost_model import GSTG_ASIC, StageCosts, estimate
 from repro.core.pipeline import RenderConfig, render
 
 
@@ -50,3 +53,65 @@ def test_group_baseline_raster_penalty(small_scene, cam256):
     cs = estimate(small, GSTG_ASIC, mode="tile_baseline")
     assert cb.sort_s < cs.sort_s
     assert cb.raster_s > cs.raster_s
+
+
+# -- estimate() as an autotune pruning oracle (DESIGN.md §13) ----------------
+# The phase-1 search ranks candidates by estimate(...).total_s, so the model
+# must be monotone in the counters the knobs move: sorting work (sort_ops /
+# n_pairs_sort) and bitmask work (n_bit_tests).
+
+
+def _fake_stats(**kw):
+    base = dict(
+        n_visible=1_000,
+        n_candidate_tests=4_000,
+        n_pairs_sort=8_000,
+        sort_ops=6.0e5,
+        n_bit_tests=16_000,
+        fifo_ops=2_000,
+        alpha_ops=5.0e5,
+        tile_entries=3_000,
+    )
+    base.update(kw)
+    return types.SimpleNamespace(**base)
+
+
+def test_estimate_monotone_in_sort_ops():
+    lo = estimate(_fake_stats(), GSTG_ASIC, mode="gstg", execution="gpu")
+    hi = estimate(
+        _fake_stats(sort_ops=6.0e8, n_pairs_sort=8.0e5),
+        GSTG_ASIC, mode="gstg", execution="gpu",
+    )
+    assert hi.sort_s > lo.sort_s
+    assert hi.total_s > lo.total_s
+    assert hi.energy_j > lo.energy_j
+
+
+def test_estimate_monotone_in_bit_tests():
+    lo = estimate(_fake_stats(), GSTG_ASIC, mode="gstg", execution="gpu")
+    hi = estimate(
+        _fake_stats(n_bit_tests=1.6e8),
+        GSTG_ASIC, mode="gstg", execution="gpu",
+    )
+    assert hi.bitmask_s > lo.bitmask_s
+    assert hi.total_s > lo.total_s
+    # the ASIC overlaps BGM with GSM, so bitmask growth must never cost MORE
+    # there than under GPU serialization
+    hi_asic = estimate(
+        _fake_stats(n_bit_tests=1.6e8),
+        GSTG_ASIC, mode="gstg", execution="asic",
+    )
+    assert hi_asic.total_s <= hi.total_s
+
+
+def test_stage_costs_dict_round_trip():
+    c = estimate(_fake_stats(), GSTG_ASIC, mode="gstg", execution="asic")
+    d = c.as_dict()
+    assert StageCosts.from_dict(d) == c
+    # serialization drift fails loudly, never zero-fills
+    with pytest.raises(ValueError):
+        StageCosts.from_dict({**d, "bogus_stage_s": 1.0})
+    short = dict(d)
+    short.pop("sort_s")
+    with pytest.raises(ValueError):
+        StageCosts.from_dict(short)
