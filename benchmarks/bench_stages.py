@@ -1,14 +1,64 @@
 """Fig 13: stage-wise runtime breakdown (train scene): ellipse baseline at
 16/32/64 px tiles vs GS-TG (16+64), on the GPU execution model — showing
 GS-TG's sort time matches the 64px baseline while raster time matches 16px;
-plus the ASIC model where bitmask gen overlaps sorting."""
+plus the ASIC model where bitmask gen overlaps sorting.
+
+Two lanes (DESIGN.md §14):
+
+  * ``run()`` — the original COST-MODEL breakdown (analytic seconds from the
+    accelerator model), still what ``benchmarks/run.py`` drives as
+    ``fig13_stages``;
+  * ``run_measured()`` / the CLI — MEASURED per-stage device milliseconds
+    from the observability layer: ``RenderConfig(timing=True)`` runs every
+    backend stage as its own fenced jit program and the tracer's
+    ``category == "stage"`` spans are aggregated per rep (median across
+    reps).  Emits a schema-versioned ``BENCH_stages_<host>.json`` at the
+    repo root — the committed measured-stage trajectory, sibling to
+    ``BENCH_autotune_<host>.json``.
+
+  PYTHONPATH=src:. python benchmarks/bench_stages.py            # full bench
+  PYTHONPATH=src:. python benchmarks/bench_stages.py --smoke    # CI smoke
+"""
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import platform
+import re
+import statistics
+import time
+from collections import defaultdict
 
 from benchmarks.common import emit, scene_and_camera
 from repro.core.cost_model import GSTG_ASIC, estimate
 from repro.core.pipeline import RenderConfig, render
+
+SCHEMA = "repro.bench_stages/v1"
+
+#: Per-stage spans a gstg-mode timed render must produce (plus the enclosing
+#: ``stage/render``); the measured lane refuses to emit a document missing
+#: any of them — a silent instrumentation regression would otherwise read as
+#: "stage got free".  ``stage/merge`` only exists on the gaussian-sharded
+#: frontend (the per-shard table merge, DESIGN.md §10), so it is required
+#: only of ``*sharded*`` variants.
+GSTG_STAGES = (
+    "stage/project", "stage/identify", "stage/bin",
+    "stage/bitmask", "stage/compact", "stage/rasterize",
+)
+
+
+def _host() -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "-", platform.node() or "unknown")
+
+
+def default_out_path(host: str | None = None) -> str:
+    return f"BENCH_stages_{host or _host()}.json"
+
+
+# ---------------------------------------------------------------------------
+# Cost-model lane (benchmarks/run.py: "fig13_stages")
+# ---------------------------------------------------------------------------
 
 
 def run() -> dict:
@@ -51,7 +101,206 @@ def run() -> dict:
     return out
 
 
-if __name__ == "__main__":
-    import json
+# ---------------------------------------------------------------------------
+# Measured lane (obs layer: fenced per-stage device spans)
+# ---------------------------------------------------------------------------
 
-    print(json.dumps(run(), indent=1))
+
+def measure_stages(scene, cam, cfg: RenderConfig, *, warmup: int = 1,
+                   reps: int = 3) -> dict:
+    """Per-stage device milliseconds for one (scene, camera, config).
+
+    Opens an engine handle with ``timing=True`` (every stage its own fenced
+    jit program — bitwise-identical image, DESIGN.md §14), renders
+    ``warmup`` times to pay the per-stage compiles, then for each of
+    ``reps`` measured renders clears the tracer, renders, and aggregates the
+    ``category == "stage"`` spans by name.  Returns::
+
+        {"stages": {name: {"calls", "median_ms", "reps_ms"}},
+         "render_ms": {...},          # the enclosing stage/render span
+         "stage_sum_median_ms": ...}  # sum of per-stage medians
+    """
+    from repro import engine
+    from repro.obs import get_tracer
+
+    tracer = get_tracer()   # TimedBackend records with force=True: no enable
+    per_stage: dict = defaultdict(lambda: {"calls": 0, "reps_ms": []})
+    with engine.open(scene, dataclasses.replace(cfg, timing=True)) as r:
+        for _ in range(warmup):
+            r.render(cam)
+        for _ in range(reps):
+            tracer.clear()
+            r.render(cam)
+            tot = defaultdict(float)
+            calls = defaultdict(int)
+            for e in tracer.events():
+                if e.category == "stage":
+                    tot[e.name] += e.duration_s
+                    calls[e.name] += 1
+            for name, s in tot.items():
+                per_stage[name]["reps_ms"].append(s * 1e3)
+                per_stage[name]["calls"] = calls[name]
+    stages = {
+        name: {
+            "calls": d["calls"],
+            "median_ms": statistics.median(d["reps_ms"]),
+            "reps_ms": d["reps_ms"],
+        }
+        for name, d in sorted(per_stage.items())
+    }
+    render_span = stages.pop("stage/render", None)
+    return {
+        "stages": stages,
+        "render_ms": render_span,
+        "stage_sum_median_ms": sum(d["median_ms"] for d in stages.values()),
+    }
+
+
+def validate_bench(doc: dict, require_gstg_stages: bool = True) -> list:
+    """Schema check for a BENCH_stages document; returns a list of errors
+    (empty == valid)."""
+    errs = []
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema != {SCHEMA!r}: {doc.get('schema')!r}")
+    for key in ("host", "timestamp", "jax_backend", "backend", "config"):
+        if key not in doc:
+            errs.append(f"missing top-level key {key!r}")
+    variants = doc.get("measured", {})
+    if not variants:
+        errs.append("no measured variants")
+    for vname, v in variants.items():
+        stages = v.get("stages", {})
+        if not stages:
+            errs.append(f"{vname}: no stages")
+        for sname, d in stages.items():
+            if not d.get("reps_ms"):
+                errs.append(f"{vname}/{sname}: empty reps_ms")
+            elif any(ms < 0 for ms in d["reps_ms"]):
+                errs.append(f"{vname}/{sname}: negative duration")
+            if d.get("calls", 0) < 1:
+                errs.append(f"{vname}/{sname}: calls < 1")
+        if require_gstg_stages and vname.startswith("gstg"):
+            need = GSTG_STAGES + (("stage/merge",) if "sharded" in vname
+                                  else ())
+            missing = [s for s in need if s not in stages]
+            if missing:
+                errs.append(f"{vname}: missing stage spans {missing}")
+    return errs
+
+
+def run_measured(
+    scene_name: str = "train",
+    n_gaussians: int | None = 6000,
+    width: int | None = None,
+    height: int | None = None,
+    backend: str = "reference",
+    tile: int = 16,
+    group: int = 64,
+    capacity: int = 1024,
+    warmup: int = 1,
+    reps: int = 3,
+    out_path: str | None = None,
+) -> dict:
+    """Measured per-stage breakdown: gstg vs the 16px tile baseline, same
+    scene/camera.  Writes the BENCH json (default repo root) and returns the
+    doc; raises if the document fails :func:`validate_bench`."""
+    import jax
+
+    scene, cam = scene_and_camera(scene_name, n_gaussians,
+                                  width=width, height=height)
+    base = RenderConfig(
+        mode="gstg", tile=tile, group=group, tile_capacity=capacity,
+        group_capacity=capacity, span=6, backend=backend,
+    )
+    doc = {
+        "schema": SCHEMA,
+        "host": _host(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "jax_backend": jax.default_backend(),
+        "backend": backend,
+        "config": {
+            "scene": scene_name,
+            "n_gaussians": n_gaussians,
+            "width": cam.width, "height": cam.height,
+            "tile": tile, "group": group, "capacity": capacity,
+            "warmup": warmup, "reps": reps,
+        },
+        "measured": {},
+    }
+    for vname, cfg in (
+        ("gstg", base),
+        ("gstg_sharded2", dataclasses.replace(base, scene_shards=2)),
+        ("tile_baseline_16", dataclasses.replace(base, mode="tile_baseline")),
+    ):
+        t0 = time.time()
+        m = measure_stages(scene, cam, cfg, warmup=warmup, reps=reps)
+        doc["measured"][vname] = m
+        top = max(m["stages"].items(), key=lambda kv: kv[1]["median_ms"])
+        emit(
+            f"stages_{vname}",
+            m["stage_sum_median_ms"] * 1e3,
+            f"{len(m['stages'])} stages, top {top[0]}="
+            f"{top[1]['median_ms']:.2f}ms ({time.time() - t0:.0f}s bench)",
+        )
+    errs = validate_bench(doc)
+    if errs:
+        raise AssertionError("BENCH document invalid: " + "; ".join(errs))
+    out = out_path or default_out_path()
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    emit("bench_stages_written", 0.0, out)
+    return doc
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scene", default="train")
+    ap.add_argument("--gaussians", type=int, default=6000)
+    ap.add_argument("--width", type=int, default=None)
+    ap.add_argument("--height", type=int, default=None)
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"])
+    ap.add_argument("--tile", type=int, default=16)
+    ap.add_argument("--group", type=int, default=64)
+    ap.add_argument("--capacity", type=int, default=1024)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=None,
+                    help="output path (default BENCH_stages_<host>.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny scene/resolution, 1 rep, writes "
+                         "results/BENCH_stages_smoke.json")
+    ap.add_argument("--cost-model", action="store_true",
+                    help="run the original fig13 cost-model lane instead")
+    args = ap.parse_args(argv)
+
+    if args.cost_model:
+        print(json.dumps(run(), indent=1))
+        return 0
+
+    if args.smoke:
+        out = args.out or os.path.join("results", "BENCH_stages_smoke.json")
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        doc = run_measured(
+            scene_name=args.scene, n_gaussians=500, width=96, height=96,
+            backend=args.backend, capacity=256,
+            warmup=1, reps=1, out_path=out,
+        )
+        n = len(doc["measured"]["gstg"]["stages"])
+        print(f"bench_stages --smoke: OK ({n} gstg stage spans, schema "
+              f"valid, wrote {out})")
+        return 0
+
+    run_measured(
+        scene_name=args.scene, n_gaussians=args.gaussians,
+        width=args.width, height=args.height, backend=args.backend,
+        tile=args.tile, group=args.group, capacity=args.capacity,
+        warmup=args.warmup, reps=args.reps, out_path=args.out,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -79,4 +79,23 @@ python -m repro.launch.render_serve --backend reference --devices 2 \
 echo "== autotune smoke: 2x2 sweep, schema + bitwise tuned-vs-default =="
 python benchmarks/bench_autotune.py --smoke
 
+# Traced serving smoke (DESIGN.md §14): the same 2-virtual-device serve with
+# REPRO_TRACE=1 (fenced per-stage device spans) writing a Chrome trace +
+# metrics snapshot, then cross-validated — span nesting, >= 7 distinct stage
+# span names, and request/batch counts agreeing across trace, metrics
+# registry, and stats summary. Exits non-zero on any drift.
+echo "== traced smoke serve: chrome trace + metrics registry cross-check =="
+REPRO_TRACE=1 python -m repro.launch.render_serve --backend reference \
+    --devices 2 --requests 6 --rate 200 --gaussians 500 --scenes train \
+    --resolutions 96x96 --max-batch 2 --max-wait 0.05 --no-realtime \
+    --trace-json results/trace_smoke.json \
+    --metrics-json results/metrics_smoke.json
+python scripts/validate_trace.py \
+    results/trace_smoke.json results/metrics_smoke.json
+
+# Measured per-stage bench smoke (DESIGN.md §14): tiny scene through the
+# timing=True engine path -> BENCH_stages schema validation.
+echo "== bench_stages smoke: measured per-stage spans, schema valid =="
+python benchmarks/bench_stages.py --smoke
+
 echo "check.sh: OK"

@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""CI validator for the traced serving smoke (scripts/check.sh).
+
+  PYTHONPATH=src python scripts/validate_trace.py TRACE.json METRICS.json
+
+Cross-checks the three observability surfaces one ``repro.launch
+.render_serve --trace-json --metrics-json`` run emits (DESIGN.md §14):
+
+  * the Chrome trace itself: ``repro.trace/v1`` schema, well-formed events,
+    per-(pid, tid) span nesting (``repro.obs.validate_chrome_trace``);
+  * stage coverage: with REPRO_TRACE=1 the timed renders must record >= 7
+    distinct ``cat == "stage"`` span names (project/identify/bin/bitmask/
+    compact/rasterize + the enclosing render; merge rides along when the
+    scene is gaussian-sharded);
+  * trace <-> metrics <-> summary consistency: completed requests and
+    dispatched batches must agree between the request/serve spans, the
+    ``serving.*`` counters + latency histogram, and the stats summary
+    embedded under the trace's ``"summary"`` key.
+
+Exits non-zero listing every drift — the point is that a broken stamp,
+a lost span, or a double-counted metric fails CI instead of silently
+skewing the next perf investigation.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.obs import validate_chrome_trace
+
+MIN_STAGE_NAMES = 7
+
+
+def validate(trace_doc: dict, metrics_doc: dict) -> list:
+    errs = list(validate_chrome_trace(trace_doc))
+
+    xs = [e for e in trace_doc.get("traceEvents", [])
+          if isinstance(e, dict) and e.get("ph") == "X"]
+    stage_names = {e["name"] for e in xs if e.get("cat") == "stage"}
+    if len(stage_names) < MIN_STAGE_NAMES:
+        errs.append(
+            f"only {len(stage_names)} distinct stage span names "
+            f"{sorted(stage_names)}; need >= {MIN_STAGE_NAMES} "
+            f"(was the run traced with REPRO_TRACE=1?)")
+
+    summary = trace_doc.get("summary")
+    if not isinstance(summary, dict):
+        errs.append("trace is missing the embedded 'summary' object")
+        summary = {}
+
+    if metrics_doc.get("schema") != "repro.metrics/v1":
+        errs.append(f"metrics schema != 'repro.metrics/v1': "
+                    f"{metrics_doc.get('schema')!r}")
+    counters = metrics_doc.get("counters", {})
+    hists = metrics_doc.get("histograms", {})
+
+    # Completed requests: request spans == serving.requests_total ==
+    # summary.completed == latency histogram count.
+    req_ids = {e["args"]["request_id"] for e in xs
+               if e.get("cat") == "request" and e.get("name") == "request"}
+    completed = summary.get("completed")
+    req_counter = counters.get("serving.requests_total")
+    lat_count = hists.get("serving.latency_s", {}).get("count")
+    for label, got in (
+        ("request spans in trace", len(req_ids)),
+        ("counters['serving.requests_total']", req_counter),
+        ("latency histogram count", lat_count),
+    ):
+        if got != completed:
+            errs.append(f"{label} = {got} but summary.completed = {completed}")
+
+    # Dispatched batches: serve/dispatch spans == serving.batches_total ==
+    # summary.batches.
+    dispatches = sum(1 for e in xs if e.get("name") == "serve/dispatch")
+    batches = summary.get("batches")
+    batch_counter = counters.get("serving.batches_total")
+    for label, got in (
+        ("serve/dispatch spans in trace", dispatches),
+        ("counters['serving.batches_total']", batch_counter),
+    ):
+        if got != batches:
+            errs.append(f"{label} = {got} but summary.batches = {batches}")
+
+    # Every request span must carry its device phase — a request that
+    # completed without a dispatch/device_done stamp pair means a lifecycle
+    # stamp went missing.
+    device_ids = {e["args"]["request_id"] for e in xs
+                  if e.get("cat") == "request"
+                  and e.get("name") == "request/device"}
+    missing = req_ids - device_ids
+    if missing:
+        errs.append(f"{len(missing)} request(s) have no request/device span: "
+                    f"{sorted(missing)[:5]}")
+
+    return errs
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__.strip().splitlines()[2].strip())
+        return 2
+    with open(argv[1]) as f:
+        trace_doc = json.load(f)
+    with open(argv[2]) as f:
+        metrics_doc = json.load(f)
+    errs = validate(trace_doc, metrics_doc)
+    if errs:
+        for e in errs:
+            print(f"validate_trace: DRIFT: {e}")
+        print(f"validate_trace: FAILED ({len(errs)} problems)")
+        return 1
+    n_events = len(trace_doc.get("traceEvents", []))
+    print(f"validate_trace: OK ({n_events} events, "
+          f"{trace_doc.get('dropped', 0)} dropped, "
+          f"completed={trace_doc['summary']['completed']}, "
+          f"batches={trace_doc['summary']['batches']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -34,6 +34,7 @@ import threading
 from typing import Dict, Optional
 
 from repro.core.pipeline import RenderConfig, register_render_cache
+from repro.obs import get_registry
 from repro.sharding.scene import ShardedScene
 
 _ENV_PATH = "REPRO_AUTOTUNE_CACHE"
@@ -139,8 +140,10 @@ def lookup(sig: tuple, scene=None) -> Optional[dict]:
         entry = _cache.get(sig)
         if entry is None:
             _stats["misses"] += 1
+            get_registry().counter("autotune.cache_misses_total").inc()
             return None
         _stats["hits"] += 1
+        get_registry().counter("autotune.cache_hits_total").inc()
         if scene is not None:
             _by_scene.setdefault(id(scene), set()).add(sig)
         return dict(entry)
@@ -151,6 +154,7 @@ def store(sig: tuple, entry: dict, scene=None, persist: bool = True) -> None:
     layer round-trips it); ``persist=False`` keeps it in-memory only."""
     with _lock:
         _load_disk()
+        get_registry().counter("autotune.stores_total").inc()
         _cache[sig] = dict(entry)
         if scene is not None:
             _by_scene.setdefault(id(scene), set()).add(sig)

@@ -79,7 +79,13 @@ from repro.core.projection import (
     ShardedProjected,
     proj_valid_count,
 )
-from repro.core.stages import Backend, get_backend
+from repro.core.stages import (
+    Backend,
+    TimedBackend,
+    get_backend,
+    timed_stage_cache_clear,
+    timed_stage_cache_info,
+)
 from repro.sharding.scene import SceneLike, ShardedScene, shard_scene
 from repro.utils import wide_count_dtype, wide_count_sum
 
@@ -102,6 +108,13 @@ class RenderConfig:
     feature_gather: str = "auto"       # projected-feature gather strategy when
                                        #   scene-sharded (DESIGN.md §12):
                                        #   auto (-> index) | index | psum | flat
+    timing: bool = False               # timed-stage mode (DESIGN.md §14): run
+                                       #   each stage as its own jit'd program
+                                       #   with a block_until_ready fence and a
+                                       #   stage/<name> span; bitwise-identical
+                                       #   images, and part of the static
+                                       #   signature so timed and untimed never
+                                       #   share an executable
 
 
 @jax.tree_util.register_dataclass
@@ -230,9 +243,19 @@ def _frontend(
         )
 
     D, shard_size = scene.num_shards, scene.shard_size
-    proj_s = jax.vmap(lambda s: backend.project(s, cam))(scene.shards)
-    pairs_s = jax.vmap(lambda p: backend.identify(p, grid, level, method))(proj_s)
-    tables_s = jax.vmap(lambda p: backend.bin(p, num_bins, capacity))(pairs_s)
+    if isinstance(backend, TimedBackend):
+        # Timed mode: each vmapped stage is one fenced jit(vmap) program —
+        # the per-shard calls below run inside the vmap trace, where fences
+        # would no-op (core/stages.py::TimedBackend).
+        proj_s = backend.project_shards(scene.shards, cam)
+        pairs_s = backend.identify_shards(proj_s, grid, level, method)
+        tables_s = backend.bin_shards(pairs_s, num_bins, capacity)
+    else:
+        proj_s = jax.vmap(lambda s: backend.project(s, cam))(scene.shards)
+        pairs_s = jax.vmap(
+            lambda p: backend.identify(p, grid, level, method)
+        )(proj_s)
+        tables_s = jax.vmap(lambda p: backend.bin(p, num_bins, capacity))(pairs_s)
 
     # Shard-local -> global gaussian indices: the canonical layout is
     # gaussian-contiguous, so shard d starts at d * shard_size.
@@ -278,6 +301,34 @@ def render(
     """
     backend = get_backend(cfg.backend)
     scene = _scene_for_render(scene, cfg)
+    if _timed_eligible(cfg, scene, cam, background):
+        from repro.obs import get_tracer
+
+        backend = TimedBackend(backend)
+        tracer = get_tracer()
+        t0 = tracer.clock()
+        out = _render_mode(backend, scene, cam, cfg, background)
+        # Umbrella span over the whole staged render; the per-stage spans
+        # TimedBackend recorded nest under it on the same thread lane.
+        tracer.complete(
+            "stage/render", t0, tracer.clock(), category="stage",
+            args={"mode": cfg.mode, "backend": cfg.backend}, force=True,
+        )
+        return out
+    return _render_mode(backend, scene, cam, cfg, background)
+
+
+def _timed_eligible(cfg: RenderConfig, scene, cam, background) -> bool:
+    """Timed-stage mode applies only to CONCRETE inputs: under an outer
+    trace (legacy jit(vmap) renderers, the jit'd autotune probe) fences
+    would no-op and per-stage spans would record trace-time garbage, so
+    traced calls stay on the plain backend — which is bitwise-identical."""
+    return cfg.timing and not _has_tracers(
+        (scene, cam.R, cam.fx, background)
+    )
+
+
+def _render_mode(backend, scene, cam, cfg, background) -> RenderResult:
     if cfg.mode == "gstg":
         return _render_gstg(backend, scene, cam, cfg, background)
     if cfg.mode == "tile_baseline":
@@ -406,6 +457,8 @@ def frontend_stats(
     """
     backend = get_backend(cfg.backend)
     scene = _scene_for_render(scene, cfg)
+    if _timed_eligible(cfg, scene, cam, None):
+        backend = TimedBackend(backend)
     grid = _grid(cam, cfg)
     gather = resolve_feature_gather(cfg)
 
@@ -644,6 +697,32 @@ def render_cache_info() -> dict:
     for name, (info, _) in _AUX_RENDER_CACHES.items():
         out[name] = info()
     return out
+
+
+# The timed-stage jit cache (core/stages.py::TimedBackend) is a render-path
+# cache like any other: registering it keeps the serving cache-hit deltas
+# truthful when `RenderConfig.timing` is on.
+register_render_cache(
+    "timed_stage", info=timed_stage_cache_info, clear=timed_stage_cache_clear
+)
+
+
+def _collect_render_caches(registry) -> None:
+    """Metrics collector: publish every render-cache's hit/miss/size table
+    as ``render_cache.<name>.<field>`` gauges at snapshot time (DESIGN.md
+    §14). Gauges, not counters, because the totals are owned by the caches;
+    the prefix is dropped first so caches that unregistered (closed engine
+    handles) leave no stale series behind."""
+    registry.drop("render_cache.")
+    for kind, info in render_cache_info().items():
+        for k, v in info.items():
+            if isinstance(v, (int, float)):
+                registry.gauge(f"render_cache.{kind}.{k}").set(v)
+
+
+from repro.obs import get_registry as _obs_registry  # noqa: E402
+
+_obs_registry().register_collector("render_caches", _collect_render_caches)
 
 
 def _background_array(background) -> jnp.ndarray:

@@ -36,6 +36,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import math
+import threading
 from typing import Dict, Optional
 
 import jax
@@ -341,6 +342,248 @@ class PallasBackend(Backend):
             alpha_ops=jnp.sum(counts[:, :, 0]),
             blend_ops=jnp.sum(counts[:, :, 1]),
         )
+
+
+# ---------------------------------------------------------------------------
+# Timed-stage execution (observability, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+# Per-stage jit cache for TimedBackend. Keyed by the Python statics of one
+# stage invocation (backend name, stage, grid/method/capacity/...); jax.jit
+# itself retraces per input shape/dtype, so the key needs nothing dynamic.
+# Bounded FIFO; registered with the render-cache registry by core/pipeline.py
+# (name "timed_stage") so cache stats stay truthful under timed serving.
+_TIMED_FN_MAX = 128
+_timed_lock = threading.Lock()
+_timed_fns: Dict[tuple, object] = {}
+_timed_stats = {"hits": 0, "misses": 0}
+
+
+def _timed_fn(key: tuple, build):
+    with _timed_lock:
+        fn = _timed_fns.get(key)
+        if fn is not None:
+            _timed_stats["hits"] += 1
+            return fn
+        _timed_stats["misses"] += 1
+    fn = jax.jit(build())
+    with _timed_lock:
+        while len(_timed_fns) >= _TIMED_FN_MAX:
+            _timed_fns.pop(next(iter(_timed_fns)))
+        _timed_fns.setdefault(key, fn)
+        return _timed_fns[key]
+
+
+def timed_stage_cache_info() -> dict:
+    with _timed_lock:
+        return {
+            "hits": _timed_stats["hits"],
+            "misses": _timed_stats["misses"],
+            "currsize": len(_timed_fns),
+            "maxsize": _TIMED_FN_MAX,
+        }
+
+
+def timed_stage_cache_clear() -> None:
+    with _timed_lock:
+        _timed_fns.clear()
+        _timed_stats["hits"] = 0
+        _timed_stats["misses"] = 0
+
+
+class TimedBackend(Backend):
+    """Per-stage timed execution of a wrapped backend (DESIGN.md §14).
+
+    Each stage runs as its OWN jit'd program followed by a
+    ``jax.block_until_ready`` fence, so the host interval around it is real
+    per-stage device time — recorded as a ``stage/<name>`` span on the
+    process tracer (``force=True``: ``RenderConfig.timing`` is the opt-in)
+    and bracketed by ``jax.profiler.TraceAnnotation`` so host spans line up
+    with device traces when the jax profiler is on.
+
+    The per-stage-jit chain is BITWISE-identical to the whole-program jit on
+    both backends (tests/test_obs.py): every stage boundary already carries
+    concrete dtypes, and the eager glue between stages (index offsets,
+    selects, gathers) is exact integer/select arithmetic. The first call per
+    static signature pays per-stage compiles (``_timed_fn`` cache); callers
+    that want clean numbers warm once, then measure (benchmarks/
+    bench_stages.py, launch/render.py --stats).
+
+    ``core.pipeline.render`` only installs this wrapper when inputs are
+    concrete — under an outer trace (legacy jit(vmap) paths, the autotune
+    probe) fences would no-op and spans would record trace-time garbage, so
+    those paths stay on the plain backend.
+    """
+
+    def __init__(self, inner: Backend):
+        self.inner = inner
+        self.name = f"timed:{inner.name}"
+
+    # -- span + fence around one stage program ---------------------------
+
+    def _run(self, stage: str, key: tuple, build, *args):
+        from repro.obs import get_tracer
+
+        fn = _timed_fn((self.inner.name,) + key, build)
+        tracer = get_tracer()
+        t0 = tracer.clock()
+        with jax.profiler.TraceAnnotation(f"stage/{stage}"):
+            out = jax.block_until_ready(fn(*args))
+        tracer.complete(
+            f"stage/{stage}", t0, tracer.clock(), category="stage",
+            args={"backend": self.inner.name}, force=True,
+        )
+        return out
+
+    # -- camera split: static geometry vs dynamic pose/intrinsics --------
+
+    @staticmethod
+    def _cam_static(cam) -> tuple:
+        return (int(cam.width), int(cam.height),
+                float(cam.znear), float(cam.zfar))
+
+    @staticmethod
+    def _cam_dynamic(cam) -> tuple:
+        return (
+            jnp.asarray(cam.R), jnp.asarray(cam.t),
+            jnp.asarray(cam.fx, jnp.float32), jnp.asarray(cam.fy, jnp.float32),
+            jnp.asarray(cam.cx, jnp.float32), jnp.asarray(cam.cy, jnp.float32),
+        )
+
+    # -- stages ----------------------------------------------------------
+
+    def project(self, scene, cam):
+        inner = self.inner
+        w, h, zn, zf = self._cam_static(cam)
+
+        def build():
+            def fn(scene, R, t, fx, fy, cx, cy):
+                c = Camera(R=R, t=t, fx=fx, fy=fy, cx=cx, cy=cy,
+                           width=w, height=h, znear=zn, zfar=zf)
+                return inner.project(scene, c)
+            return fn
+
+        return self._run("project", ("project", w, h, zn, zf), build,
+                         scene, *self._cam_dynamic(cam))
+
+    def identify(self, proj, grid, level, method):
+        inner = self.inner
+
+        def build():
+            return lambda p: inner.identify(p, grid, level, method)
+
+        return self._run("identify", ("identify", grid, level, method),
+                         build, proj)
+
+    def bin(self, pairs, num_bins, capacity):
+        inner = self.inner
+
+        def build():
+            return lambda p: inner.bin(p, num_bins, capacity)
+
+        return self._run("bin", ("bin", num_bins, capacity), build, pairs)
+
+    def merge(self, tables, depth):
+        inner = self.inner
+
+        def build():
+            return lambda t, d: inner.merge(t, d)
+
+        return self._run("merge", ("merge",), build, tables, depth)
+
+    # Vmapped per-shard forms of stages 1-3 for the scene-sharded frontend
+    # (core/pipeline.py::_frontend): each vmapped stage is ONE timed program,
+    # fenced at the jit(vmap) level — inside the vmap trace the per-shard
+    # calls are tracers and could not be fenced individually.
+
+    def project_shards(self, shards, cam):
+        inner = self.inner
+        w, h, zn, zf = self._cam_static(cam)
+
+        def build():
+            def fn(shards, R, t, fx, fy, cx, cy):
+                c = Camera(R=R, t=t, fx=fx, fy=fy, cx=cx, cy=cy,
+                           width=w, height=h, znear=zn, zfar=zf)
+                return jax.vmap(lambda s: inner.project(s, c))(shards)
+            return fn
+
+        return self._run("project", ("project_s", w, h, zn, zf), build,
+                         shards, *self._cam_dynamic(cam))
+
+    def identify_shards(self, proj_s, grid, level, method):
+        inner = self.inner
+
+        def build():
+            return jax.vmap(lambda p: inner.identify(p, grid, level, method))
+
+        return self._run("identify", ("identify_s", grid, level, method),
+                         build, proj_s)
+
+    def bin_shards(self, pairs_s, num_bins, capacity):
+        inner = self.inner
+
+        def build():
+            return jax.vmap(lambda p: inner.bin(p, num_bins, capacity))
+
+        return self._run("bin", ("bin_s", num_bins, capacity), build, pairs_s)
+
+    def bitmasks(self, proj, gtable, grid, method, *, chunk=32):
+        inner = self.inner
+
+        def build():
+            return lambda p, g: inner.bitmasks(p, g, grid, method, chunk=chunk)
+
+        return self._run("bitmask", ("bitmask", grid, method, chunk),
+                         build, proj, gtable)
+
+    def compact(self, gtable, masks, grid, tile_capacity):
+        inner = self.inner
+
+        def build():
+            return lambda g, m: inner.compact(g, m, grid, tile_capacity)
+
+        return self._run("compact", ("compact", grid, tile_capacity),
+                         build, gtable, masks)
+
+    def rasterize_tiles(self, proj, table, grid, *,
+                        background, chunk, early_exit):
+        inner = self.inner
+        has_bg = background is not None
+
+        def build():
+            if has_bg:
+                return lambda p, t, bg: inner.rasterize_tiles(
+                    p, t, grid, background=bg, chunk=chunk,
+                    early_exit=early_exit)
+            return lambda p, t: inner.rasterize_tiles(
+                p, t, grid, background=None, chunk=chunk,
+                early_exit=early_exit)
+
+        args = (proj, table) + ((background,) if has_bg else ())
+        return self._run(
+            "rasterize", ("rast_tiles", grid, chunk, early_exit, has_bg),
+            build, *args)
+
+    def rasterize_groups(self, proj, gtable, masks, compacted, grid, *,
+                         background, chunk, early_exit, tile_capacity):
+        inner = self.inner
+        has_bg = background is not None
+
+        def build():
+            if has_bg:
+                return lambda p, g, m, c, bg: inner.rasterize_groups(
+                    p, g, m, c, grid, background=bg, chunk=chunk,
+                    early_exit=early_exit, tile_capacity=tile_capacity)
+            return lambda p, g, m, c: inner.rasterize_groups(
+                p, g, m, c, grid, background=None, chunk=chunk,
+                early_exit=early_exit, tile_capacity=tile_capacity)
+
+        args = (proj, gtable, masks, compacted)
+        args += (background,) if has_bg else ()
+        return self._run(
+            "rasterize",
+            ("rast_groups", grid, chunk, early_exit, tile_capacity, has_bg),
+            build, *args)
 
 
 _BACKENDS: Dict[str, Backend] = {}

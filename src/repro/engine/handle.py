@@ -67,6 +67,7 @@ from repro.core.pipeline import (
 )
 from repro.core.projection import projected_bytes_per_gaussian
 from repro.launch.mesh import make_render_mesh, render_mesh_shards
+from repro.obs import emit_request_spans, get_registry, get_tracer
 from repro.serving.bucketing import BucketingScheduler, padded_size
 from repro.serving.queue import QueueClosed, RequestQueue
 from repro.serving.sharded import (
@@ -102,10 +103,36 @@ class _Submitted:
     camera: Any
     future: Future
     enqueue_time: Optional[float] = None
+    request_id: str = ""
+    # Lifecycle stamps (DESIGN.md §14): the dict OBJECT rides through the
+    # queue's dataclasses.replace copies, so every phase writes into one
+    # shared map; compare=False keeps it out of the generated eq.
+    stamps: Dict[str, float] = dataclasses.field(
+        default_factory=dict, compare=False, repr=False
+    )
 
     def signature(self) -> tuple:
         c = self.camera
         return (c.width, c.height, c.znear, c.zfar)
+
+
+def _timed_batch(one):
+    """Batch renderer for timed-stage mode: loop lanes eagerly and stack.
+
+    The vmapped jit batch and the per-lane jit are bitwise-identical
+    (tests/test_engine_handle.py relies on the same property), so looping
+    keeps pixels exact while letting TimedBackend fence every stage — a
+    vmapped timed render would see only tracers.
+    """
+
+    def fn(scene, R, t, fx, fy, cx, cy, background):
+        outs = [
+            one(scene, R[i], t[i], fx[i], fy[i], cx[i], cy[i], background)
+            for i in range(int(R.shape[0]))
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    return fn
 
 
 class Renderer:
@@ -338,7 +365,18 @@ class Renderer:
         return (self._cfg.tile, self._cfg.group, self._cfg.tile_capacity)
 
     def stats(self) -> dict:
-        """Committed layout + per-handle cache and futures counters."""
+        """Committed layout + per-handle cache and futures counters. Also
+        publishes the committed-layout numbers as per-handle gauges in the
+        metrics registry (DESIGN.md §14; dropped again by close())."""
+        registry = get_registry()
+        prefix = f"engine.{self.cache_name}."
+        registry.gauge(prefix + "scene_mb_per_device").set(
+            self._scene_mb_per_device)
+        registry.gauge(prefix + "feature_mb_per_device").set(
+            self._feature_mb_per_device)
+        registry.gauge(prefix + "physical_shards").set(self._phys_shards)
+        for k, v in self._counters.items():
+            registry.gauge(prefix + k).set(v)
         return {
             "config": self._cfg,
             "tile_params": self.tile_params,
@@ -437,11 +475,19 @@ class Renderer:
         one = _render_with_traced_camera(
             self._cfg, cam.width, cam.height, cam.znear, cam.zfar
         )
-        fn = (
-            jax.jit(one)
-            if kind == "single"
-            else jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, None)))
-        )
+        if self._cfg.timing:
+            # Timed-stage mode (DESIGN.md §14): the closure runs EAGERLY so
+            # core.pipeline installs TimedBackend and fences each stage's own
+            # jit'd program; under the usual outer jit every input is a
+            # tracer and no stage could be timed. Bitwise-identical pixels
+            # either way (tests/test_obs.py).
+            fn = one if kind == "single" else _timed_batch(one)
+        else:
+            fn = (
+                jax.jit(one)
+                if kind == "single"
+                else jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, None)))
+            )
         while len(self._fns) >= _FN_CACHE_MAX:
             self._fns.pop(next(iter(self._fns)))
         self._fns[key] = fn
@@ -533,14 +579,21 @@ class Renderer:
         )
         shard = NamedSharding(self._mesh, camera_batch_pspec(self._mesh))
         repl = NamedSharding(self._mesh, render_replicated_pspec())
-        put_b = lambda a: jax.device_put(a, shard)
+        if self._cfg.timing:
+            # Timed-stage mode loops lanes eagerly (_timed_batch); keep the
+            # camera arrays uncommitted so the per-lane indexing stays a
+            # local host slice instead of a cross-device gather.
+            put_b = put_bg = lambda a: a
+        else:
+            put_b = lambda a: jax.device_put(a, shard)
+            put_bg = lambda a: jax.device_put(a, repl)
         fn = self._fn("batch", padded)
         out = fn(
             self._scene,
             put_b(padded.R), put_b(padded.t),
             put_b(padded.fx), put_b(padded.fy),
             put_b(padded.cx), put_b(padded.cy),
-            jax.device_put(_background_array(background), repl),
+            put_bg(_background_array(background)),
         )
         if len(padded) != orig:
             out = jax.tree.map(lambda x: x[:orig], out)
@@ -564,9 +617,14 @@ class Renderer:
         # request the instant it lands in the queue.
         with self._worker_lock:
             self._counters["submitted"] += 1
+            seq = self._counters["submitted"]
             self._outstanding.append(fut)
+        get_registry().counter("engine.submitted_total").inc()
         try:
-            self._queue.put(_Submitted(camera=cam, future=fut))
+            self._queue.put(_Submitted(
+                camera=cam, future=fut,
+                request_id=f"{self.cache_name}#{seq}",
+            ))
         except QueueClosed:
             with self._worker_lock:
                 self._counters["submitted"] -= 1
@@ -616,6 +674,8 @@ class Renderer:
 
     def _dispatch_bucket(self, bucket) -> None:
         reqs = bucket.requests
+        tracer = get_tracer()
+        t0 = self._clock()
         try:
             out = self.render_batch(
                 [r.camera for r in reqs], pad_to=self._max_batch
@@ -635,18 +695,37 @@ class Renderer:
                 if r.future.set_running_or_notify_cancel():
                     r.future.set_exception(exc)
             return
+        t1 = self._clock()
         lanes = data_extent(self._mesh)
+        padded = padded_size(max(len(reqs), self._max_batch), lanes)
         with self._worker_lock:
             self._counters["batches"] += 1
             self._counters["completed"] += len(reqs)
-            self._counters["padded_lanes"] += (
-                padded_size(max(len(reqs), self._max_batch), lanes) - len(reqs)
-            )
+            self._counters["padded_lanes"] += padded - len(reqs)
             for r in reqs:
                 self._outstanding.remove(r.future)
+        registry = get_registry()
+        registry.counter("engine.batches_total").inc()
+        registry.counter("engine.completed_total").inc(len(reqs))
+        registry.counter("engine.padded_lanes_total").inc(padded - len(reqs))
+        registry.histogram("engine.dispatch_s").observe(t1 - t0)
+        if tracer.enabled:
+            tracer.complete(
+                "engine/dispatch", t0, t1, category="engine",
+                args={"handle": self.cache_name, "batch_size": len(reqs),
+                      "padded": padded},
+            )
         for r, res in zip(reqs, results):
+            st = getattr(r, "stamps", None)
+            if st is not None:
+                st["dispatch"] = t0
+                st["device_done"] = t1
             if r.future.set_running_or_notify_cancel():
                 r.future.set_result(res)
+            if st is not None:
+                st["resolve"] = self._clock()
+                emit_request_spans(tracer, r.request_id, st,
+                                   args={"handle": self.cache_name})
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -663,6 +742,9 @@ class Renderer:
         self._closed = True
         self._worker = None
         unregister_render_cache(self.cache_name)
+        # Per-handle gauges must not outlive the handle (same hygiene as the
+        # render-cache registry entry); the aggregate engine.* counters stay.
+        get_registry().drop(f"engine.{self.cache_name}.")
         self._cache_clear()
         if self._source is not None:
             # The lifecycle fix for the stale-layout case: re-committing one

@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import os
 import time
+from collections import defaultdict
 
 import numpy as np
 
@@ -23,6 +24,24 @@ from benchmarks.common import scene_and_camera
 from repro import engine
 from repro.core.cost_model import GSTG_ASIC, estimate
 from repro.core.pipeline import RenderConfig, render_cache_info
+from repro.obs import get_tracer, trace_env_enabled
+
+
+def _stage_table(events) -> str:
+    """Per-stage device-time table from the tracer's ``category == "stage"``
+    spans (ms, aggregated by span name over however many renders ran)."""
+    agg = defaultdict(lambda: [0, 0.0])
+    for e in events:
+        if e.category == "stage":
+            agg[e.name][0] += 1
+            agg[e.name][1] += e.duration_s
+    if not agg:
+        return "  (no stage spans recorded)"
+    lines = [f"  {'stage':<18s} {'calls':>5s} {'total ms':>9s} {'mean ms':>9s}"]
+    for name, (calls, tot) in sorted(agg.items(), key=lambda kv: -kv[1][1]):
+        lines.append(f"  {name:<18s} {calls:>5d} {tot * 1e3:>9.3f} "
+                     f"{tot * 1e3 / calls:>9.3f}")
+    return "\n".join(lines)
 
 
 def main():
@@ -56,10 +75,24 @@ def main():
                          "the persisted autotune cache — and commits the "
                          "tuned knobs")
     ap.add_argument("--stats", action="store_true",
-                    help="print executable-cache statistics after the render")
+                    help="print executable-cache statistics after the render "
+                         "(+ a per-stage device-time table when timing is on "
+                         "via REPRO_TRACE=1 or --trace-json)")
+    ap.add_argument("--trace-json", default=None,
+                    help="write a Chrome trace (Perfetto-loadable) of the "
+                         "measured render's per-stage device spans; implies "
+                         "fenced per-stage timing (DESIGN.md §14)")
     args = ap.parse_args()
 
     backend = "pallas" if args.use_kernels else args.backend
+    # Fenced per-stage timing: each backend stage becomes its own jit'd
+    # program with a block_until_ready fence (bitwise-identical image; the
+    # fences serialize stages, so the end-to-end walltime is NOT the headline
+    # number while timing is on).
+    timing = trace_env_enabled() or bool(args.trace_json)
+    tracer = get_tracer()
+    if timing:
+        tracer.enable()
     scene, cam = scene_and_camera(
         args.scene, args.gaussians, width=args.width, height=args.height
     )
@@ -74,10 +107,16 @@ def main():
         span=6,
         backend=backend,
         scene_shards=args.scene_shards,
+        timing=timing,
     )
     with engine.open(
         scene, cfg, tile_params="auto" if args.autotune else None
     ) as renderer:
+        if timing:
+            # Warm render pays the per-stage compiles; clear its spans so the
+            # measured render's table/trace shows steady-state device time.
+            renderer.render(cam)
+            tracer.clear()
         t0 = time.time()
         out = renderer.render(cam)   # ONE render: image + stats, any backend
         img, stats = np.asarray(out.image), out.stats
@@ -106,6 +145,13 @@ def main():
                 print(f"  jit cache [{kind:6s}] : hits={info['hits']} "
                       f"misses={info['misses']} currsize={info['currsize']}/"
                       f"{info['maxsize']}")
+            if timing:
+                print("  per-stage device time (fenced, steady-state):")
+                print(_stage_table(tracer.events()))
+        if args.trace_json:
+            os.makedirs(os.path.dirname(args.trace_json) or ".", exist_ok=True)
+            tracer.write_chrome_trace(args.trace_json)
+            print(f"  wrote {args.trace_json}")
     # save a PPM for quick eyeballing (no image deps offline)
     out_path = f"results/render_{args.scene}_{args.mode}_{backend}.ppm"
     os.makedirs("results", exist_ok=True)

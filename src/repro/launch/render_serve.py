@@ -77,7 +77,14 @@ def parse_args(argv=None):
     ap.add_argument("--no-realtime", action="store_true",
                     help="replay arrivals as fast as possible (throughput mode)")
     ap.add_argument("--trace-json", default=None,
-                    help="write the full stats summary + per-request records")
+                    help="write a Chrome trace (load in Perfetto / "
+                         "chrome://tracing) of every stage/serving/request "
+                         "span; the old stats summary + per-request records "
+                         "ride along under the top-level 'summary' key")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write a repro.metrics/v1 snapshot of the process "
+                         "metrics registry (serving.* / engine.* counters, "
+                         "gauges, latency histograms)")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
@@ -108,8 +115,18 @@ def main(argv=None):
     from repro.core.gaussians import scene_like_paper
     from repro.core.pipeline import RenderConfig
     from repro.launch.mesh import make_render_mesh
+    from repro.obs import get_registry, get_tracer, trace_env_enabled
     from repro.serving.queue import RenderRequest
     from repro.serving.server import RenderServer, poisson_arrivals
+
+    # Asking for a trace (or metrics) file opts the process into span
+    # recording; REPRO_TRACE=1 additionally turns on fenced per-stage device
+    # timing (RenderConfig.timing — a different, per-stage-jit executable;
+    # bitwise-identical images, see DESIGN.md §14).
+    tracer = get_tracer()
+    if args.trace_json or args.metrics_json:
+        tracer.enable()
+    timing = trace_env_enabled()
 
     n_dev = len(jax.devices())
     use_dev = min(args.devices or n_dev, n_dev)
@@ -137,6 +154,7 @@ def main(argv=None):
         tile_capacity=args.capacity,
         span=6,
         scene_shards=shards,
+        timing=timing,
     )
 
     # Camera pools per resolution: orbit viewpoints, drawn round-robin per
@@ -242,7 +260,12 @@ def main(argv=None):
               f"bitwise-identical to the replicated path")
 
     if args.trace_json:
-        trace = {
+        # Chrome trace-event format (repro.trace/v1): traceEvents carry the
+        # stage/serving/request spans; the pre-existing stats summary and
+        # per-request records ride under "summary" (Perfetto ignores unknown
+        # top-level keys, old consumers read doc["summary"]).
+        doc = tracer.chrome_trace()
+        doc["summary"] = {
             "config": vars(args),
             "devices": use_dev,
             **server.stats.summary(),
@@ -258,8 +281,17 @@ def main(argv=None):
             ],
         }
         with open(args.trace_json, "w") as f:
-            json.dump(trace, f, indent=2)
-        print(f"wrote {args.trace_json}")
+            json.dump(doc, f, indent=2)
+        print(f"wrote {args.trace_json} "
+              f"({len(doc['traceEvents'])} events, {doc['dropped']} dropped)")
+
+    if args.metrics_json:
+        # Snapshot BEFORE close(): Renderer.close() drops its per-handle
+        # engine.<name>.* gauges, and the traced smoke validator cross-checks
+        # them against the trace.
+        with open(args.metrics_json, "w") as f:
+            json.dump(get_registry().snapshot(), f, indent=2)
+        print(f"wrote {args.metrics_json}")
 
     server.close()   # releases every committed handle (jit caches + layouts)
 

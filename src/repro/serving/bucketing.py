@@ -81,6 +81,9 @@ class BucketingScheduler:
         bucket = self._buckets.get(sig)
         if bucket is None:
             bucket = self._buckets[sig] = Bucket(sig, [], now)
+        stamps = getattr(req, "stamps", None)   # duck-typed request stubs
+        if stamps is not None:
+            stamps.setdefault("batch_form", now)
         bucket.requests.append(req)
         if len(bucket) >= self.max_batch:
             del self._buckets[sig]

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 
 class QueueFull(Exception):
@@ -44,6 +44,16 @@ class RenderRequest:
     cfg: Any
     deadline: Optional[float] = None
     enqueue_time: Optional[float] = None
+    # Lifecycle stamps (DESIGN.md §14): monotonic clock readings keyed
+    # enqueue/batch_form/dispatch/device_done/resolve, written by the queue,
+    # scheduler, and server as the request moves through them. A mutable
+    # dict on a frozen dataclass on purpose — the dict OBJECT survives the
+    # ``dataclasses.replace`` copies this request goes through, so every
+    # phase writes into one shared map; compare=False keeps it out of the
+    # generated ``__eq__``.
+    stamps: Dict[str, float] = dataclasses.field(
+        default_factory=dict, compare=False, repr=False
+    )
 
     def signature(self) -> tuple:
         """The bucketing key: everything the compiled executable specializes
@@ -83,6 +93,9 @@ class RequestQueue:
     def _admit(self, req: RenderRequest) -> None:
         if req.enqueue_time is None:
             req = dataclasses.replace(req, enqueue_time=self._clock())
+        stamps = getattr(req, "stamps", None)   # duck-typed request stubs
+        if stamps is not None:
+            stamps.setdefault("enqueue", req.enqueue_time)
         self._items.append(req)
         self.accepted += 1
         self._cond.notify_all()

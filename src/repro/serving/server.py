@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.gaussians import GaussianScene
 from repro.core.pipeline import CameraBatch, render_cache_info
+from repro.obs import emit_request_spans, get_tracer
 from repro.serving.bucketing import Bucket, BucketingScheduler, padded_size
 from repro.serving.queue import RenderRequest, RequestQueue
 from repro.serving.stats import ServingStats
@@ -223,6 +224,13 @@ class RenderServer:
         t1 = self._clock()
         after = render_cache_info()
 
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.complete(
+                "serve/dispatch", t0, t1, category="serving",
+                args={"batch_size": len(reqs), "padded": shape,
+                      "signature": repr(bucket.signature)},
+            )
         latencies = [t1 - r.enqueue_time for r in reqs]
         self.stats.record_dispatch(
             bucket.signature,
@@ -236,7 +244,7 @@ class RenderServer:
         for req, img, lat in zip(reqs, images, latencies):
             missed = req.deadline is not None and t1 > req.deadline
             if missed:
-                self.stats.deadline_misses += 1
+                self.stats.count_deadline_miss()
             self.results[req.request_id] = RequestResult(
                 request_id=req.request_id,
                 image=img,
@@ -245,6 +253,15 @@ class RenderServer:
                 signature=bucket.signature,
                 deadline_missed=missed,
             )
+            stamps = getattr(req, "stamps", None)
+            if stamps is not None:
+                stamps["dispatch"] = t0
+                stamps["device_done"] = t1
+                stamps["resolve"] = self._clock()
+                emit_request_spans(
+                    tracer, req.request_id, stamps,
+                    args={"scene_id": req.scene_id},
+                )
 
     # -- lifecycle -----------------------------------------------------------
 

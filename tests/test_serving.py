@@ -177,6 +177,70 @@ def test_stats_cache_delta():
     assert cache_delta(before, after) == {"hits": 3, "misses": 1}
 
 
+def test_stats_latency_memory_is_bounded():
+    """A long-lived server must not grow one float per request: latencies
+    live in reservoir histograms (DESIGN.md §14) — bounded storage, exact
+    counts, percentiles from a uniform sample once past the cap."""
+    from repro.obs import MetricsRegistry
+    from repro.serving.stats import LATENCY_RESERVOIR
+
+    stats = ServingStats(registry=MetricsRegistry())
+    n = LATENCY_RESERVOIR + 500
+    for i in range(n // 10):
+        stats.record_dispatch(("sig",), 10, 10, 0.01,
+                              [0.01 * (j + 1) for j in range(10)])
+    b = stats.bucket(("sig",))
+    assert b.requests == (n // 10) * 10
+    assert b.latency.count == b.requests          # exact count survives
+    assert len(b.latencies_s) == LATENCY_RESERVOIR   # bounded storage
+    assert len(stats.all_latencies()) == LATENCY_RESERVOIR
+    assert b.latency.sampled
+    d = b.to_dict()
+    assert d["latency_count"] == b.requests and d["latency_sampled"]
+    # percentiles still come out of the sampled window
+    assert 0.01 <= d["p99_ms"] / 1e3 <= 0.1
+
+
+def test_stats_record_dispatch_thread_safe():
+    """Dispatch folds race in production (driver loop + futures worker);
+    every counter must survive N threads folding concurrently."""
+    import threading
+
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    stats = ServingStats(registry=reg)
+    threads, per_thread, batch = 8, 50, 4
+    barrier = threading.Barrier(threads)
+
+    def fold(k):
+        barrier.wait(timeout=10)
+        for _ in range(per_thread):
+            stats.record_dispatch((f"sig-{k % 2}",), batch, batch + 1,
+                                  0.001, [0.01] * batch)
+            stats.count_rejected()
+            stats.count_deadline_miss()
+
+    ts = [threading.Thread(target=fold, args=(k,)) for k in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    total = threads * per_thread
+    s = stats.summary()
+    assert s["completed"] == total * batch
+    assert s["batches"] == total
+    assert s["padded"] == total
+    assert s["rejected"] == total
+    assert s["deadline_misses"] == total
+    assert stats.latency.count == total * batch
+    snap = reg.snapshot()
+    assert snap["counters"]["serving.requests_total"] == total * batch
+    assert snap["counters"]["serving.batches_total"] == total
+    assert snap["counters"]["serving.rejected_total"] == total
+    assert snap["histograms"]["serving.latency_s"]["count"] == total * batch
+
+
 # ---------------------------------------------------------------------------
 # jax layer: sharded dispatch + server loop
 # ---------------------------------------------------------------------------
@@ -416,10 +480,15 @@ def test_render_batch_sharded_default_mesh_logical_fallback(
 @pytest.mark.slow
 def test_render_serve_cli_multi_device(tmp_path):
     """The CLI end-to-end on 2 virtual host devices (fresh process so the
-    XLA flag lands before jax init): all requests complete, trace written."""
+    XLA flag lands before jax init): all requests complete, a Chrome trace
+    (DESIGN.md §14) is written with the stats summary riding along, and the
+    metrics snapshot agrees with it."""
     import json
 
+    from repro.obs import validate_chrome_trace
+
     trace = tmp_path / "trace.json"
+    metrics = tmp_path / "metrics.json"
     proc = subprocess.run(
         [
             sys.executable, "-m", "repro.launch.render_serve",
@@ -427,6 +496,7 @@ def test_render_serve_cli_multi_device(tmp_path):
             "--gaussians", "400", "--resolutions", "64x64",
             "--scenes", "train", "--max-batch", "3", "--max-wait", "0.02",
             "--no-realtime", "--trace-json", str(trace),
+            "--metrics-json", str(metrics),
         ],
         env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
              "HOME": str(tmp_path)},
@@ -435,8 +505,18 @@ def test_render_serve_cli_multi_device(tmp_path):
         timeout=600,
     )
     assert proc.returncode == 0, proc.stdout + proc.stderr
-    data = json.loads(trace.read_text())
+    doc = json.loads(trace.read_text())
+    assert validate_chrome_trace(doc) == []
+    data = doc["summary"]   # the pre-§14 stats document rides along here
     assert data["completed"] == 6 and data["devices"] == 2
     assert len(data["requests"]) == 6
     # 2 batches of 3 on 2 devices -> each padded to 4: 2 wasted lanes total
     assert data["padded"] == 2
+    # request-lifecycle spans: one `request` span per completed request
+    reqs = [e for e in doc["traceEvents"]
+            if e.get("ph") == "X" and e.get("name") == "request"]
+    assert len(reqs) == 6
+    snap = json.loads(metrics.read_text())
+    assert snap["schema"] == "repro.metrics/v1"
+    assert snap["counters"]["serving.requests_total"] == 6
+    assert snap["histograms"]["serving.latency_s"]["count"] == 6
