@@ -1,0 +1,265 @@
+"""Stream-session throughput: exact-reuse frontend cache vs stateless.
+
+The tentpole measurement of the frontend/backend split (DESIGN.md §15): a
+smooth orbit trajectory lapped several times through one
+``Renderer.open_stream()`` session vs the same frame sequence rendered
+statelessly (``Renderer.render``, the fused path). Lap 1 misses and fills
+the per-stream cache; every later lap replays the exact float32 poses, so
+each frame skips the frontend (project/identify/bin/sort) entirely and
+dispatches only the backend program. The headline is the whole-sequence
+frame-throughput speedup — cold lap INCLUDED — plus the steady-state
+(hot-lap) speedup and the stream hit rate.
+
+Config follows the measured stage split: at 96x96 with 8k gaussians the
+frontend is ~84% of the frame (sorting dominates, rasterization is cheap),
+which is the regime the paper's tile-grouping targets; the acceptance
+floor is ``speedup >= 1.3`` on the default config (validate_bench enforces
+it, so a perf regression fails the bench instead of drifting).
+
+Writes the schema-versioned ``BENCH_stream_<host>.json`` trajectory at the
+repo root (committed, like BENCH_autotune/BENCH_stages). ``--smoke`` runs
+a tiny scene and validates the schema without the speedup floor.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import re
+import time
+
+import numpy as np
+
+SCHEMA = "repro.bench_stream/v1"
+
+DEFAULT_SCENES = ("train", "truck")
+DEFAULT_GAUSSIANS = 8000
+DEFAULT_POSES = 16
+DEFAULT_LAPS = 4
+MIN_SPEEDUP = 1.3
+
+
+def _host() -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "-", platform.node() or "unknown")
+
+
+def default_out_path(host: str | None = None) -> str:
+    return f"BENCH_stream_{host or _host()}.json"
+
+
+def validate_bench(doc: dict, min_speedup: float | None = None) -> list:
+    """Schema check for a BENCH_stream document; returns problems (empty =
+    valid). ``min_speedup`` additionally enforces the acceptance floor on
+    every scene's whole-sequence speedup."""
+    errs = []
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, expected {SCHEMA!r}")
+    for key in ("host", "timestamp", "backend", "config", "scenes"):
+        if key not in doc:
+            errs.append(f"missing top-level key {key!r}")
+    scenes = doc.get("scenes") or {}
+    if not scenes:
+        errs.append("no scenes")
+    for name, sc in scenes.items():
+        for k in ("stateless_ms_per_frame", "stream_ms_per_frame",
+                  "steady_ms_per_frame", "speedup", "steady_speedup",
+                  "hit_rate"):
+            if not isinstance(sc.get(k), (int, float)):
+                errs.append(f"scene {name}: non-numeric {k!r}")
+        for k in ("frames", "poses", "laps"):
+            if not isinstance(sc.get(k), int):
+                errs.append(f"scene {name}: non-int {k!r}")
+        if not isinstance(sc.get("stream_stats"), dict):
+            errs.append(f"scene {name}: missing stream_stats")
+        hr = sc.get("hit_rate")
+        if isinstance(hr, (int, float)) and not 0.0 <= hr <= 1.0:
+            errs.append(f"scene {name}: hit_rate {hr} outside [0, 1]")
+        laps, poses = sc.get("laps"), sc.get("poses")
+        if (isinstance(hr, (int, float)) and isinstance(laps, int)
+                and isinstance(poses, int) and laps > 1):
+            expect = (laps - 1) / laps   # lap 1 misses, later laps hit
+            if abs(hr - expect) > 1e-6:
+                errs.append(
+                    f"scene {name}: hit_rate {hr} != (laps-1)/laps "
+                    f"{expect} — exact reuse broke on the orbit replay")
+        if min_speedup is not None:
+            sp = sc.get("speedup")
+            if isinstance(sp, (int, float)) and sp < min_speedup:
+                errs.append(
+                    f"scene {name}: speedup {sp:.2f}x below the "
+                    f"{min_speedup}x acceptance floor")
+    return errs
+
+
+def _bench_scene(scene, cams, cfg, laps: int):
+    """One scene: stateless vs stream over the identical frame sequence."""
+    import jax
+
+    from repro import engine
+
+    frames = [cams[i % len(cams)] for i in range(laps * len(cams))]
+    with engine.open(scene, cfg) as r:
+        # Warm both compiled paths (fused single + frontend/backend split)
+        # so neither sequence pays tracing/compile time.
+        jax.block_until_ready(r.render(cams[0]).image)
+        f0 = r.render_frontend(cams[0])
+        jax.block_until_ready(r.render_backend(f0, cams[0]).image)
+
+        t0 = time.perf_counter()
+        for cam in frames:
+            jax.block_until_ready(r.render(cam).image)
+        stateless_s = time.perf_counter() - t0
+
+        with r.open_stream(cache_frames=max(len(cams), 32)) as s:
+            t0 = time.perf_counter()
+            for cam in frames:
+                jax.block_until_ready(s.render(cam).image)
+            s.wait_spec_idle(timeout=600.0)   # spec device time is ours too
+            stream_s = time.perf_counter() - t0
+            seq_stats = s.stats()             # hit rate of the timed sequence
+
+            # Steady state: one extra hot lap, every pose an exact hit.
+            t0 = time.perf_counter()
+            for cam in cams:
+                jax.block_until_ready(s.render(cam).image)
+            steady_s = time.perf_counter() - t0
+
+            # Bitwise spot check — the invariant the test suite pins,
+            # asserted here too so a bench run can never report a speedup
+            # on wrong frames.
+            spot = np.asarray(s.render(cams[0]).image)
+            ref = np.asarray(r.render(cams[0]).image)
+            if not (spot == ref).all():
+                raise AssertionError(
+                    "stream frame diverged from stateless render — "
+                    "refusing to report a speedup on wrong pixels")
+            out_stream = s.stats()
+    n = len(frames)
+    return {
+        "frames": n,
+        "poses": len(cams),
+        "laps": laps,
+        "stateless_ms_per_frame": stateless_s / n * 1e3,
+        "stream_ms_per_frame": stream_s / n * 1e3,
+        "steady_ms_per_frame": steady_s / len(cams) * 1e3,
+        "speedup": stateless_s / stream_s,
+        "steady_speedup": (stateless_s / n) / (steady_s / len(cams)),
+        "hit_rate": seq_stats["hit_rate"],
+        "stream_stats": out_stream,
+    }
+
+
+def run(
+    scenes=DEFAULT_SCENES,
+    n_gaussians: int = DEFAULT_GAUSSIANS,
+    width: int = 96,
+    height: int = 96,
+    backend: str = "reference",
+    poses: int = DEFAULT_POSES,
+    laps: int = DEFAULT_LAPS,
+    out_path: str | None = None,
+    min_speedup: float | None = MIN_SPEEDUP,
+) -> dict:
+    """The orbit-replay bench over ``scenes``; writes the BENCH json and
+    returns the doc. ``out_path=None`` writes ``BENCH_stream_<host>.json``
+    in the current directory."""
+    import jax
+
+    from benchmarks.common import emit
+    from repro.configs.gs_scenes import PAPER_SCENES
+    from repro.core import orbit_cameras
+    from repro.core.gaussians import scene_like_paper
+    from repro.core.pipeline import RenderConfig
+    import zlib
+
+    cfg = RenderConfig(mode="gstg", backend=backend, span=6)
+    doc = {
+        "schema": SCHEMA,
+        "host": _host(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "jax_backend": jax.default_backend(),
+        "backend": backend,
+        "config": {
+            "n_gaussians": n_gaussians,
+            "width": width,
+            "height": height,
+            "poses": poses,
+            "laps": laps,
+            "mode": cfg.mode,
+        },
+        "scenes": {},
+    }
+    for name in scenes:
+        spec = PAPER_SCENES[name]
+        seed = zlib.crc32(name.encode()) % 2**31
+        scene = scene_like_paper(jax.random.key(seed), name, n_gaussians)
+        cams = orbit_cameras(poses, spec.extent * 1.5, width, height)
+        t0 = time.time()
+        sc = _bench_scene(scene, cams, cfg, laps)
+        doc["scenes"][name] = sc
+        emit(
+            f"stream_{name}",
+            sc["stream_ms_per_frame"] * 1e3,
+            f"{sc['speedup']:.2f}x vs stateless "
+            f"(steady {sc['steady_speedup']:.2f}x, "
+            f"hit_rate={sc['hit_rate']:.2f}, "
+            f"{sc['stateless_ms_per_frame']:.1f}->"
+            f"{sc['stream_ms_per_frame']:.1f}ms/frame, "
+            f"{time.time() - t0:.0f}s)",
+        )
+
+    errs = validate_bench(doc, min_speedup=min_speedup)
+    if errs:
+        raise AssertionError("BENCH document invalid: " + "; ".join(errs))
+    out = out_path or default_out_path()
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    emit("bench_stream_written", 0.0, out)
+    return doc
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenes", default=",".join(DEFAULT_SCENES))
+    ap.add_argument("--gaussians", type=int, default=DEFAULT_GAUSSIANS)
+    ap.add_argument("--width", type=int, default=96)
+    ap.add_argument("--height", type=int, default=96)
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"])
+    ap.add_argument("--poses", type=int, default=DEFAULT_POSES)
+    ap.add_argument("--laps", type=int, default=DEFAULT_LAPS)
+    ap.add_argument("--out", default=None,
+                    help="output path (default BENCH_stream_<host>.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scene, schema validation only (no speedup "
+                         "floor — CI boxes are noisy)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        if args.out is None:
+            args.out = os.path.join("results", "BENCH_stream_smoke.json")
+            os.makedirs("results", exist_ok=True)
+        run(
+            scenes=("train",), n_gaussians=500, width=96, height=96,
+            backend=args.backend, poses=4, laps=2,
+            out_path=args.out, min_speedup=None,
+        )
+        print(f"bench_stream --smoke: OK (schema valid, wrote {args.out})")
+        return 0
+
+    run(
+        scenes=tuple(s.strip() for s in args.scenes.split(",") if s.strip()),
+        n_gaussians=args.gaussians,
+        width=args.width, height=args.height,
+        backend=args.backend,
+        poses=args.poses, laps=args.laps,
+        out_path=args.out,
+        min_speedup=MIN_SPEEDUP,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,7 +7,9 @@ under results/bench/). Figures covered:
   (the tile/group sweep)           Fig 14/15 -> bench_accel
 plus the wall-time microbenchmark of the JAX renderer itself.
 bench_autotune additionally refreshes ``BENCH_autotune_<host>.json`` at the
-repo root — the committed perf trajectory (DESIGN.md §13).
+repo root — the committed perf trajectory (DESIGN.md §13) — and
+bench_stream refreshes ``BENCH_stream_<host>.json``, the stream-session
+exact-reuse speedup trajectory (DESIGN.md §15).
 """
 from __future__ import annotations
 
@@ -27,6 +29,7 @@ def main() -> None:
         bench_serving,
         bench_sharing,
         bench_stages,
+        bench_stream,
     )
 
     os.makedirs("results/bench", exist_ok=True)
@@ -39,6 +42,7 @@ def main() -> None:
         ("render_walltime", bench_render_walltime.run),
         ("serving", bench_serving.run),
         ("scene_scale", bench_scene_scale.run),
+        ("stream_reuse", bench_stream.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

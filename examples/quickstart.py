@@ -103,6 +103,23 @@ def main():
               f"{stats['batches']} batch(es), identical to render_batch: "
               f"{same}")
 
+        # 10) camera streams (DESIGN.md §15): open_stream() caches frontend
+        #     results under an EXACT pose signature — lap 2 of the orbit
+        #     skips project/identify/bin entirely and dispatches only the
+        #     backend program, while staying bitwise-identical to the
+        #     stateless path by construction.
+        with renderer.open_stream() as stream:
+            for lap in range(2):
+                for cam in cams:
+                    frame = stream.render(cam)
+            jax.block_until_ready(frame.image)
+            sstats = stream.stats()
+            bitwise = (np.asarray(frame.image)
+                       == np.asarray(renderer.render(cams[-1]).image)).all()
+        print(f"renderer.open_stream     : {sstats['frames']} frames, "
+              f"hit_rate={sstats['hit_rate']:.2f} (lap 2 all hits), "
+              f"bitwise == stateless: {bitwise}")
+
 
 if __name__ == "__main__":
     main()

@@ -93,6 +93,23 @@ REPRO_TRACE=1 python -m repro.launch.render_serve --backend reference \
 python scripts/validate_trace.py \
     results/trace_smoke.json results/metrics_smoke.json
 
+# Stream smoke (DESIGN.md §15): 2 interactive camera streams on the
+# 2-virtual-device server, frames lapping a 16-pose orbit so the exact-reuse
+# frontend cache and the speculation worker both engage. --parity-check
+# exits non-zero on ANY frame that is not BITWISE-identical to the stateless
+# path (the verify-or-discard invariant), and validate_trace.py cross-checks
+# the spec/* span counts against the stream/spec metrics counters.
+echo "== stream smoke serve: exact-reuse + speculation, bitwise parity =="
+REPRO_TRACE=1 python -m repro.launch.render_serve --backend reference \
+    --devices 2 --scene-shards 2 --streams 2 --stream-frames 20 \
+    --spec-depth 2 \
+    --rate 200 --gaussians 500 --scenes train --resolutions 96x96 \
+    --max-batch 4 --max-wait 0.05 --no-realtime --parity-check \
+    --trace-json results/trace_stream_smoke.json \
+    --metrics-json results/metrics_stream_smoke.json
+python scripts/validate_trace.py \
+    results/trace_stream_smoke.json results/metrics_stream_smoke.json
+
 # Measured per-stage bench smoke (DESIGN.md §14): tiny scene through the
 # timing=True engine path -> BENCH_stages schema validation.
 echo "== bench_stages smoke: measured per-stage spans, schema valid =="

@@ -81,6 +81,33 @@ def validate(trace_doc: dict, metrics_doc: dict) -> list:
         if got != batches:
             errs.append(f"{label} = {got} but summary.batches = {batches}")
 
+    # Stream/speculation consistency (DESIGN.md §15): every stream frame
+    # records exactly one spec/verify span (the exact-reuse cache decision),
+    # so the span count must equal the stream hit+miss counter totals; every
+    # speculative frontend records one spec/run span matching spec.runs_total.
+    # Only enforced when the run actually served streams — stateless smokes
+    # carry no stream counters or spec spans.
+    stream_frames = counters.get("stream.frames_total")
+    if stream_frames is not None or any(e.get("cat") == "spec" for e in xs):
+        hits = counters.get("stream.hits_total", 0)
+        misses = counters.get("stream.misses_total", 0)
+        verifies = sum(1 for e in xs if e.get("name") == "spec/verify")
+        if verifies != hits + misses:
+            errs.append(
+                f"spec/verify spans = {verifies} but stream hit+miss "
+                f"counters total {hits + misses} "
+                f"(hits={hits}, misses={misses})")
+        if stream_frames != hits + misses:
+            errs.append(
+                f"counters['stream.frames_total'] = {stream_frames} but "
+                f"hit+miss counters total {hits + misses}")
+        spec_runs = counters.get("spec.runs_total", 0)
+        run_spans = sum(1 for e in xs if e.get("name") == "spec/run")
+        if run_spans != spec_runs:
+            errs.append(
+                f"spec/run spans = {run_spans} but "
+                f"counters['spec.runs_total'] = {spec_runs}")
+
     # Every request span must carry its device phase — a request that
     # completed without a dispatch/device_done stamp pair means a lifecycle
     # stamp went missing.

@@ -65,7 +65,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import List, Optional, Sequence, Union
+from typing import Any, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -142,6 +142,28 @@ class RenderStats:
 class RenderResult:
     image: jnp.ndarray
     stats: RenderStats
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FrontendResult:
+    """Everything the frontend program (project -> identify -> bin -> merge)
+    hands the backend program (bitmask -> compact -> rasterize).
+
+    A registered pytree so it crosses jit boundaries as-is: the engine
+    handle compiles the two halves as SEPARATE programs (DESIGN.md §15) and
+    a stream session parks these in its exact-reuse cache — feeding a cached
+    FrontendResult to ``render_backend`` is bitwise-identical to the fused
+    ``render`` because the backend consumes only ``proj``/``table`` and the
+    frontend counters ride through untouched.
+    """
+
+    proj: Any                        # Projected | ShardedProjected
+    table: Any                       # BinTable (group- or tile-level)
+    n_visible: jnp.ndarray           # gaussians surviving culling
+    n_candidate_tests: jnp.ndarray   # identification boundary tests (wide)
+    n_pairs_sort: jnp.ndarray        # sorting keys produced by identify
+    span_overflow: jnp.ndarray       # candidate-window dropped bins
 
 
 def _grid(cam, cfg: RenderConfig) -> GridSpec:
@@ -329,27 +351,104 @@ def _timed_eligible(cfg: RenderConfig, scene, cam, background) -> bool:
 
 
 def _render_mode(backend, scene, cam, cfg, background) -> RenderResult:
+    # The fused path IS the composition of the two halves (DESIGN.md §15):
+    # same stage calls, same dataflow, so splitting the program at this
+    # boundary (engine stream sessions jit each half separately) keeps
+    # images bitwise-identical to the one-program render.
+    front = _run_frontend(backend, scene, cam, cfg)
+    return _run_backend(backend, front, cam, cfg, background)
+
+
+def _frontend_spec(cfg: RenderConfig, grid: GridSpec) -> tuple:
+    """The (level, method, num_bins, capacity) the mode's frontend runs at.
+
+    gstg sorts once per GROUP with the group-identification method (the
+    paper's redundancy win); tile_baseline sorts per tile; group_baseline
+    sorts per group but with the tile method (Fig 13's 'large tile'
+    baseline).
+    """
     if cfg.mode == "gstg":
-        return _render_gstg(backend, scene, cam, cfg, background)
+        return "group", cfg.boundary_group, grid.num_groups, cfg.group_capacity
     if cfg.mode == "tile_baseline":
-        return _render_flat(backend, scene, cam, cfg, background, level="tile")
+        return "tile", cfg.boundary_tile, grid.num_tiles, cfg.tile_capacity
     if cfg.mode == "group_baseline":
-        return _render_flat(backend, scene, cam, cfg, background, level="group")
+        return "group", cfg.boundary_tile, grid.num_groups, cfg.group_capacity
     raise ValueError(f"unknown mode {cfg.mode!r}")
 
 
-def _render_flat(
-    backend: Backend, scene, cam, cfg, background, level: str
-) -> RenderResult:
-    """Conventional per-bin pipeline at tile or group granularity."""
+def _run_frontend(
+    backend: Backend, scene, cam, cfg: RenderConfig
+) -> FrontendResult:
+    """Stages 1-3 (+ merge when scene-sharded) for any mode: ONE sort per
+    bin at the mode's granularity. Per-shard + stable merge when sharded."""
     grid = _grid(cam, cfg)
-    if level == "tile":
-        bins_xy = grid.num_tiles
-        capacity = cfg.tile_capacity
+    level, method, num_bins, capacity = _frontend_spec(cfg, grid)
+    proj, table, (n_tests, n_pairs, n_span) = _frontend(
+        backend, scene, cam, grid, level, method, num_bins, capacity,
+        resolve_feature_gather(cfg),
+    )
+    return FrontendResult(
+        proj=proj,
+        table=table,
+        n_visible=proj_valid_count(proj),
+        n_candidate_tests=n_tests,
+        n_pairs_sort=n_pairs,
+        span_overflow=n_span,
+    )
+
+
+def _run_backend(
+    backend: Backend, front: FrontendResult, cam, cfg: RenderConfig, background
+) -> RenderResult:
+    """Stages 4-6 on a FrontendResult: bitmask/compact/rasterize for gstg,
+    direct per-bin rasterization for the baselines."""
+    grid = _grid(cam, cfg)
+    proj, table = front.proj, front.table
+
+    if cfg.mode == "gstg":
+        # 4) Bitmask generation (BGM): tile-granularity tests on group
+        #    entries. On the ASIC this overlaps GSM; in XLA the two ops have
+        #    no data dependence and schedule freely (table order does not
+        #    affect masks: masks are per-entry — which is also why bitmasks
+        #    need no cross-shard pass: they run on the already-merged table).
+        masks = backend.bitmasks(
+            proj, table, grid, cfg.boundary_tile, chunk=cfg.chunk
+        )
+        # 5) RM FIFO: per-tile compaction by bitmask (linear, order-
+        #    preserving). Materialized by the reference backend; virtual
+        #    (in-register) for the fused pallas RM, which still reports the
+        #    same length/overflow stats.
+        compacted = backend.compact(table, masks, grid, cfg.tile_capacity)
+        # 6) Small-tile rasterization.
+        rast = backend.rasterize_groups(
+            proj,
+            table,
+            masks,
+            compacted,
+            grid,
+            background=background,
+            chunk=cfg.chunk,
+            early_exit=cfg.early_exit,
+            tile_capacity=cfg.tile_capacity,
+        )
+        stats = RenderStats(
+            n_visible=front.n_visible,
+            n_candidate_tests=front.n_candidate_tests,
+            n_pairs_sort=front.n_pairs_sort,
+            sort_ops=sort_op_count(table.lengths),
+            n_bit_tests=masks.n_bit_tests,
+            fifo_ops=wide_count_sum(table.lengths) * grid.tiles_per_group,
+            alpha_ops=rast.alpha_ops,
+            blend_ops=rast.blend_ops,
+            tile_entries=compacted.tile_entries,
+            overflow=table.overflow + compacted.overflow,
+            span_overflow=front.span_overflow,
+        )
+        return RenderResult(image=rast.image, stats=stats)
+
+    if cfg.mode == "tile_baseline":
         raster_grid = grid
     else:
-        bins_xy = grid.num_groups
-        capacity = cfg.group_capacity
         # Rasterize at group granularity: treat groups as (large) tiles.
         raster_grid = GridSpec(
             width=grid.n_groups_x * grid.group,
@@ -358,11 +457,6 @@ def _render_flat(
             group=grid.group,
             span=cfg.span,
         )
-
-    proj, table, (n_tests, n_pairs, n_span) = _frontend(
-        backend, scene, cam, grid, level, cfg.boundary_tile, bins_xy, capacity,
-        resolve_feature_gather(cfg),
-    )
     rast = backend.rasterize_tiles(
         proj,
         table,
@@ -373,9 +467,9 @@ def _render_flat(
     )
     image = rast.image[: cam.height, : cam.width]
     stats = RenderStats(
-        n_visible=proj_valid_count(proj),
-        n_candidate_tests=n_tests,
-        n_pairs_sort=n_pairs,
+        n_visible=front.n_visible,
+        n_candidate_tests=front.n_candidate_tests,
+        n_pairs_sort=front.n_pairs_sort,
         sort_ops=sort_op_count(table.lengths),
         n_bit_tests=jnp.zeros((), jnp.int32),
         fifo_ops=jnp.zeros((), wide_count_dtype()),
@@ -383,60 +477,49 @@ def _render_flat(
         blend_ops=rast.blend_ops,
         tile_entries=jnp.sum(table.lengths),
         overflow=table.overflow,
-        span_overflow=n_span,
+        span_overflow=front.span_overflow,
     )
     return RenderResult(image=image, stats=stats)
 
 
-def _render_gstg(backend: Backend, scene, cam, cfg, background) -> RenderResult:
-    """The paper's pipeline: Fig 9."""
-    grid = _grid(cam, cfg)
+def render_frontend(
+    scene: SceneLike, cam: Camera, cfg: RenderConfig
+) -> FrontendResult:
+    """The frontend HALF of :func:`render` as its own entry point.
 
-    # 1-3) Group identification + group-wise sorting — ONE sort per group,
-    #    shared by gf^2 tiles. Per-shard + stable merge when scene-sharded.
-    proj, gtable, (n_tests, n_pairs, n_span) = _frontend(
-        backend, scene, cam, grid, "group", cfg.boundary_group,
-        grid.num_groups, cfg.group_capacity, resolve_feature_gather(cfg),
-    )
+    Runs project -> identify -> bin (-> merge when scene-sharded) and
+    returns the :class:`FrontendResult` that :func:`render_backend` turns
+    into pixels. The split is camera-pose-heavy but pixel-free: everything
+    here depends on the pose, nothing on the background or the raster
+    loop — which is what makes frontend results reusable across identical
+    poses (engine/stream.py) and speculatively precomputable off the
+    critical path (DESIGN.md §15).
+    """
+    backend = get_backend(cfg.backend)
+    scene = _scene_for_render(scene, cfg)
+    if _timed_eligible(cfg, scene, cam, None):
+        backend = TimedBackend(backend)
+    return _run_frontend(backend, scene, cam, cfg)
 
-    # 4) Bitmask generation (BGM): tile-granularity tests on group entries.
-    #    On the ASIC this overlaps GSM; in XLA the two ops have no data
-    #    dependence and schedule freely (gtable order does not affect masks:
-    #    masks are per-entry — which is also why bitmasks need no cross-shard
-    #    pass: they run on the already-merged table).
-    masks = backend.bitmasks(proj, gtable, grid, cfg.boundary_tile, chunk=cfg.chunk)
 
-    # 5) RM FIFO: per-tile compaction by bitmask (linear, order-preserving).
-    #    Materialized by the reference backend; virtual (in-register) for the
-    #    fused pallas RM, which still reports the same length/overflow stats.
-    compacted = backend.compact(gtable, masks, grid, cfg.tile_capacity)
+def render_backend(
+    front: FrontendResult,
+    cam: Camera,
+    cfg: RenderConfig,
+    background: Optional[jnp.ndarray] = None,
+) -> RenderResult:
+    """The backend HALF of :func:`render`: pixels from a FrontendResult.
 
-    # 6) Small-tile rasterization.
-    rast = backend.rasterize_groups(
-        proj,
-        gtable,
-        masks,
-        compacted,
-        grid,
-        background=background,
-        chunk=cfg.chunk,
-        early_exit=cfg.early_exit,
-        tile_capacity=cfg.tile_capacity,
-    )
-    stats = RenderStats(
-        n_visible=proj_valid_count(proj),
-        n_candidate_tests=n_tests,
-        n_pairs_sort=n_pairs,
-        sort_ops=sort_op_count(gtable.lengths),
-        n_bit_tests=masks.n_bit_tests,
-        fifo_ops=wide_count_sum(gtable.lengths) * grid.tiles_per_group,
-        alpha_ops=rast.alpha_ops,
-        blend_ops=rast.blend_ops,
-        tile_entries=compacted.tile_entries,
-        overflow=gtable.overflow + compacted.overflow,
-        span_overflow=n_span,
-    )
-    return RenderResult(image=rast.image, stats=stats)
+    ``render_backend(render_frontend(scene, cam, cfg), cam, cfg, bg)`` is
+    bitwise-identical to ``render(scene, cam, cfg, bg)`` — the fused path
+    is literally this composition (tests/test_stream.py). Only the static
+    geometry of ``cam`` is read (grid + crop); the pose was consumed by the
+    frontend.
+    """
+    backend = get_backend(cfg.backend)
+    if _timed_eligible(cfg, front, cam, background):
+        backend = TimedBackend(backend)
+    return _run_backend(backend, front, cam, cfg, background)
 
 
 def frontend_stats(
@@ -621,6 +704,41 @@ def _render_with_traced_camera(cfg: RenderConfig, width, height, znear, zfar):
             width=width, height=height, znear=znear, zfar=zfar,
         )
         return render(scene, cam, cfg, background)
+
+    return one
+
+
+def _frontend_with_traced_camera(cfg: RenderConfig, width, height, znear, zfar):
+    """The frontend-program closure the engine handle jits (DESIGN.md §15):
+    same traced-camera convention as ``_render_with_traced_camera`` minus
+    the background (the frontend never reads it)."""
+
+    def one(scene, R, t, fx, fy, cx, cy):
+        cam = Camera(
+            R=R, t=t, fx=fx, fy=fy, cx=cx, cy=cy,
+            width=width, height=height, znear=znear, zfar=zfar,
+        )
+        return render_frontend(scene, cam, cfg)
+
+    return one
+
+
+def _backend_with_static_geometry(cfg: RenderConfig, width, height, znear, zfar):
+    """The backend-program closure the engine handle jits (DESIGN.md §15).
+
+    The backend reads only the STATIC camera geometry (grid + crop), so the
+    closure bakes a placeholder pose in — the traced inputs are the
+    FrontendResult pytree and the background.
+    """
+    geom_cam = Camera(
+        R=np.eye(3, dtype=np.float32), t=np.zeros(3, np.float32),
+        fx=np.float32(1.0), fy=np.float32(1.0),
+        cx=np.float32(0.0), cy=np.float32(0.0),
+        width=width, height=height, znear=znear, zfar=zfar,
+    )
+
+    def one(front, background):
+        return render_backend(front, geom_cam, cfg, background)
 
     return one
 

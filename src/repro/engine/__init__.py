@@ -13,10 +13,14 @@ from repro.engine.handle import (
     default_renderer,
     open,
 )
+from repro.engine.stream import StreamRenderer, pose_key, predict_next_camera
 
 __all__ = [
     "Renderer",
+    "StreamRenderer",
     "close_default_renderers",
     "default_renderer",
     "open",
+    "pose_key",
+    "predict_next_camera",
 ]

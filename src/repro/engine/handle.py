@@ -57,9 +57,12 @@ from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
 from repro.core.pipeline import (
     CameraBatch,
+    FrontendResult,
     RenderConfig,
     RenderResult,
     _background_array,
+    _backend_with_static_geometry,
+    _frontend_with_traced_camera,
     _render_with_traced_camera,
     register_render_cache,
     resolve_feature_gather,
@@ -326,6 +329,7 @@ class Renderer:
         self._counters = {
             "submitted": 0, "completed": 0, "batches": 0, "padded_lanes": 0,
         }
+        self._streams: List[Any] = []
         self._closed = False
 
     # -- committed-state introspection --------------------------------------
@@ -472,22 +476,37 @@ class Renderer:
             self._fn_stats["hits"] += 1
             return fn
         self._fn_stats["misses"] += 1
-        one = _render_with_traced_camera(
-            self._cfg, cam.width, cam.height, cam.znear, cam.zfar
-        )
-        if self._cfg.timing:
-            # Timed-stage mode (DESIGN.md §14): the closure runs EAGERLY so
-            # core.pipeline installs TimedBackend and fences each stage's own
-            # jit'd program; under the usual outer jit every input is a
-            # tracer and no stage could be timed. Bitwise-identical pixels
-            # either way (tests/test_obs.py).
-            fn = one if kind == "single" else _timed_batch(one)
-        else:
-            fn = (
-                jax.jit(one)
-                if kind == "single"
-                else jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, None)))
+        geom = (cam.width, cam.height, cam.znear, cam.zfar)
+        if kind in ("frontend", "backend"):
+            # The split programs (DESIGN.md §15): the frontend consumes the
+            # traced pose, the backend consumes a FrontendResult pytree +
+            # background — together bitwise-identical to the fused 'single'
+            # program (tests/test_stream.py).
+            one = (
+                _frontend_with_traced_camera(self._cfg, *geom)
+                if kind == "frontend"
+                else _backend_with_static_geometry(self._cfg, *geom)
             )
+            # Timed-stage mode runs the closure eagerly, same rationale as
+            # below: only concrete inputs let TimedBackend fence stages.
+            fn = one if self._cfg.timing else jax.jit(one)
+        else:
+            one = _render_with_traced_camera(self._cfg, *geom)
+            if self._cfg.timing:
+                # Timed-stage mode (DESIGN.md §14): the closure runs EAGERLY
+                # so core.pipeline installs TimedBackend and fences each
+                # stage's own jit'd program; under the usual outer jit every
+                # input is a tracer and no stage could be timed. Bitwise-
+                # identical pixels either way (tests/test_obs.py).
+                fn = one if kind == "single" else _timed_batch(one)
+            else:
+                fn = (
+                    jax.jit(one)
+                    if kind == "single"
+                    else jax.jit(
+                        jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, None))
+                    )
+                )
         while len(self._fns) >= _FN_CACHE_MAX:
             self._fns.pop(next(iter(self._fns)))
         self._fns[key] = fn
@@ -544,6 +563,65 @@ class Renderer:
             jnp.float32(cam.cx), jnp.float32(cam.cy),
             _background_array(background),
         )
+
+    def render_frontend(self, cam: Camera) -> FrontendResult:
+        """Run ONLY the frontend half (project -> identify -> bin -> merge)
+        for one camera — the separately compiled program the stream sessions
+        cache and speculate over (DESIGN.md §15). Feed the result to
+        :meth:`render_backend` for pixels."""
+        self._check_open()
+        self._resolve_tile_params(cam)
+        fn = self._fn("frontend", cam)
+        return fn(
+            self._scene,
+            jnp.asarray(cam.R), jnp.asarray(cam.t),
+            jnp.float32(cam.fx), jnp.float32(cam.fy),
+            jnp.float32(cam.cx), jnp.float32(cam.cy),
+        )
+
+    def render_backend(
+        self,
+        front: FrontendResult,
+        cam: Camera,
+        background: Optional[jnp.ndarray] = None,
+    ) -> RenderResult:
+        """Run ONLY the backend half (bitmask -> compact -> rasterize) on a
+        :class:`FrontendResult`. ``render_backend(render_frontend(cam), cam)``
+        is bitwise-identical to ``render(cam)`` — only the static geometry
+        of ``cam`` is read (it must match the frontend camera's)."""
+        self._check_open()
+        self._resolve_tile_params(cam)
+        fn = self._fn("backend", cam)
+        return fn(front, _background_array(background))
+
+    def open_stream(
+        self,
+        *,
+        cache_frames: int = 32,
+        spec_depth: int = 2,
+        speculate: bool = True,
+    ):
+        """Open a :class:`~repro.engine.stream.StreamRenderer` session over
+        this handle (DESIGN.md §15): a bounded exact-reuse frontend cache
+        (``cache_frames`` poses, LRU) plus a background speculation worker
+        (``spec_depth`` pending predictions, drop-oldest; ``speculate=False``
+        keeps reuse-only behavior). The stream registers its cache in the
+        render-cache registry and is closed by :meth:`close`."""
+        self._check_open()
+        from repro.engine.stream import StreamRenderer
+
+        stream = StreamRenderer(
+            self, cache_frames=cache_frames, spec_depth=spec_depth,
+            speculate=speculate,
+        )
+        with self._worker_lock:
+            self._streams.append(stream)
+        return stream
+
+    def _forget_stream(self, stream) -> None:
+        with self._worker_lock:
+            if stream in self._streams:
+                self._streams.remove(stream)
 
     def render_batch(
         self,
@@ -735,6 +813,12 @@ class Renderer:
         handle is unusable afterwards."""
         if self._closed:
             return
+        # Streams first: their speculation workers dispatch through this
+        # handle's programs and their caches hold device arrays.
+        with self._worker_lock:
+            streams = list(self._streams)
+        for stream in streams:
+            stream.close()
         self._queue.close()                 # wakes the worker; drains pending
         worker = self._worker
         if worker is not None and worker.is_alive():

@@ -54,6 +54,24 @@ def parse_args(argv=None):
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=60.0,
                     help="Poisson arrival rate (req/s)")
+    ap.add_argument("--streams", type=int, default=0,
+                    help="serve N interactive camera STREAMS instead of the "
+                         "stateless request mix (DESIGN.md §15): each stream "
+                         "replays an orbit path in frame order through its "
+                         "own stream session (exact-reuse frontend cache + "
+                         "speculative pre-binning); frames of different "
+                         "streams interleave round-robin in the arrival "
+                         "process")
+    ap.add_argument("--stream-frames", type=int, default=24,
+                    help="frames per stream (orbit poses cycle every 16 "
+                         "frames, so longer streams lap into the exact-reuse "
+                         "cache)")
+    ap.add_argument("--spec-depth", type=int, default=2,
+                    help="per-stream speculation queue depth (predictions "
+                         "pending beyond it drop oldest-first; 0 disables "
+                         "speculation)")
+    ap.add_argument("--stream-cache-frames", type=int, default=32,
+                    help="per-stream frontend-cache capacity (poses, LRU)")
     ap.add_argument("--scenes", default="train,truck",
                     help="comma-separated scene ids to serve")
     ap.add_argument("--gaussians", type=int, default=1500,
@@ -163,13 +181,31 @@ def main(argv=None):
     pools = {(w, h): orbit_cameras(16, 4.5, w, h) for w, h in resolutions}
 
     rng = np.random.default_rng(args.seed)
-    offsets = poisson_arrivals(args.requests, args.rate, seed=args.seed)
-    load = []
-    for i, t in enumerate(offsets):
-        res = resolutions[rng.integers(len(resolutions))]
-        sid = scene_ids[rng.integers(len(scene_ids))]
-        cam = pools[res][i % len(pools[res])]
-        load.append((t, RenderRequest(i, sid, cam, cfg)))
+    if args.streams > 0:
+        # Stream mode: N orbiting viewers, frames interleaved round-robin
+        # across streams (arrival order preserves per-stream frame order —
+        # the property the stream-affinity bucketing relies on).
+        total = args.streams * args.stream_frames
+        offsets = poisson_arrivals(total, args.rate, seed=args.seed)
+        load = []
+        i = 0
+        for frame in range(args.stream_frames):
+            for s in range(args.streams):
+                res = resolutions[s % len(resolutions)]
+                sid = scene_ids[s % len(scene_ids)]
+                cam = pools[res][frame % len(pools[res])]
+                load.append((offsets[i], RenderRequest(
+                    i, sid, cam, cfg, stream_id=f"s{s}")))
+                i += 1
+    else:
+        total = args.requests
+        offsets = poisson_arrivals(total, args.rate, seed=args.seed)
+        load = []
+        for i, t in enumerate(offsets):
+            res = resolutions[rng.integers(len(resolutions))]
+            sid = scene_ids[rng.integers(len(scene_ids))]
+            cam = pools[res][i % len(pools[res])]
+            load.append((t, RenderRequest(i, sid, cam, cfg)))
 
     server = RenderServer(
         scenes,
@@ -185,6 +221,8 @@ def main(argv=None):
         # full default grid.
         autotune_opts={"top_k": 2, "warmup": 1, "reps": 2}
         if args.autotune else None,
+        stream_cache_frames=args.stream_cache_frames,
+        spec_depth=args.spec_depth,
     )
 
     # Pre-commit every scene through the engine handle (DESIGN.md §11): the
@@ -210,12 +248,30 @@ def main(argv=None):
                   f"{args.device_budget_mb} MB budget "
                   f"(shards={hs['physical_shards']})")
 
-    print(f"serving {args.requests} requests @ {args.rate:.0f} req/s "
-          f"({len(scene_ids)} scenes x {len(resolutions)} resolutions, "
-          f"backend={args.backend}, devices={use_dev}, "
-          f"scene_shards={shards})")
+    if args.streams > 0:
+        print(f"serving {args.streams} streams x {args.stream_frames} frames "
+              f"@ {args.rate:.0f} req/s (spec_depth={args.spec_depth}, "
+              f"backend={args.backend}, devices={use_dev}, "
+              f"scene_shards={shards})")
+    else:
+        print(f"serving {total} requests @ {args.rate:.0f} req/s "
+              f"({len(scene_ids)} scenes x {len(resolutions)} resolutions, "
+              f"backend={args.backend}, devices={use_dev}, "
+              f"scene_shards={shards})")
     results = server.run(load, realtime=not args.no_realtime)
     print(server.stats.format())
+    if args.streams > 0:
+        # Quiesce speculation before any snapshot: in-flight spec runs
+        # would otherwise race the trace/metrics dumps below.
+        for s in server._streams.values():
+            s.wait_spec_idle(timeout=30)
+    stream_summaries = server.stream_stats() if args.streams > 0 else {}
+    for name, st in sorted(stream_summaries.items()):
+        print(f"stream {name}: frames={st['frames']} "
+              f"hit_rate={st['hit_rate']:.2f} "
+              f"(hits={st['hits']} misses={st['misses']}) "
+              f"spec: runs={st['spec_runs']} hits={st['spec_hits']} "
+              f"dropped={st['spec_dropped']} discarded={st['spec_discarded']}")
     if args.autotune:
         for (sid, _), handle in sorted(
             server._renderers.items(), key=lambda kv: kv[0][0]
@@ -245,15 +301,23 @@ def main(argv=None):
         }
         for rid, res in sorted(results.items()):
             req = by_id[rid]
-            expect = np.asarray(
-                refs[req.scene_id]
-                .render_batch([req.camera], pad_to=pad_shape)
-                .image[0]
-            )
+            if getattr(req, "stream_id", None) is not None:
+                # Stream frames ran the single-camera split path; their
+                # stateless reference is the single-camera fused program
+                # (bitwise-identical by the §15 invariant) — NOT the padded
+                # batch program, whose different shape may fuse differently.
+                expect = np.asarray(refs[req.scene_id].render(req.camera).image)
+            else:
+                expect = np.asarray(
+                    refs[req.scene_id]
+                    .render_batch([req.camera], pad_to=pad_shape)
+                    .image[0]
+                )
             if not (expect == res.image).all():
                 parity_failures += 1
                 print(f"parity MISMATCH: request {rid} (scene "
-                      f"{req.scene_id!r}) diverges from the replicated path")
+                      f"{req.scene_id!r}) diverges from the "
+                      f"{'stateless' if req.stream_id else 'replicated'} path")
         for ref in refs.values():
             ref.close()
         print(f"parity-check: {len(results) - parity_failures}/{len(results)} "
@@ -296,14 +360,23 @@ def main(argv=None):
     server.close()   # releases every committed handle (jit caches + layouts)
 
     # CI assertions: nothing lost, latency distribution sane, parity holds.
-    lost = args.requests - len(results) - server.stats.rejected
+    lost = total - len(results) - server.stats.rejected
     p99 = server.stats.summary()["p99_ms"]
     ok = (
         lost == 0 and len(results) > 0 and math.isfinite(p99)
         and parity_failures == 0
     )
+    # Stream smokes must actually exercise reuse: a stream run whose
+    # sessions never hit the exact-reuse cache (hit_rate 0 with laps in the
+    # load) would silently stop testing the tentpole.
+    if args.streams > 0 and args.stream_frames > 16:
+        hits = sum(st["hits"] for st in stream_summaries.values())
+        if hits == 0:
+            ok = False
+            print("render_serve: stream load lapped its orbit but recorded "
+                  "0 exact-reuse hits")
     print(f"render_serve: {'OK' if ok else 'FAILED'} "
-          f"(completed={len(results)}/{args.requests}, "
+          f"(completed={len(results)}/{total}, "
           f"rejected={server.stats.rejected}, lost={lost}, p99={p99:.1f}ms, "
           f"parity_failures={parity_failures})")
     return 0 if ok else 1

@@ -44,6 +44,11 @@ class RenderRequest:
     cfg: Any
     deadline: Optional[float] = None
     enqueue_time: Optional[float] = None
+    # Stream affinity (DESIGN.md §15): frames of one interactive camera
+    # stream set a shared stream_id so they bucket together and route to
+    # that stream's session (its frontend cache + speculation worker)
+    # instead of the stateless batch path. None = stateless request.
+    stream_id: Optional[str] = None
     # Lifecycle stamps (DESIGN.md §14): monotonic clock readings keyed
     # enqueue/batch_form/dispatch/device_done/resolve, written by the queue,
     # scheduler, and server as the request moves through them. A mutable
@@ -59,10 +64,17 @@ class RenderRequest:
         """The bucketing key: everything the compiled executable specializes
         on, plus the scene id (one ``render_batch`` call serves one scene).
         Mirrors ``core.pipeline.batch_signature`` with scene identity added.
+        Stream frames additionally key on their ``stream_id`` — that is the
+        whole affinity mechanism: a stream's frames can only ever share a
+        bucket with each other, and the FIFO queue + in-order bucket appends
+        preserve per-stream frame order through to the session dispatch.
         """
         cam = self.camera
-        return (self.scene_id, self.cfg, cam.width, cam.height,
-                cam.znear, cam.zfar)
+        sig = (self.scene_id, self.cfg, cam.width, cam.height,
+               cam.znear, cam.zfar)
+        if self.stream_id is not None:
+            sig += ("stream", self.stream_id)
+        return sig
 
 
 class RequestQueue:

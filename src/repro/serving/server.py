@@ -83,6 +83,9 @@ class RenderServer:
         device_budget_mb: Optional[float] = None,
         autotune: bool = False,
         autotune_opts: Optional[dict] = None,
+        stream_cache_frames: int = 32,
+        spec_depth: int = 2,
+        speculate: bool = True,
         clock=time.monotonic,
     ):
         self.scenes = dict(scenes)
@@ -91,6 +94,9 @@ class RenderServer:
         self.device_budget_mb = device_budget_mb
         self.autotune = autotune
         self.autotune_opts = autotune_opts
+        self.stream_cache_frames = stream_cache_frames
+        self.spec_depth = spec_depth
+        self.speculate = speculate
         self._clock = clock
         self.queue = RequestQueue(queue_depth, clock=clock)
         self.scheduler = BucketingScheduler(max_batch, max_wait, clock=clock)
@@ -98,6 +104,11 @@ class RenderServer:
         self.results: Dict[int, RequestResult] = {}
         self._renderers: Dict[Tuple[str, object], object] = {}
         self._committed: Dict[Tuple[str, int], object] = {}
+        # Stream sessions (DESIGN.md §15): one StreamRenderer per
+        # (scene, cfg, stream_id), opened lazily on the stream's first
+        # frame over the shared committed handle; the handle's close()
+        # closes its streams.
+        self._streams: Dict[Tuple[str, object, str], object] = {}
 
     @property
     def mesh(self):
@@ -176,6 +187,28 @@ class RenderServer:
             self._renderers[key] = handle
         return handle
 
+    def stream_for(self, req: RenderRequest):
+        """The stream session serving ``req``'s (scene, cfg, stream_id),
+        opened on first use over the shared committed handle."""
+        key = (req.scene_id, req.cfg, req.stream_id)
+        stream = self._streams.get(key)
+        if stream is None or stream.closed:
+            handle = self.commit(req.scene_id, req.cfg)
+            stream = handle.open_stream(
+                cache_frames=self.stream_cache_frames,
+                spec_depth=self.spec_depth,
+                speculate=self.speculate,
+            )
+            self._streams[key] = stream
+        return stream
+
+    def stream_stats(self) -> Dict[str, dict]:
+        """Per-stream session counters keyed by registry cache name."""
+        return {
+            s.name: s.stats()
+            for s in self._streams.values() if not s.closed
+        }
+
     # -- scheduling / dispatch ----------------------------------------------
 
     def _pump_queue(self, now: Optional[float] = None) -> int:
@@ -207,6 +240,9 @@ class RenderServer:
 
     def _dispatch(self, bucket: Bucket) -> None:
         reqs = bucket.requests
+        if getattr(reqs[0], "stream_id", None) is not None:
+            self._dispatch_stream(bucket)
+            return
         handle = self.commit(reqs[0].scene_id, reqs[0].cfg)
         batch = CameraBatch.from_cameras([r.camera for r in reqs])
         # Fixed dispatch shape: every bucket of a signature pads to
@@ -263,15 +299,75 @@ class RenderServer:
                     args={"scene_id": req.scene_id},
                 )
 
+    def _dispatch_stream(self, bucket: Bucket) -> None:
+        """Dispatch a stream bucket: frames run IN ORDER through the
+        stream's session (exact-reuse cache + speculation), one frame per
+        device dispatch — the signature guarantees every request here
+        belongs to one stream, and queue FIFO + in-order bucket appends
+        preserved the frame order. Output is bitwise-identical to the
+        stateless batch path (the session reuses frontends only on exact
+        pose-key hits; tests/test_stream.py)."""
+        reqs = bucket.requests
+        stream = self.stream_for(reqs[0])
+
+        before = render_cache_info()
+        t0 = self._clock()
+        images = [np.asarray(stream.render(r.camera).image) for r in reqs]
+        t1 = self._clock()
+        after = render_cache_info()
+
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.complete(
+                "serve/dispatch", t0, t1, category="serving",
+                args={"batch_size": len(reqs), "padded": len(reqs),
+                      "stream": stream.name,
+                      "signature": repr(bucket.signature)},
+            )
+        latencies = [t1 - r.enqueue_time for r in reqs]
+        self.stats.record_dispatch(
+            bucket.signature,
+            batch_size=len(reqs),
+            padded_size=len(reqs),     # per-frame dispatch: no pad lanes
+            render_s=t1 - t0,
+            latencies_s=latencies,
+            cache_before=before,
+            cache_after=after,
+        )
+        for req, img, lat in zip(reqs, images, latencies):
+            missed = req.deadline is not None and t1 > req.deadline
+            if missed:
+                self.stats.count_deadline_miss()
+            self.results[req.request_id] = RequestResult(
+                request_id=req.request_id,
+                image=img,
+                latency_s=lat,
+                batch_size=len(reqs),
+                signature=bucket.signature,
+                deadline_missed=missed,
+            )
+            stamps = getattr(req, "stamps", None)
+            if stamps is not None:
+                stamps["dispatch"] = t0
+                stamps["device_done"] = t1
+                stamps["resolve"] = self._clock()
+                emit_request_spans(
+                    tracer, req.request_id, stamps,
+                    args={"scene_id": req.scene_id,
+                          "stream": stream.name},
+                )
+
     # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
         """Close every committed handle (evicting their jit caches and scene
-        layouts). The server can keep admitting afterwards — handles reopen
-        lazily — but a shutdown path should not rely on that."""
+        layouts — each handle also closes its stream sessions). The server
+        can keep admitting afterwards — handles reopen lazily — but a
+        shutdown path should not rely on that."""
         while self._renderers:
             self._renderers.pop(next(iter(self._renderers))).close()
         self._committed.clear()
+        self._streams.clear()
 
     def __enter__(self) -> "RenderServer":
         return self

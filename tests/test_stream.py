@@ -1,0 +1,373 @@
+"""Frame-coherent camera streams (repro.engine.stream, DESIGN.md §15).
+
+Covers the acceptance contract of the frontend/backend split + stream
+session layer:
+  * split parity: render_frontend -> render_backend is bitwise-identical
+    to the fused render, at the core level and through the handle;
+  * stream-vs-stateless bitwise identity on a lapping orbit (exact-reuse
+    hits engaged) for both backends x replicated + scene_shards=2;
+  * pose_key: injective across distinct cameras, stable across rebuilt
+    bit-identical ones (hypothesis property test, randomized fallback);
+  * mid-stream resolution bump invalidates the frontend cache;
+  * the speculation queue is bounded (drop-oldest, spec_dropped counted)
+    and a float32-exact dolly yields a real speculative hit, bitwise;
+  * close() stops the worker and empties the render-cache registry —
+    including when the HANDLE is closed first.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import make_camera, orbit_cameras
+from repro.core.pipeline import (
+    RenderConfig,
+    render,
+    render_backend,
+    render_cache_clear,
+    render_cache_info,
+    render_frontend,
+)
+from repro.engine.stream import pose_key, predict_next_camera
+from repro.obs import get_registry
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests degrade gracefully without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _assert_images_bitwise(a, b, what):
+    assert (np.asarray(a) == np.asarray(b)).all(), f"{what}: image diverges"
+
+
+def _dolly_cameras(n, step=0.25, w=64, h=64):
+    """A constant-rotation dolly whose translation steps are exactly
+    representable in float32 — the trajectory the constant-velocity
+    predictor must extrapolate bit-exactly."""
+    base = make_camera((0.0, 1.0, 4.5), (0, 0, 0), w, h)
+    out = []
+    for i in range(n):
+        t = (base.t.astype(np.float32)
+             + np.float32(i) * np.array([0.0, 0.0, step], np.float32))
+        out.append(dataclasses.replace(base, t=t))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Split parity: frontend ∘ backend == fused render.
+# ---------------------------------------------------------------------------
+
+
+def test_core_split_matches_fused_render(tiny_scene, base_cfg, cam128):
+    """The public render_frontend/render_backend pair reproduces render()
+    bitwise — the fused path is literally backend(frontend(...)), so this
+    pins the decomposition itself."""
+    fused = render(tiny_scene, cam128, base_cfg)
+    front = render_frontend(tiny_scene, cam128, base_cfg)
+    split = render_backend(front, cam128, base_cfg)
+    _assert_images_bitwise(split.image, fused.image, "split vs fused")
+    for name in ("n_visible", "n_pairs_sort", "tile_entries", "overflow"):
+        assert (np.asarray(getattr(split.stats, name))
+                == np.asarray(getattr(fused.stats, name))).all(), name
+
+
+# Fast lane: the reference pairs (both shard counts); pallas interpret runs
+# ride the slow lane, same as the handle parity suite.
+STREAM_CASES = [
+    pytest.param(
+        backend, shards,
+        marks=[] if backend == "reference" else [pytest.mark.slow],
+        id=f"{backend}-D{shards}",
+    )
+    for backend in ("reference", "pallas")
+    for shards in (1, 2)
+]
+
+
+@pytest.mark.parametrize("backend,shards", STREAM_CASES)
+def test_stream_bitwise_vs_stateless(tiny_scene, backend, shards):
+    """A stream lapping a 4-pose orbit twice returns every frame
+    bitwise-identical to stateless handle.render — lap 2 is served from
+    the exact-reuse frontend cache, so the hits are exercised, and the
+    verify-or-discard invariant means reuse can never change a pixel."""
+    cfg = RenderConfig(
+        tile=16, group=64, group_capacity=256, tile_capacity=256,
+        backend=backend, scene_shards=shards,
+    )
+    cams = orbit_cameras(4, 4.5, 64, 64)
+    with engine.open(tiny_scene, cfg) as r, r.open_stream() as s:
+        for lap in range(2):
+            for i, cam in enumerate(cams):
+                out = s.render(cam)
+                ref = r.render(cam)
+                _assert_images_bitwise(
+                    out.image, ref.image,
+                    f"lap {lap} frame {i} ({backend}, D={shards})")
+        stats = s.stats()
+    assert stats["frames"] == 8
+    assert stats["hits"] == 4, f"lap 2 should be all hits: {stats}"
+    assert stats["misses"] == 4
+
+
+def test_mid_stream_resolution_bump_invalidates(tiny_scene, base_cfg):
+    """Changing the camera geometry mid-stream (a resolution bump) drops
+    every cached table — they were binned for another grid — and the
+    stream keeps rendering correctly at the new resolution."""
+    cam_lo = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+    cam_hi = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 96, 96)
+    with engine.open(tiny_scene, base_cfg) as r, r.open_stream() as s:
+        s.render(cam_lo)
+        s.render(cam_lo)
+        info = s.cache_info()
+        assert (info["hits"], info["misses"], info["currsize"]) == (1, 1, 1)
+
+        out_hi = s.render(cam_hi)
+        stats = s.stats()
+        assert stats["invalidations"] == 1
+        assert s.cache_info()["currsize"] == 1   # only the new-grid entry
+        _assert_images_bitwise(
+            out_hi.image, r.render(cam_hi).image, "post-bump frame")
+
+        # the old-resolution entry really is gone: re-rendering it misses
+        s.render(cam_lo)
+        assert s.stats()["invalidations"] == 2
+        assert s.cache_info()["misses"] == 3
+
+
+# ---------------------------------------------------------------------------
+# pose_key: injective on distinct poses, stable on bit-identical ones.
+# ---------------------------------------------------------------------------
+
+
+def _cam_from(eye, fx, w):
+    cam = make_camera(eye, (0, 0, 0), w, w)
+    return dataclasses.replace(cam, fx=float(np.float32(fx)))
+
+
+if HAVE_HYPOTHESIS:
+    finite = st.floats(min_value=-8.0, max_value=8.0,
+                       allow_nan=False, width=32)
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        eye_a=st.tuples(finite, finite,
+                        st.floats(min_value=2.0, max_value=8.0, width=32)),
+        eye_b=st.tuples(finite, finite,
+                        st.floats(min_value=2.0, max_value=8.0, width=32)),
+        fx=st.floats(min_value=10.0, max_value=500.0, width=32),
+        w=st.sampled_from([32, 64, 96]),
+    )
+    def test_pose_key_property(eye_a, eye_b, fx, w):
+        a = _cam_from(eye_a, fx, w)
+        a2 = _cam_from(eye_a, fx, w)      # rebuilt, bit-identical fields
+        b = _cam_from(eye_b, fx, w)
+        assert pose_key(a) == pose_key(a2), "stability on identical bits"
+        same_bits = (
+            np.asarray(a.R, np.float32).tobytes()
+            == np.asarray(b.R, np.float32).tobytes()
+            and np.asarray(a.t, np.float32).tobytes()
+            == np.asarray(b.t, np.float32).tobytes()
+        )
+        if not same_bits:
+            assert pose_key(a) != pose_key(b), "injectivity on distinct poses"
+
+
+def test_pose_key_randomized_fallback():
+    """Deterministic randomized sweep (runs with or without hypothesis):
+    500 cameras with distinct float32 poses -> 500 distinct keys, and a
+    rebuilt camera always maps to the same key. Also pins the field-
+    confusion cases a flat byte-concat would alias: intrinsics swapped
+    between fx/fy, and width/height swapped."""
+    rng = np.random.default_rng(0)
+    keys = set()
+    for _ in range(500):
+        eye = tuple(float(v) for v in rng.uniform(-5, 5, 3))
+        cam = make_camera((eye[0], eye[1], abs(eye[2]) + 2.0), (0, 0, 0),
+                          64, 64)
+        k = pose_key(cam)
+        assert pose_key(dataclasses.replace(cam)) == k
+        keys.add(k)
+    assert len(keys) == 500, "distinct poses collided"
+
+    base = dataclasses.replace(
+        make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 96),
+        fx=50.0, fy=70.0,
+    )
+    swapped_f = dataclasses.replace(base, fx=70.0, fy=50.0)
+    assert pose_key(base) != pose_key(swapped_f)
+    tall = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 96, 64)
+    assert pose_key(base) != pose_key(tall)
+
+
+def test_predict_next_camera_constant_components():
+    """Bitwise-equal components propagate EXACTLY (the short-circuit that
+    makes float32-representable dollies speculatable), and a geometry
+    change disables prediction."""
+    c0, c1, c2 = _dolly_cameras(3)
+    pred = predict_next_camera(c0, c1)
+    assert pred is not None
+    assert pose_key(pred) == pose_key(c2), "dolly extrapolation not exact"
+    assert np.asarray(pred.R).tobytes() == np.asarray(c1.R).tobytes()
+
+    resized = dataclasses.replace(c1, width=96, height=96)
+    assert predict_next_camera(c0, resized) is None
+
+
+# ---------------------------------------------------------------------------
+# Speculation: bounded queue, real hits, discard accounting.
+# ---------------------------------------------------------------------------
+
+
+def test_spec_queue_bounded_drop_oldest(tiny_scene, base_cfg):
+    """With the worker parked, every observed transition enqueues a
+    prediction; the queue never grows past spec_depth and each overflow
+    counts one spec_dropped (metric included)."""
+    cams = _dolly_cameras(8)
+    dropped_before = get_registry().counter("spec.dropped_total").value
+    with engine.open(tiny_scene, base_cfg) as r:
+        with r.open_stream(spec_depth=2) as s:
+            s._ensure_spec_worker = lambda: None   # park the worker
+            for cam in cams:
+                s.render(cam)
+                assert len(s._spec_queue) <= s.spec_depth
+            stats = s.stats()
+    # frames 0-1 prime the predictor; every later frame predicts one pose
+    # into a depth-2 queue that is never drained.
+    assert stats["spec_dropped"] >= 3, stats
+    assert stats["spec_runs"] == 0
+    dropped_after = get_registry().counter("spec.dropped_total").value
+    assert dropped_after - dropped_before >= stats["spec_dropped"]
+
+
+def test_dolly_speculative_hit_bitwise(tiny_scene, base_cfg):
+    """On a float32-exact dolly the constant-velocity predictor pre-runs
+    the frontend for the NEXT pose: later frames arrive as speculative
+    hits and stay bitwise-identical to the stateless render."""
+    cams = _dolly_cameras(6)
+    with engine.open(tiny_scene, base_cfg) as r, r.open_stream() as s:
+        for i, cam in enumerate(cams):
+            assert s.wait_spec_idle(timeout=120.0)
+            out = s.render(cam)
+            _assert_images_bitwise(
+                out.image, r.render(cam).image, f"dolly frame {i}")
+        assert s.wait_spec_idle(timeout=120.0)
+        stats = s.stats()
+    # frames 0-1 must miss (nothing to extrapolate from); with the worker
+    # drained before every frame, frames 2+ are all speculative hits.
+    assert stats["spec_hits"] == 4, stats
+    assert stats["hits"] == 4 and stats["misses"] == 2, stats
+    assert stats["spec_runs"] >= stats["spec_hits"]
+
+
+def test_speculate_false_runs_nothing(tiny_scene, base_cfg):
+    cams = _dolly_cameras(4)
+    with engine.open(tiny_scene, base_cfg) as r:
+        with r.open_stream(speculate=False) as s:
+            for cam in cams:
+                s.render(cam)
+            stats = s.stats()
+    assert stats["spec_runs"] == 0 and stats["spec_hits"] == 0
+    assert stats["misses"] == 4
+
+
+def test_cache_frames_evicts_lru(tiny_scene, base_cfg):
+    """cache_frames bounds the per-stream frontend cache: rendering more
+    distinct poses than the bound keeps currsize pinned and re-rendering
+    the evicted oldest pose misses again."""
+    cams = orbit_cameras(6, 4.5, 64, 64)
+    with engine.open(tiny_scene, base_cfg) as r:
+        with r.open_stream(cache_frames=4, speculate=False) as s:
+            for cam in cams:
+                s.render(cam)
+            assert s.cache_info()["currsize"] == 4
+            s.render(cams[0])                       # evicted -> miss
+            assert s.stats()["misses"] == 7
+            s.render(cams[-1])                      # still resident -> hit
+            assert s.stats()["hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: registry hygiene on close (stream-first and handle-first).
+# ---------------------------------------------------------------------------
+
+
+def test_stream_close_empties_registry(tiny_scene, base_cfg):
+    """The regression pinned by the issue: a closed stream must leave the
+    render-cache registry empty (its frontend cache evicted + unregistered),
+    same contract as the handle cache."""
+    render_cache_clear()
+    engine.close_default_renderers()
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+
+    r = engine.open(tiny_scene, base_cfg)
+    s = r.open_stream(speculate=False)
+    s.render(cam)
+    assert render_cache_info()[s.name]["currsize"] == 1
+    assert render_cache_clear() is None or True    # global clear reaches it
+    assert render_cache_info()[s.name]["currsize"] == 0
+
+    s.render(cam)
+    s.close()
+    info = render_cache_info()
+    assert s.name not in info, "closed stream left its cache registered"
+    with pytest.raises(RuntimeError, match="closed"):
+        s.render(cam)
+    s.close()                                       # idempotent
+
+    r.close()
+    info = render_cache_info()
+    assert r.cache_name not in info
+    assert sum(k["currsize"] for k in info.values()) == 0, (
+        f"registry not empty after close: {info}"
+    )
+
+
+def test_handle_close_closes_streams(tiny_scene, base_cfg):
+    """Closing the HANDLE closes every open stream first — no orphaned
+    speculation worker, no stale registry entry."""
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+    r = engine.open(tiny_scene, base_cfg)
+    s1 = r.open_stream(speculate=False)
+    s2 = r.open_stream(speculate=False)
+    s1.render(cam)
+    r.close()
+    assert s1.closed and s2.closed
+    info = render_cache_info()
+    assert s1.name not in info and s2.name not in info
+    assert sum(k["currsize"] for k in info.values()) == 0
+
+
+def test_stream_discard_accounting(tiny_scene, base_cfg):
+    """Unused speculative entries count as discarded when dropped — the
+    'verify-or-discard' bookkeeping the obs counters expose."""
+    cams = _dolly_cameras(3)
+    with engine.open(tiny_scene, base_cfg) as r, r.open_stream() as s:
+        for cam in cams:
+            s.render(cam)
+        assert s.wait_spec_idle(timeout=120.0)
+        # the worker just pre-ran the frame-3 pose; never render it
+        if s.cache_info()["currsize"] > 3:
+            s.cache_clear()
+            assert s.stats()["spec_discarded"] >= 1
+
+
+@pytest.mark.parametrize("bad", [
+    dict(cache_frames=0), dict(spec_depth=-1),
+])
+def test_stream_rejects_bad_params(tiny_scene, base_cfg, bad):
+    with engine.open(tiny_scene, base_cfg) as r:
+        with pytest.raises(ValueError):
+            r.open_stream(**bad)
+
+
+def test_closed_handle_refuses_open_stream(tiny_scene, base_cfg):
+    r = engine.open(tiny_scene, base_cfg)
+    r.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        r.open_stream()
