@@ -1,0 +1,253 @@
+"""Gateway fleet bench: scheduling overhead + failover episode cost.
+
+Two honest measurements of the gateway tier (DESIGN.md §16), both over
+IN-PROCESS workers (one shared jax runtime — subprocess workers would
+measure child cold-start, and in-process dispatches serialize on the
+runtime lock, so fleet *scaling* is only real multi-host; what is
+measurable here is what the gateway itself costs):
+
+  * overhead: the same request sequence rendered by a worker directly
+    (batched ``dispatch`` calls, no gateway) vs routed through
+    ``RenderGateway`` with that single worker — admission, routing,
+    dispatcher-thread handoff, and resolve bookkeeping are the delta.
+    Acceptance floor: overhead <= MAX_OVERHEAD_FRAC of the direct run.
+  * chaos: 2 workers under the same load with one killed after 25% of
+    completions — reports completion ratio (must be 1.0: no request is
+    silently dropped), failovers/retries, and the p99 penalty vs the
+    healthy 2-worker run.
+
+Writes the schema-versioned ``BENCH_gateway_<host>.json`` at the repo root
+(committed trajectory, like BENCH_autotune/BENCH_stream). ``--smoke`` runs
+a tiny config and validates the schema without the overhead floor.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import re
+import time
+
+SCHEMA = "repro.bench_gateway/v1"
+
+DEFAULT_GAUSSIANS = 4000
+DEFAULT_REQUESTS = 48
+MAX_OVERHEAD_FRAC = 0.35
+
+
+def _host() -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "-", platform.node() or "unknown")
+
+
+def default_out_path(host: str | None = None) -> str:
+    return f"BENCH_gateway_{host or _host()}.json"
+
+
+def validate_bench(doc: dict, max_overhead: float | None = None) -> list:
+    """Schema check; returns problems (empty = valid). ``max_overhead``
+    additionally enforces the gateway-overhead acceptance ceiling."""
+    errs = []
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, expected {SCHEMA!r}")
+    for key in ("host", "timestamp", "backend", "config", "overhead",
+                "chaos"):
+        if key not in doc:
+            errs.append(f"missing top-level key {key!r}")
+    ov = doc.get("overhead") or {}
+    for k in ("direct_s", "gateway_s", "overhead_frac", "requests"):
+        if not isinstance(ov.get(k), (int, float)):
+            errs.append(f"overhead: non-numeric {k!r}")
+    ch = doc.get("chaos") or {}
+    for k in ("requests", "completed", "failed", "failovers", "retries",
+              "p99_ms", "healthy_p99_ms"):
+        if not isinstance(ch.get(k), (int, float)):
+            errs.append(f"chaos: non-numeric {k!r}")
+    if ch.get("completed") != ch.get("requests"):
+        errs.append(
+            f"chaos: completed {ch.get('completed')} != requests "
+            f"{ch.get('requests')} — a request was lost under failover")
+    if ch.get("failed", 0) != 0:
+        errs.append(f"chaos: {ch.get('failed')} requests failed")
+    if isinstance(ch.get("failovers"), (int, float)) and ch["failovers"] < 1:
+        errs.append("chaos: induced kill produced no failover")
+    if max_overhead is not None:
+        frac = ov.get("overhead_frac")
+        if isinstance(frac, (int, float)) and frac > max_overhead:
+            errs.append(
+                f"gateway overhead {frac:.2%} above the "
+                f"{max_overhead:.0%} acceptance ceiling")
+    return errs
+
+
+def _load(scene_ids, cams, cfg, n, base_id=0):
+    from repro.serving.queue import RenderRequest
+
+    return [
+        (0.0, RenderRequest(base_id + i, scene_ids[i % len(scene_ids)],
+                            cams[i % len(cams)], cfg))
+        for i in range(n)
+    ]
+
+
+def run(
+    scenes=("train", "truck"),
+    n_gaussians: int = DEFAULT_GAUSSIANS,
+    width: int = 96,
+    height: int = 96,
+    backend: str = "reference",
+    requests: int = DEFAULT_REQUESTS,
+    max_batch: int = 4,
+    out_path: str | None = None,
+    max_overhead: float | None = MAX_OVERHEAD_FRAC,
+) -> dict:
+    import jax
+
+    from benchmarks.common import emit
+    from repro.core import orbit_cameras
+    from repro.core.gaussians import scene_like_paper
+    from repro.core.pipeline import RenderConfig
+    from repro.gateway import RenderGateway
+    from repro.gateway.worker import InprocWorker
+    from repro.serving.queue import RenderRequest
+    from repro.serving.stats import percentile
+
+    scene_ids = list(scenes)
+    cfg = RenderConfig(mode="gstg", backend=backend, span=6)
+    built = {
+        sid: scene_like_paper(jax.random.key(i), sid, n_gaussians)
+        for i, sid in enumerate(scene_ids)
+    }
+    cams = orbit_cameras(8, 4.5, width, height)
+
+    def make_worker(wid):
+        w = InprocWorker(wid, built, max_batch=max_batch)
+        for j, sid in enumerate(scene_ids):      # warm every program
+            w.dispatch([RenderRequest(-(hash(wid) % 1000) * 10 - j - 1,
+                                      sid, cams[0], cfg)])
+        return w
+
+    # -- overhead: direct worker dispatch vs the same load via the gateway --
+    w = make_worker("direct")
+    load = _load(scene_ids, cams, cfg, requests)
+    t0 = time.perf_counter()
+    for i in range(0, len(load), max_batch):
+        w.dispatch([r for _, r in load[i:i + max_batch]])
+    direct_s = time.perf_counter() - t0
+    w.shutdown()
+
+    w = make_worker("gw0")
+    gw = RenderGateway([w])
+    t0 = time.perf_counter()
+    res = gw.run(load)
+    gateway_s = time.perf_counter() - t0
+    assert len(res) == requests, gw.failed
+    gw.close()
+    overhead = {
+        "requests": requests,
+        "direct_s": direct_s,
+        "gateway_s": gateway_s,
+        "overhead_frac": (gateway_s - direct_s) / direct_s,
+        "direct_fps": requests / direct_s,
+        "gateway_fps": requests / gateway_s,
+    }
+    emit("gateway_overhead", gateway_s / requests * 1e6,
+         f"{overhead['overhead_frac']:+.1%} vs direct "
+         f"({overhead['direct_fps']:.1f} -> "
+         f"{overhead['gateway_fps']:.1f} fps)")
+
+    # -- chaos: 2 workers, one killed after 25% of completions --------------
+    def fleet_run(kill: bool):
+        ws = [make_worker("c0" if kill else "h0"),
+              make_worker("c1" if kill else "h1")]
+        gw = RenderGateway(ws, retry_backoff_s=0.005)
+        kw = ws[0].worker_id if kill else None
+        res = gw.run(
+            _load(scene_ids, cams, cfg, requests, base_id=1000),
+            kill_worker=kw,
+            kill_after=max(requests // 4, 1) if kill else None,
+        )
+        summary = gw.summary()
+        lat = [r.latency_s for r in res.values()]
+        gw.close()
+        return res, summary, percentile(lat, 99) * 1e3
+
+    _, healthy, healthy_p99 = fleet_run(kill=False)
+    res, chaos_sum, chaos_p99 = fleet_run(kill=True)
+    chaos = {
+        "requests": requests,
+        "completed": len(res),
+        "failed": chaos_sum["failed"],
+        "failovers": chaos_sum["failovers"],
+        "retries": chaos_sum["retries"],
+        "duplicates": chaos_sum["duplicates"],
+        "p99_ms": chaos_p99,
+        "healthy_p99_ms": healthy_p99,
+        "p99_penalty_frac": (chaos_p99 - healthy_p99) / healthy_p99
+        if healthy_p99 else 0.0,
+    }
+    emit("gateway_chaos", chaos_p99 * 1e3,
+         f"{chaos['completed']}/{requests} after kill "
+         f"({chaos['failovers']} failovers, {chaos['retries']} retries, "
+         f"p99 {healthy_p99:.0f}->{chaos_p99:.0f}ms)")
+
+    doc = {
+        "schema": SCHEMA,
+        "host": _host(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "jax_backend": jax.default_backend(),
+        "backend": backend,
+        "config": {
+            "scenes": scene_ids,
+            "n_gaussians": n_gaussians,
+            "width": width,
+            "height": height,
+            "requests": requests,
+            "max_batch": max_batch,
+        },
+        "overhead": overhead,
+        "chaos": chaos,
+    }
+    errs = validate_bench(doc, max_overhead=max_overhead)
+    if errs:
+        raise AssertionError("BENCH document invalid: " + "; ".join(errs))
+    out = out_path or default_out_path()
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    emit("bench_gateway_written", 0.0, out)
+    return doc
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, schema-only validation, writes under "
+                         "results/ (never clobbers the committed BENCH)")
+    ap.add_argument("--gaussians", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--backend", default="reference")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        import os
+
+        os.makedirs("results", exist_ok=True)
+        run(
+            scenes=("train",),
+            n_gaussians=args.gaussians or 300,
+            width=64, height=64,
+            requests=args.requests or 12,
+            backend=args.backend,
+            out_path="results/BENCH_gateway_smoke.json",
+            max_overhead=None,
+        )
+    else:
+        run(
+            n_gaussians=args.gaussians or DEFAULT_GAUSSIANS,
+            requests=args.requests or DEFAULT_REQUESTS,
+            backend=args.backend,
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

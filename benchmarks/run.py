@@ -24,6 +24,7 @@ def main() -> None:
         bench_accel,
         bench_autotune,
         bench_boundaries,
+        bench_gateway,
         bench_render_walltime,
         bench_scene_scale,
         bench_serving,
@@ -43,6 +44,7 @@ def main() -> None:
         ("serving", bench_serving.run),
         ("scene_scale", bench_scene_scale.run),
         ("stream_reuse", bench_stream.run),
+        ("gateway_fleet", bench_gateway.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

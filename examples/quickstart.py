@@ -120,6 +120,31 @@ def main():
               f"hit_rate={sstats['hit_rate']:.2f} (lap 2 all hits), "
               f"bitwise == stateless: {bitwise}")
 
+    # 11) gateway fleet (DESIGN.md §16): two in-process workers behind a
+    #     RenderGateway; one is killed mid-load and every request STILL
+    #     completes — failover retries are idempotent and the pixels stay
+    #     bitwise-identical to a healthy run. (`repro-gateway` runs the
+    #     same thing over subprocess workers with their own jax runtimes.)
+    from repro.gateway import RenderGateway
+    from repro.gateway.worker import InprocWorker
+    from repro.serving.queue import RenderRequest
+
+    workers = [
+        InprocWorker(f"w{i}", {"quick": small}, max_batch=2)
+        for i in range(2)
+    ]
+    gw = RenderGateway(workers, retry_backoff_s=0.005)
+    load = [
+        (0.0, RenderRequest(i, "quick", cams[i % len(cams)], bcfg))
+        for i in range(6)
+    ]
+    res = gw.run(load, kill_worker="w0", kill_after=1)
+    s = gw.summary()
+    print(f"gateway fleet            : {len(res)}/6 completed after killing "
+          f"w0 ({s['failovers']} failover, {s['retries']} retries, "
+          f"{s['healthy_workers']} worker left)")
+    gw.close()
+
 
 if __name__ == "__main__":
     main()

@@ -115,4 +115,21 @@ python scripts/validate_trace.py \
 echo "== bench_stages smoke: measured per-stage spans, schema valid =="
 python benchmarks/bench_stages.py --smoke
 
+# Gateway chaos smoke (DESIGN.md §16): 2 subprocess workers (2 virtual
+# devices EACH, in their own jax runtimes) behind the gateway; w0 is
+# SIGKILLed after 3 completions mid-load. render_gateway exits non-zero
+# unless 100% of requests complete with finite p99, zero failures, and at
+# least one failover; validate_trace.py (gateway mode) then cross-checks
+# the gateway/route|retry|failover span counts against the gateway.*
+# counters and the embedded summary.
+echo "== gateway chaos smoke: 2 workers, induced kill, failover cross-check =="
+python -m repro.launch.render_gateway --workers 2 --devices-per-worker 2 \
+    --requests 16 --rate 200 --gaussians 400 --scenes train,truck \
+    --resolutions 96x96 --max-batch 4 --kill-worker auto --kill-after 3 \
+    --no-realtime \
+    --trace-json results/trace_gateway_smoke.json \
+    --metrics-json results/metrics_gateway_smoke.json
+python scripts/validate_trace.py \
+    results/trace_gateway_smoke.json results/metrics_gateway_smoke.json
+
 echo "check.sh: OK"

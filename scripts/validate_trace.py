@@ -31,7 +31,64 @@ from repro.obs import validate_chrome_trace
 MIN_STAGE_NAMES = 7
 
 
+def validate_gateway(trace_doc: dict, metrics_doc: dict) -> list:
+    """Gateway-mode checks (``repro.launch.render_gateway --trace-json``):
+    the rendering happens inside worker subprocesses, so there are no
+    stage/serving spans in the parent trace — instead the ``gateway/*``
+    span family must match the ``gateway.*`` counters and the embedded
+    summary one-to-one (route spans == routed, retry spans == retries,
+    failover spans == failovers, request spans == completed)."""
+    errs = list(validate_chrome_trace(trace_doc))
+    xs = [e for e in trace_doc.get("traceEvents", [])
+          if isinstance(e, dict) and e.get("ph") == "X"]
+    summary = trace_doc.get("summary", {})
+    if metrics_doc.get("schema") != "repro.metrics/v1":
+        errs.append(f"metrics schema != 'repro.metrics/v1': "
+                    f"{metrics_doc.get('schema')!r}")
+    counters = metrics_doc.get("counters", {})
+
+    spans = {}
+    for e in xs:
+        if e.get("cat") == "gateway":
+            spans[e["name"]] = spans.get(e["name"], 0) + 1
+    for name, counter, key in (
+        ("gateway/route", "gateway.routed_total", "routed"),
+        ("gateway/retry", "gateway.retries_total", "retries"),
+        ("gateway/failover", "gateway.failovers_total", "failovers"),
+    ):
+        n_span = spans.get(name, 0)
+        n_counter = counters.get(counter, 0)
+        n_summary = summary.get(key)
+        if not (n_span == n_counter == n_summary):
+            errs.append(
+                f"{name} spans = {n_span}, counters[{counter!r}] = "
+                f"{n_counter}, summary.{key} = {n_summary} — must agree")
+
+    req_ids = {e["args"]["request_id"] for e in xs
+               if e.get("cat") == "request" and e.get("name") == "request"}
+    completed = summary.get("completed")
+    done_counter = counters.get("gateway.completed_total")
+    for label, got in (
+        ("request spans in trace", len(req_ids)),
+        ("counters['gateway.completed_total']", done_counter),
+    ):
+        if got != completed:
+            errs.append(f"{label} = {got} but summary.completed = {completed}")
+
+    # An induced kill must leave a consistent failure record: a failover
+    # implies a worker-death counter and at least one retry span.
+    if summary.get("failovers", 0) > 0:
+        if counters.get("gateway.worker_deaths_total", 0) < 1:
+            errs.append("summary.failovers > 0 but "
+                        "counters['gateway.worker_deaths_total'] < 1")
+        if spans.get("gateway/retry", 0) < 1:
+            errs.append("summary.failovers > 0 but no gateway/retry spans")
+    return errs
+
+
 def validate(trace_doc: dict, metrics_doc: dict) -> list:
+    if trace_doc.get("summary", {}).get("gateway"):
+        return validate_gateway(trace_doc, metrics_doc)
     errs = list(validate_chrome_trace(trace_doc))
 
     xs = [e for e in trace_doc.get("traceEvents", [])
@@ -137,10 +194,12 @@ def main(argv) -> int:
         print(f"validate_trace: FAILED ({len(errs)} problems)")
         return 1
     n_events = len(trace_doc.get("traceEvents", []))
+    summary = trace_doc.get("summary", {})
+    tail = (f"failovers={summary.get('failovers')}" if summary.get("gateway")
+            else f"batches={summary.get('batches')}")
     print(f"validate_trace: OK ({n_events} events, "
           f"{trace_doc.get('dropped', 0)} dropped, "
-          f"completed={trace_doc['summary']['completed']}, "
-          f"batches={trace_doc['summary']['batches']})")
+          f"completed={summary.get('completed')}, {tail})")
     return 0
 
 

@@ -732,23 +732,42 @@ class Renderer:
     def _worker_loop(self) -> None:
         q, sched = self._queue, self._scheduler
         poll_s = max(min(sched.max_wait, 0.01), 0.001)
-        while True:
-            for req in q.get_batch(timeout=poll_s):
-                for bucket in sched.add(req):
-                    self._dispatch_bucket(bucket)
-            if self._flush_event.is_set():
-                self._flush_event.clear()
-                for req in q.drain():
+        try:
+            while True:
+                for req in q.get_batch(timeout=poll_s):
                     for bucket in sched.add(req):
                         self._dispatch_bucket(bucket)
-                for bucket in sched.flush_all():
+                if self._flush_event.is_set():
+                    self._flush_event.clear()
+                    for req in q.drain():
+                        for bucket in sched.add(req):
+                            self._dispatch_bucket(bucket)
+                    for bucket in sched.flush_all():
+                        self._dispatch_bucket(bucket)
+                for bucket in sched.poll():
                     self._dispatch_bucket(bucket)
-            for bucket in sched.poll():
-                self._dispatch_bucket(bucket)
-            if q.closed and len(q) == 0:
-                for bucket in sched.flush_all():
-                    self._dispatch_bucket(bucket)
-                return
+                if q.closed and len(q) == 0:
+                    for bucket in sched.flush_all():
+                        self._dispatch_bucket(bucket)
+                    return
+        except BaseException as exc:      # noqa: BLE001 — futures must terminate
+            # A crash OUTSIDE _dispatch_bucket's own handler (scheduler bug,
+            # queue misuse) would otherwise strand every outstanding future
+            # unresolved forever — and the gateway's failover accounting
+            # depends on futures always terminating.
+            self._fail_outstanding(exc)
+            raise
+
+    def _fail_outstanding(self, exc: BaseException) -> None:
+        """Terminate every tracked future with ``exc`` (queue + scheduler
+        pending are all in ``_outstanding``: submit tracks before enqueue)."""
+        with self._worker_lock:
+            futs, self._outstanding[:] = list(self._outstanding), []
+        self._queue.drain()
+        self._scheduler.flush_all()
+        for fut in futs:
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(exc)
 
     def _dispatch_bucket(self, bucket) -> None:
         reqs = bucket.requests
@@ -823,6 +842,13 @@ class Renderer:
         worker = self._worker
         if worker is not None and worker.is_alive():
             worker.join()
+        # A healthy worker resolved everything on the way out; if it died
+        # earlier (or dispatch left stragglers) the remaining futures must
+        # still terminate — callers blocked on .result() would otherwise
+        # hang forever.
+        self._fail_outstanding(RuntimeError(
+            f"Renderer {self.cache_name} closed before the request resolved"
+        ))
         self._closed = True
         self._worker = None
         unregister_render_cache(self.cache_name)

@@ -1,0 +1,48 @@
+"""Gateway tier: one front-end over a fleet of render workers (DESIGN.md §16).
+
+``RenderGateway`` admits (bounded queue), routes (scene-affinity +
+stream-sticky + least-loaded spill), health-checks (``ft.heartbeat``),
+and fails over (bounded retries + ``ft.elastic`` fleet replanning) across
+N workers — in-process :class:`InprocWorker` for tests,
+:class:`SubprocessWorker` children over line-JSON pipes for the
+``repro-gateway`` CLI. Importing this package must not import jax: the
+gateway is pure scheduling; device work lives inside workers
+(``repro.gateway.worker`` / ``repro.gateway.worker_main`` import jax on
+first use, mirroring the serving-layer split).
+"""
+from repro.gateway.gateway import (
+    FleetPlan,
+    GatewayResult,
+    NoWorkerAvailable,
+    RenderGateway,
+    WorkerTimeout,
+    plan_fleet,
+)
+
+__all__ = [
+    "FleetPlan",
+    "GatewayResult",
+    "NoWorkerAvailable",
+    "RenderGateway",
+    "WorkerTimeout",
+    "plan_fleet",
+    "InprocWorker",
+    "SubprocessWorker",
+    "WorkerDied",
+]
+
+
+def __getattr__(name: str):
+    # Lazy: InprocWorker pulls in serving.server (jax); SubprocessWorker is
+    # pure Python but lives with the wire protocol. Keeping both out of the
+    # eager import preserves the no-jax guarantee for gateway scheduling.
+    if name == "InprocWorker":
+        from repro.gateway.worker import InprocWorker
+        return InprocWorker
+    if name == "WorkerDied":
+        from repro.gateway.errors import WorkerDied
+        return WorkerDied
+    if name == "SubprocessWorker":
+        from repro.gateway.transport import SubprocessWorker
+        return SubprocessWorker
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

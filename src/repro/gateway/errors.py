@@ -1,0 +1,14 @@
+"""Gateway error types shared by both worker transports.
+
+Pure Python on purpose: :class:`WorkerDied` is raised by the in-process
+worker (which imports jax via its ``RenderServer``) AND by the subprocess
+transport (which must stay importable without jax — it runs in the
+gateway process, where all device work is delegated to children).
+"""
+from __future__ import annotations
+
+
+class WorkerDied(RuntimeError):
+    """A worker is gone (killed, crashed, or unresponsive past the
+    heartbeat timeout). The gateway treats every in-flight request on the
+    worker as retryable — the batch completed nothing."""

@@ -1,0 +1,304 @@
+"""Line-JSON subprocess transport: the out-of-process worker form.
+
+The gateway side (:class:`SubprocessWorker`, this module — pure Python, no
+jax) spawns ``python -m repro.gateway.worker_main`` and speaks a one-line-
+JSON request/response protocol over the child's stdin/stdout:
+
+  parent -> child   {"op": "ping|commit|dispatch|shutdown", "id": n, ...}
+  child  -> parent  {"id": n, "ok": true, ...}          (same order, 1:1)
+
+The child owns a full jax runtime (its own virtual-device set via
+``XLA_FLAGS`` in its environment) and a ``RenderServer``; the first line it
+emits is a ``{"ready": true}`` banner after scenes are built. Cameras ship
+with pose/translation as base64 raw bytes (dtype+shape alongside) so the
+child reconstructs BITWISE-identical ``Camera`` values — the parity
+invariant must survive the wire. Images come back the same way.
+
+Failure model: any transport fault — EOF (the child died, e.g. our
+``kill()``'s SIGKILL), a read timeout, a broken pipe, a protocol error, or
+an ``ok: false`` reply — raises :class:`WorkerDied` and the worker is done
+(the gateway never routes to it again; ``shutdown()`` reaps the process).
+That maps exactly onto the all-or-nothing dispatch contract: a child that
+died mid-batch completed none of it.
+"""
+from __future__ import annotations
+
+import base64
+import json
+import os
+import select
+import signal
+import subprocess
+import sys
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.gateway.errors import WorkerDied
+
+__all__ = ["SubprocessWorker", "WireResult", "encode_array", "decode_array"]
+
+
+def encode_array(arr) -> dict:
+    """numpy array -> JSON-safe {b64, dtype, shape} (bitwise round-trip)."""
+    import numpy as np
+
+    a = np.ascontiguousarray(arr)
+    return {
+        "b64": base64.b64encode(a.tobytes()).decode("ascii"),
+        "dtype": str(a.dtype),
+        "shape": list(a.shape),
+    }
+
+
+def decode_array(doc: dict):
+    import numpy as np
+
+    return np.frombuffer(
+        base64.b64decode(doc["b64"]), dtype=np.dtype(doc["dtype"])
+    ).reshape(doc["shape"])
+
+
+def encode_camera(cam) -> dict:
+    # fx/fy/cx/cy/znear/zfar are Python floats: JSON round-trips them
+    # exactly (repr-based); only the arrays need the byte-exact path.
+    return {
+        "R": encode_array(cam.R),
+        "t": encode_array(cam.t),
+        "fx": float(cam.fx), "fy": float(cam.fy),
+        "cx": float(cam.cx), "cy": float(cam.cy),
+        "width": int(cam.width), "height": int(cam.height),
+        "znear": float(cam.znear), "zfar": float(cam.zfar),
+    }
+
+
+def encode_request(req) -> dict:
+    # cfg intentionally does NOT ship: the child renders every request under
+    # its OWN RenderConfig (built from the same CLI flags as the parent's),
+    # which is what guarantees one compiled program per child signature.
+    return {
+        "request_id": req.request_id,
+        "scene_id": req.scene_id,
+        "stream_id": req.stream_id,
+        "camera": encode_camera(req.camera),
+    }
+
+
+@dataclass
+class WireResult:
+    """A completed request as decoded off the wire (duck-types the serving
+    tier's ``RequestResult`` where the gateway cares: ``.image``)."""
+
+    request_id: int
+    image: Any
+    latency_s: float
+    batch_size: int
+
+
+class SubprocessWorker:
+    """A fleet member living in a child process.
+
+    ``argv`` is the full child command line (the CLI composes it around
+    ``repro.gateway.worker_main``); ``scene_ids`` mirrors what the child was
+    told to host. The parent keeps the committed-scene set from the child's
+    replies, so affinity routing never pays an RPC.
+    """
+
+    def __init__(
+        self,
+        worker_id: str,
+        scene_ids: Sequence[str],
+        argv: Sequence[str],
+        *,
+        max_batch: int = 8,
+        read_timeout_s: float = 120.0,
+        ready_timeout_s: float = 300.0,
+        env: Optional[Dict[str, str]] = None,
+    ):
+        self.worker_id = worker_id
+        self.scene_ids = frozenset(scene_ids)
+        self.max_batch = max_batch
+        self.read_timeout_s = read_timeout_s
+        self._lock = threading.Lock()      # serializes the req/resp pairing
+        self._seq = 0
+        self._buf = b""
+        self._committed: set = set()
+        self._killed = False
+        self.proc = subprocess.Popen(
+            list(argv),
+            stdin=subprocess.PIPE,
+            stdout=subprocess.PIPE,
+            stderr=None,                   # child logs inherit our stderr
+            env=env,
+            bufsize=0,
+        )
+        banner = self._read_line(ready_timeout_s)
+        if not banner.get("ready"):
+            self._reap()
+            raise WorkerDied(
+                f"worker {worker_id} failed to start: {banner!r}"
+            )
+        self.devices = int(banner.get("devices", 1))
+
+    # -- wire ----------------------------------------------------------------
+
+    def _read_line(self, timeout_s: float) -> dict:
+        """One JSON line off the child's stdout, or WorkerDied on
+        EOF/timeout/garbage. select-based so a hung child can't hang us."""
+        fd = self.proc.stdout.fileno()
+        deadline = time.monotonic() + timeout_s
+        while b"\n" not in self._buf:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                self._reap()
+                raise WorkerDied(
+                    f"worker {self.worker_id} unresponsive for {timeout_s}s"
+                )
+            ready, _, _ = select.select([fd], [], [], min(remaining, 0.5))
+            if not ready:
+                continue
+            chunk = os.read(fd, 1 << 20)
+            if not chunk:                  # EOF: the child is gone
+                self._reap()
+                raise WorkerDied(
+                    f"worker {self.worker_id} exited "
+                    f"(code {self.proc.poll()})"
+                )
+            self._buf += chunk
+        line, self._buf = self._buf.split(b"\n", 1)
+        try:
+            return json.loads(line)
+        except ValueError as e:
+            self._reap()
+            raise WorkerDied(
+                f"worker {self.worker_id} wrote a non-protocol line: "
+                f"{line[:200]!r}"
+            ) from e
+
+    def _rpc(self, msg: dict, timeout_s: Optional[float] = None) -> dict:
+        with self._lock:
+            if not self.alive():
+                raise WorkerDied(f"worker {self.worker_id} is dead")
+            self._seq += 1
+            msg = dict(msg, id=self._seq)
+            try:
+                self.proc.stdin.write(
+                    (json.dumps(msg) + "\n").encode("ascii")
+                )
+                self.proc.stdin.flush()
+            except (BrokenPipeError, OSError) as e:
+                self._reap()
+                raise WorkerDied(
+                    f"worker {self.worker_id} pipe broke: {e}"
+                ) from e
+            rep = self._read_line(
+                self.read_timeout_s if timeout_s is None else timeout_s
+            )
+            if rep.get("id") != self._seq or not rep.get("ok"):
+                err = rep.get("error", f"bad reply {rep!r}")
+                self._reap()
+                raise WorkerDied(f"worker {self.worker_id}: {err}")
+            if "committed" in rep:
+                self._committed = set(rep["committed"])
+            return rep
+
+    # -- worker contract -----------------------------------------------------
+
+    def alive(self) -> bool:
+        return not self._killed and self.proc.poll() is None
+
+    def ping(self) -> None:
+        self._rpc({"op": "ping"}, timeout_s=min(self.read_timeout_s, 10.0))
+
+    def committed_scene_ids(self) -> set:
+        return set(self._committed)
+
+    def commit(self, scene_id: str, cfg=None) -> None:
+        """Pre-commit ``scene_id`` in the child (the child applies its own
+        config — ``cfg`` is accepted for contract parity and ignored)."""
+        self._rpc({"op": "commit", "scene_id": scene_id})
+
+    def dispatch(self, requests: List[Any]) -> Dict[int, WireResult]:
+        rep = self._rpc({
+            "op": "dispatch",
+            "requests": [encode_request(r) for r in requests],
+        })
+        out: Dict[int, WireResult] = {}
+        for res in rep.get("results", []):
+            out[res["request_id"]] = WireResult(
+                request_id=res["request_id"],
+                image=decode_array(res["image"]),
+                latency_s=float(res.get("latency_s", 0.0)),
+                batch_size=int(res.get("batch_size", 1)),
+            )
+        missing = [r.request_id for r in requests if r.request_id not in out]
+        if missing:
+            self._reap()
+            raise WorkerDied(
+                f"worker {self.worker_id} lost requests {missing}"
+            )
+        return out
+
+    def kill(self) -> None:
+        """SIGKILL — a real node loss, no goodbye. The in-flight dispatch
+        (if any) sees EOF and raises; failover takes it from there."""
+        self._killed = True
+        try:
+            self.proc.send_signal(signal.SIGKILL)
+        except (ProcessLookupError, OSError):
+            pass
+
+    def shutdown(self) -> None:
+        if self.proc.poll() is None and not self._killed:
+            try:
+                self._rpc({"op": "shutdown"}, timeout_s=10.0)
+            except WorkerDied:
+                pass
+        self._reap()
+
+    def _reap(self) -> None:
+        if self.proc.poll() is None:
+            self.proc.kill()
+        try:
+            self.proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            pass
+        for pipe in (self.proc.stdin, self.proc.stdout):
+            try:
+                pipe.close()
+            except OSError:
+                pass
+
+    def __repr__(self) -> str:
+        state = "alive" if self.alive() else "dead"
+        return (
+            f"<SubprocessWorker {self.worker_id} pid={self.proc.pid} {state} "
+            f"scenes={sorted(self.scene_ids)}>"
+        )
+
+
+def worker_argv(
+    worker_id: str,
+    scene_specs: Sequence[str],
+    *,
+    devices: Optional[int] = None,
+    python: Optional[str] = None,
+    extra: Sequence[str] = (),
+) -> List[str]:
+    """The child command line for ``repro.gateway.worker_main``.
+
+    ``scene_specs`` are ``sid:global_index`` pairs — the GLOBAL index keys
+    the synthetic scene's RNG, so a worker hosting a subset of the fleet's
+    scenes still builds each one bit-identically to a single-server run
+    over the full list (the parity invariant).
+    """
+    argv = [
+        python or sys.executable, "-m", "repro.gateway.worker_main",
+        "--worker-id", worker_id,
+        "--scenes", ",".join(scene_specs),
+    ]
+    if devices:
+        argv += ["--devices", str(devices)]
+    argv += list(extra)
+    return argv

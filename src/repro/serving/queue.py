@@ -19,6 +19,8 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
+from repro.obs.metrics import get_registry  # pure Python — no jax
+
 
 class QueueFull(Exception):
     """Raised by ``put_nowait`` when the queue is at depth — the caller must
@@ -102,6 +104,14 @@ class RequestQueue:
         with self._cond:
             return len(self._items)
 
+    def _count_rejected(self) -> None:
+        # Backpressure used to be visible only to the caller; the registry
+        # counter makes it a first-class signal (--metrics-json, gateway
+        # admission dashboards). Counts failed put ATTEMPTS, same as the
+        # local ``rejected`` field it mirrors.
+        self.rejected += 1
+        get_registry().counter("queue.rejected_total").inc()
+
     def _admit(self, req: RenderRequest) -> None:
         if req.enqueue_time is None:
             req = dataclasses.replace(req, enqueue_time=self._clock())
@@ -121,7 +131,7 @@ class RequestQueue:
             while len(self._items) >= self.maxsize and not self._closed:
                 remaining = None if deadline is None else deadline - self._clock()
                 if remaining is not None and remaining <= 0:
-                    self.rejected += 1
+                    self._count_rejected()
                     return False
                 self._cond.wait(remaining)
             if self._closed:
@@ -135,7 +145,7 @@ class RequestQueue:
             if self._closed:
                 raise QueueClosed("put_nowait() on a closed queue")
             if len(self._items) >= self.maxsize:
-                self.rejected += 1
+                self._count_rejected()
                 raise QueueFull(f"queue at depth {self.maxsize}")
             self._admit(req)
 

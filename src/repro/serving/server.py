@@ -155,6 +155,13 @@ class RenderServer:
 
     # -- committed handles --------------------------------------------------
 
+    @property
+    def committed_scene_ids(self) -> frozenset:
+        """Scenes with at least one committed handle — the gateway tier's
+        scene-affinity signal (route to the worker already holding the
+        scene on device before paying a commit elsewhere)."""
+        return frozenset(sid for sid, _cfg in self._renderers)
+
     def commit(self, scene_id: str, cfg):
         """The shared engine handle for ``(scene_id, cfg)``, opened on first
         use. Public so drivers can pre-commit scenes before taking load — an

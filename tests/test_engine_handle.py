@@ -268,6 +268,34 @@ def test_cancelled_future_does_not_kill_worker(tiny_scene, base_cfg):
         assert fut.result(timeout=60) is not None
 
 
+def test_worker_crash_fails_outstanding_futures(tiny_scene, base_cfg):
+    """A crash OUTSIDE the dispatch handler (scheduler bug) must terminate
+    every outstanding future with the exception — callers blocked on
+    .result() (and the gateway's failover accounting above them) depend on
+    futures always terminating."""
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+    with engine.open(tiny_scene, base_cfg, max_batch=2, max_wait=30.0) as r:
+        def bad_add(req):
+            raise RuntimeError("scheduler exploded")
+
+        r._scheduler.add = bad_add
+        fut = r.submit(cam)
+        with pytest.raises(RuntimeError, match="scheduler exploded"):
+            fut.result(timeout=600)
+
+
+def test_close_fails_futures_the_worker_never_resolved(tiny_scene, base_cfg):
+    """close() on a handle whose worker never got to a pending submit must
+    fail that future, not strand it PENDING forever."""
+    r = engine.open(tiny_scene, base_cfg, max_batch=2, max_wait=30.0)
+    r._ensure_worker = lambda: None        # a worker that never runs
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+    fut = r.submit(cam)
+    r.close()
+    with pytest.raises(RuntimeError, match="closed before the request"):
+        fut.result(timeout=60)
+
+
 def test_dropped_handle_is_not_pinned_by_registry(tiny_scene, base_cfg):
     """A handle dropped WITHOUT close() must still be collectable (the
     registry holds only weak references) and its registry entry must
@@ -381,7 +409,7 @@ def test_console_script_entry_points_import():
     entries = dict(
         re.findall(r'^([\w-]+)\s*=\s*"([^"]+)"', block.group(1), re.M)
     )
-    assert set(entries) == {"repro-render", "repro-serve"}
+    assert set(entries) == {"repro-render", "repro-serve", "repro-gateway"}
     for name, target in entries.items():
         module, _, attr = target.partition(":")
         fn = getattr(importlib.import_module(module), attr)

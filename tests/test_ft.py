@@ -45,3 +45,115 @@ def test_elastic_plan_multi_pod():
 
 def test_elastic_plan_infeasible():
     assert plan_elastic_mesh(8, model_parallel=16, global_batch=256) is None
+
+
+# -- edge cases brought live by the gateway tier (DESIGN.md §16) --------------
+
+
+def test_miss_timeout_boundary_is_strict():
+    # dead_hosts uses a STRICT > comparison: exactly at the timeout a host
+    # is still alive — the gateway polices this every router step, so an
+    # off-by-one here would flap workers at the boundary.
+    mon = HeartbeatMonitor(n_hosts=2, miss_timeout_s=10.0)
+    mon.report(0, 0, 1.0, now_s=100.0)
+    mon.report(1, 0, 1.0, now_s=100.0)
+    assert mon.dead_hosts(now_s=110.0) == []
+    assert mon.dead_hosts(now_s=110.0 + 1e-6) == [0, 1]
+
+
+def test_never_seen_hosts_are_dead():
+    # A host that never reported is dead from the start: liveness must be
+    # proven, not presumed (the gateway seeds a ping at dispatcher start
+    # precisely because of this).
+    mon = HeartbeatMonitor(n_hosts=3, miss_timeout_s=10.0)
+    mon.report(1, 0, 1.0, now_s=0.0)
+    assert mon.dead_hosts(now_s=5.0) == [0, 2]
+
+
+def test_straggler_quorum_suppresses_report():
+    # Below quorum (max(2, n//2) reporters) check() must stay silent — a
+    # mostly-idle fleet cannot out-vote itself into straggler flags.
+    mon = HeartbeatMonitor(n_hosts=8, window=4, min_factor=1.5)
+    for h in range(3):                       # 3 < 8 // 2
+        mon.report(h, 0, 5.0 if h == 0 else 1.0, now_s=0.0)
+    assert mon.check(0) is None
+    for h in range(3, 8):                    # full fleet reporting
+        mon.report(h, 0, 1.0, now_s=0.0)
+    assert mon.check(0).stragglers == [0]
+
+
+def test_straggler_window_eviction_forgives():
+    # A recovered host ages its slow samples out of the bounded window:
+    # only the LATEST latency is judged, so one fast report clears the flag.
+    mon = HeartbeatMonitor(n_hosts=8, window=4, min_factor=1.5)
+    for h in range(8):
+        mon.report(h, 0, 4.0 if h == 2 else 1.0, now_s=0.0)
+    assert mon.check(0).stragglers == [2]
+    mon.report(2, 1, 1.0, now_s=1.0)
+    assert mon.check(1) is None
+
+
+def test_dead_host_revives_on_report():
+    mon = HeartbeatMonitor(n_hosts=2, miss_timeout_s=10.0)
+    mon.report(0, 0, 1.0, now_s=0.0)
+    mon.report(1, 0, 1.0, now_s=0.0)
+    assert mon.dead_hosts(now_s=50.0) == [0, 1]
+    mon.report(0, 1, 1.0, now_s=50.0)
+    assert mon.dead_hosts(now_s=50.0) == [1]
+
+
+def test_elastic_prime_batch_collapses_data_axis():
+    # A prime global batch only divides by itself: with 6 surviving groups
+    # the largest divisor of 7 that fits is 1 — the plan degrades to a
+    # single data replica (correct, never a non-divisor) and reports the
+    # idle devices honestly.
+    plan = plan_elastic_mesh(6 * 4, model_parallel=4, global_batch=7)
+    assert plan.mesh_shape == (1, 4)
+    assert "(20 idle)" in plan.note
+    # with 7 groups the prime fits exactly
+    plan = plan_elastic_mesh(7 * 4, model_parallel=4, global_batch=7)
+    assert plan.mesh_shape == (7, 4)
+
+
+def test_elastic_exact_fit_uses_everything():
+    plan = plan_elastic_mesh(32, model_parallel=8, global_batch=4)
+    assert plan.mesh_shape == (4, 8)
+    assert plan.mesh_axes == ("data", "model")
+    assert "(0 idle)" in plan.note
+
+
+def test_elastic_prefer_pods_false_stays_2d():
+    plan = plan_elastic_mesh(512, model_parallel=16, global_batch=256,
+                             prefer_pods=False)
+    assert plan.mesh_axes == ("data", "model")
+    assert plan.mesh_shape == (32, 16)
+
+
+def test_elastic_pod_axis_requires_divisibility():
+    # devices_per_pod not divisible by model_parallel: pod grouping is
+    # skipped even with prefer_pods=True.
+    plan = plan_elastic_mesh(512, model_parallel=16, global_batch=256,
+                             devices_per_pod=100)
+    assert plan.mesh_axes == ("data", "model")
+
+
+def test_elastic_model_parallel_exact_boundary():
+    # Exactly one surviving group is feasible (data=1); one fewer device
+    # is not.
+    assert plan_elastic_mesh(16, model_parallel=16, global_batch=8) is not None
+    assert plan_elastic_mesh(15, model_parallel=16, global_batch=8) is None
+
+
+def test_gateway_plan_fleet_maps_workers_to_groups():
+    # The gateway treats each worker as one fixed per-host mesh: survivors
+    # land on the data axis 1:1 (no divisibility constraint — the gateway
+    # pads per-worker dispatches, encoded by global_batch == group count).
+    from repro.gateway import plan_fleet
+
+    plan = plan_fleet(["w0", "w1", "w2"], devices_per_worker=2)
+    assert plan.routable == ("w0", "w1", "w2")
+    assert plan.mesh_shape == (3, 2)
+    assert plan.mesh_axes == ("data", "model")
+    shrunk = plan_fleet(["w2"], devices_per_worker=2)
+    assert shrunk.mesh_shape == (1, 2)
+    assert plan_fleet([], devices_per_worker=2) is None

@@ -1,0 +1,460 @@
+"""Gateway tier tests (DESIGN.md §16): admission, routing, health, failover.
+
+Two lanes:
+
+  * pure-Python stub workers (fast lane): the routing policy, backpressure
+    accounting, heartbeat policing, bounded retries, and the no-silent-drop
+    invariant — RenderGateway never imports a worker implementation, so the
+    duck-typed contract in repro.gateway.worker is testable without jax;
+  * in-process InprocWorker fleets (slow lane): the end-to-end failover
+    story — kill one of two workers mid-load, every request completes,
+    retried requests are BITWISE-identical to a direct single-worker run,
+    and the gateway/* span counts agree with the gateway counters;
+  * one SubprocessWorker transport test (slow): the line-JSON protocol over
+    a real child process, including the SIGKILL -> WorkerDied path.
+"""
+import dataclasses
+import threading
+import time
+
+import pytest
+
+from repro.gateway import (
+    NoWorkerAvailable,
+    RenderGateway,
+    WorkerDied,
+    plan_fleet,
+)
+from repro.obs import get_registry
+from repro.serving.queue import RenderRequest
+
+
+class _Res:
+    def __init__(self, image, batch_size=1):
+        self.image = image
+        self.batch_size = batch_size
+
+
+class StubWorker:
+    """Pure-Python fleet member implementing the repro.gateway.worker
+    contract; ``fail_dispatches=n`` makes the first n dispatches raise and
+    kill the worker (the induced-death chaos knob)."""
+
+    def __init__(self, worker_id, scene_ids, *, max_batch=4, committed=(),
+                 fail_dispatches=0, dispatch_sleep=0.0):
+        self.worker_id = worker_id
+        self.scene_ids = frozenset(scene_ids)
+        self.max_batch = max_batch
+        self._committed = set(committed)
+        self._alive = True
+        self._fail_left = fail_dispatches
+        self._sleep = dispatch_sleep
+        self.dispatched = []
+
+    def alive(self):
+        return self._alive
+
+    def ping(self):
+        if not self._alive:
+            raise WorkerDied(f"{self.worker_id} is dead")
+
+    def committed_scene_ids(self):
+        return set(self._committed)
+
+    def commit(self, scene_id, cfg=None):
+        self.ping()
+        self._committed.add(scene_id)
+
+    def dispatch(self, requests):
+        self.ping()
+        if self._fail_left > 0:
+            self._fail_left -= 1
+            self._alive = False
+            raise WorkerDied(f"{self.worker_id} died mid-dispatch")
+        if self._sleep:
+            time.sleep(self._sleep)
+        self.dispatched.append([r.request_id for r in requests])
+        out = {}
+        for r in requests:
+            self._committed.add(r.scene_id)     # lazy commit, like the server
+            out[r.request_id] = _Res(("img", self.worker_id, r.request_id))
+        return out
+
+    def kill(self):
+        self._alive = False
+
+    def shutdown(self):
+        self._alive = False
+
+
+def _req(rid, scene="a", stream_id=None):
+    return RenderRequest(rid, scene, object(), "cfg", stream_id=stream_id)
+
+
+def _load(n, scenes=("a",), base=0):
+    return [(0.0, _req(base + i, scenes[i % len(scenes)])) for i in range(n)]
+
+
+# -- admission ----------------------------------------------------------------
+
+
+def test_admission_unknown_scene_raises():
+    gw = RenderGateway([StubWorker("w0", ["a"])])
+    with pytest.raises(KeyError):
+        gw.submit(_req(1, scene="nope"))
+    gw.close()
+
+
+def test_admission_backpressure_counts_rejected():
+    # Dispatchers never started: the queue fills and the third submit is
+    # backpressure, mirrored into the registry counter.
+    before = get_registry().counter("gateway.rejected_total").value
+    gw = RenderGateway([StubWorker("w0", ["a"])], queue_depth=2)
+    assert gw.submit(_req(1)) and gw.submit(_req(2))
+    assert not gw.submit(_req(3))
+    assert gw.counts["rejected"] == 1
+    assert gw.counts["submitted"] == 3
+    assert get_registry().counter("gateway.rejected_total").value == before + 1
+    gw.close()
+
+
+def test_close_fails_pending_requests():
+    gw = RenderGateway([StubWorker("w0", ["a"])], queue_depth=8)
+    gw.submit(_req(1))
+    gw.submit(_req(2))
+    gw.close()
+    assert set(gw.failed) == {1, 2}
+    assert all(isinstance(e, RuntimeError) for e in gw.failed.values())
+    gw.close()                               # idempotent
+
+
+# -- routing policy (no dispatcher threads: pick/route inspected directly) ----
+
+
+def test_route_prefers_affine_worker():
+    w0 = StubWorker("w0", ["a", "b"])
+    w1 = StubWorker("w1", ["a", "b"], committed=["a"])
+    gw = RenderGateway([w0, w1])
+    assert gw._pick_worker(_req(1, "a")) == "w1"
+    # no worker committed "b": least-loaded (both idle) -> first index
+    assert gw._pick_worker(_req(2, "b")) == "w0"
+    gw.close()
+
+
+def test_route_least_loaded_among_affine():
+    w0 = StubWorker("w0", ["a"], committed=["a"])
+    w1 = StubWorker("w1", ["a"], committed=["a"])
+    gw = RenderGateway([w0, w1])
+    gw._inbox["w0"].append(_req(99))
+    assert gw._pick_worker(_req(1)) == "w1"
+    gw.close()
+
+
+def test_route_spills_past_load_threshold():
+    # Affinity is a preference, not a pin: an affine worker at spill depth
+    # loses to an idle non-affine one.
+    w0 = StubWorker("w0", ["a"], committed=["a"])
+    w1 = StubWorker("w1", ["a"])
+    gw = RenderGateway([w0, w1], spill_load=2)
+    assert gw._pick_worker(_req(1)) == "w0"
+    gw._inbox["w0"].extend([_req(98), _req(99)])
+    assert gw._pick_worker(_req(2)) == "w1"
+    gw.close()
+
+
+def test_route_straggler_deprioritized_not_excluded():
+    w0 = StubWorker("w0", ["a"], committed=["a"])
+    w1 = StubWorker("w1", ["a"])
+    gw = RenderGateway([w0, w1])
+    gw._stragglers = {"w0"}
+    # straggler loses even with affinity on its side...
+    assert gw._pick_worker(_req(1)) == "w1"
+    # ...but a drained straggler still beats no worker at all
+    gw._routable = {"w0"}
+    assert gw._pick_worker(_req(2)) == "w0"
+    gw.close()
+
+
+def test_stream_sticky_routing_and_repin_after_death():
+    w0 = StubWorker("w0", ["a"], committed=["a"])
+    w1 = StubWorker("w1", ["a"], committed=["a"])
+    gw = RenderGateway([w0, w1])
+    first = _req(1, stream_id="s0")
+    gw._route(first, 0.0)
+    assert gw._stream_route["s0"] == "w0"
+    # load would favor w1 now, but the stream stays pinned
+    gw._inbox["w0"].append(_req(99))
+    assert gw._pick_worker(_req(2, stream_id="s0")) == "w0"
+    # death unpins; the next frame re-pins to the survivor
+    gw._handle_death("w0", [], WorkerDied("chaos"), 0.0)
+    assert "s0" not in gw._stream_route
+    assert gw._pick_worker(_req(3, stream_id="s0")) == "w1"
+    gw.close()
+
+
+def test_route_counts_lazy_recommit():
+    w0 = StubWorker("w0", ["a"])
+    gw = RenderGateway([w0])
+    gw._route(_req(1), 0.0)
+    assert gw.counts["recommits"] == 1
+    assert gw.counts["routed"] == 1
+    gw.close()
+
+
+# -- health -------------------------------------------------------------------
+
+
+def test_heartbeat_timeout_declares_worker_dead():
+    w0 = StubWorker("w0", ["a"])
+    w1 = StubWorker("w1", ["a"])
+    gw = RenderGateway([w0, w1], heartbeat_timeout_s=5.0)
+    gw._started = True                       # police without real dispatchers
+    now = gw._clock()
+    gw._started_at = now - 6.0
+    gw.monitor.report(1, 0, 0.0, now)        # w1 reported; w0 never seen
+    gw.step(now)
+    assert gw.healthy_workers == ["w1"]
+    assert gw.counts["failovers"] == 1
+    assert gw.plan.mesh_shape == (1, 1)
+    gw.close()
+
+
+def test_failover_replans_fleet_and_empty_fleet_has_no_plan():
+    ws = [StubWorker(f"w{i}", ["a"]) for i in range(3)]
+    gw = RenderGateway(ws, devices_per_worker=2)
+    assert gw.plan.mesh_shape == (3, 2)
+    gw._handle_death("w1", [], WorkerDied("x"), 0.0)
+    assert gw.plan.mesh_shape == (2, 2)
+    assert gw.plan.routable == ("w0", "w2")
+    gw._handle_death("w0", [], WorkerDied("x"), 0.0)
+    gw._handle_death("w2", [], WorkerDied("x"), 0.0)
+    assert gw.plan is None and plan_fleet([]) is None
+    gw.close()
+
+
+def test_duplicate_result_is_dropped():
+    gw = RenderGateway([StubWorker("w0", ["a"])])
+    req = _req(5)
+    gw._attempts[5] = 1
+    gw._resolve("w0", req, _Res("first"), 0.0, 0.0)
+    gw._resolve("w0", req, _Res("late-duplicate"), 0.0, 0.0)
+    assert gw.results[5].image == "first"
+    assert gw.counts["duplicates"] == 1
+    assert gw.counts["completed"] == 1
+    gw.close()
+
+
+# -- end-to-end over stubs (real dispatcher threads) --------------------------
+
+
+def test_run_completes_all_requests_healthy():
+    ws = [StubWorker("w0", ["a", "b"]), StubWorker("w1", ["a", "b"])]
+    gw = RenderGateway(ws, retry_backoff_s=0.001)
+    res = gw.run(_load(16, scenes=("a", "b")))
+    assert len(res) == 16 and not gw.failed
+    assert all(r.attempts == 1 for r in res.values())
+    s = gw.summary()
+    assert s["gateway"] is True and s["completed"] == 16
+    assert "gateway: 16/16 completed" in gw.format()
+    gw.close()
+
+
+def test_failover_retries_complete_on_survivor():
+    # w0 holds the affinity (pre-committed) and dies on its first dispatch;
+    # every request must terminate on w1, with the scene re-committed there.
+    w0 = StubWorker("w0", ["a"], committed=["a"], fail_dispatches=1)
+    w1 = StubWorker("w1", ["a"])
+    gw = RenderGateway([w0, w1], retry_backoff_s=0.001)
+    res = gw.run(_load(6))
+    assert len(res) == 6 and not gw.failed
+    assert all(r.worker_id == "w1" for r in res.values())
+    assert any(r.attempts > 1 for r in res.values())
+    assert gw.counts["failovers"] == 1
+    assert gw.counts["retries"] >= 1
+    assert gw.counts["recommits"] >= 1
+    assert gw.healthy_workers == ["w1"]
+    gw.close()
+
+
+def test_total_fleet_death_fails_requests_without_hanging():
+    # Both workers die on first dispatch: bounded retries must terminate
+    # every request in ``failed`` (no silent drop, no infinite loop).
+    ws = [StubWorker("w0", ["a"], fail_dispatches=1),
+          StubWorker("w1", ["a"], fail_dispatches=1)]
+    gw = RenderGateway(ws, retry_backoff_s=0.001, max_retries=2)
+    res = gw.run(_load(4))
+    assert res == {} and set(gw.failed) == {0, 1, 2, 3}
+    assert all(
+        isinstance(e, (NoWorkerAvailable, WorkerDied))
+        for e in gw.failed.values()
+    )
+    assert gw.counts["failovers"] == 2
+    assert gw.outstanding() == 0
+    assert gw.healthy_workers == []
+    gw.close()
+
+
+def test_kill_hook_induces_failover_on_next_dispatch():
+    # An unobserved kill is lazy by design: the death only surfaces when the
+    # gateway next touches the worker. Kill between two runs — the first
+    # request of the second run routes to the (still-routable) corpse, the
+    # dispatch raises, and failover re-runs it on the survivor.
+    ws = [StubWorker("w0", ["a"]), StubWorker("w1", ["a"])]
+    gw = RenderGateway(ws, retry_backoff_s=0.001)
+    assert len(gw.run(_load(4))) == 4
+    gw.kill_worker("w0")
+    assert not ws[0].alive() and ws[1].alive()
+    res = gw.run(_load(16, base=100))
+    assert len(res) == 20 and not gw.failed
+    assert gw.counts["failovers"] == 1
+    assert all(
+        res[rid].worker_id == "w1" for rid in range(100, 116)
+    )
+    gw.close()
+
+
+def test_submit_step_drive_from_producer_thread():
+    # The documented thread model: producers submit from another thread,
+    # one driver loops step() until everything terminates.
+    gw = RenderGateway([StubWorker("w0", ["a"])], retry_backoff_s=0.001)
+
+    def produce():
+        for i in range(8):
+            while not gw.submit(_req(i)):
+                time.sleep(0.001)
+
+    t = threading.Thread(target=produce)
+    t.start()
+    deadline = time.monotonic() + 30
+    while len(gw.results) < 8:
+        gw.step()
+        assert time.monotonic() < deadline, "gateway stalled"
+        time.sleep(0.001)
+    t.join()
+    assert len(gw.results) == 8 and not gw.failed
+    gw.close()
+
+
+# -- in-process jax fleet: the failover e2e (DESIGN.md §16 acceptance) --------
+
+
+@pytest.mark.slow
+def test_inproc_failover_bitwise_and_span_parity():
+    """Kill 1 of 2 in-process workers mid-load: every request completes,
+    every image (retried ones included) is bitwise-identical to a direct
+    single-worker run, and the gateway/* spans match the counters."""
+    import jax
+    import numpy as np
+
+    from repro.core import orbit_cameras
+    from repro.core.gaussians import scene_like_paper
+    from repro.core.pipeline import RenderConfig
+    from repro.gateway.worker import InprocWorker
+    from repro.obs import Tracer, get_tracer, set_tracer
+
+    scene_ids = ["train", "truck"]
+    built = {
+        sid: scene_like_paper(jax.random.key(i), sid, 300)
+        for i, sid in enumerate(scene_ids)
+    }
+    cams = orbit_cameras(6, 4.5, 64, 64)
+    cfg = RenderConfig(mode="gstg", backend="reference", span=6)
+    warm_ids = iter(range(-1, -100, -1))
+
+    def warm(w):
+        # Compile every (scene, resolution) program up front so the first
+        # timed dispatch is not a multi-second jit that trips heartbeats.
+        for sid in scene_ids:
+            w.dispatch([RenderRequest(next(warm_ids), sid, cams[0], cfg)])
+        return w
+
+    w0 = warm(InprocWorker("w0", built, max_batch=4))
+    w1 = warm(InprocWorker("w1", built, max_batch=4))
+    load = [
+        (0.0, RenderRequest(i, scene_ids[i % 2], cams[i % len(cams)], cfg))
+        for i in range(12)
+    ]
+    prev = set_tracer(Tracer(enabled=True))
+    try:
+        gw = RenderGateway([w0, w1], retry_backoff_s=0.005)
+        res = gw.run(load, kill_worker="w0", kill_after=2)
+        assert len(res) == 12, f"failed: {gw.failed}"
+        assert not gw.failed
+        assert gw.counts["failovers"] == 1
+        retried = [r for r in res.values() if r.attempts > 1]
+        assert retried, "the kill should have forced at least one retry"
+        assert all(r.worker_id == "w1" for r in retried)
+
+        # bitwise parity vs a direct single-worker run (same settings)
+        ref = warm(InprocWorker("ref", built, max_batch=4))
+        for i, (_, req) in enumerate(load):
+            direct = ref.dispatch(
+                [dataclasses.replace(req, request_id=1000 + i)]
+            )[1000 + i]
+            assert np.array_equal(
+                np.asarray(direct.image), np.asarray(res[req.request_id].image)
+            ), f"request {req.request_id} diverged from the direct run"
+        ref.shutdown()
+
+        # span <-> counter agreement (the validate_trace.py contract)
+        names = [e.name for e in get_tracer().events()]
+        assert names.count("gateway/failover") == gw.counts["failovers"]
+        assert names.count("gateway/retry") == gw.counts["retries"]
+        assert names.count("gateway/route") == gw.counts["routed"]
+        assert names.count("request") == len(res)
+        gw.close()
+    finally:
+        set_tracer(prev)
+
+
+# -- subprocess transport -----------------------------------------------------
+
+
+@pytest.mark.slow
+def test_subprocess_worker_transport_roundtrip_and_sigkill():
+    import os
+
+    import numpy as np
+
+    import repro
+    from repro.core import make_camera
+    from repro.gateway.transport import SubprocessWorker, worker_argv
+
+    # pytest's pythonpath does not propagate to children: ship src/ along.
+    env = dict(os.environ)
+    src = os.path.dirname(list(repro.__path__)[0])
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+    w = SubprocessWorker(
+        "sub0", ["train"],
+        worker_argv(
+            "sub0", ["train:0"],
+            devices=1,
+            extra=["--gaussians", "300", "--max-batch", "2"],
+        ),
+        max_batch=2,
+        env=env,
+    )
+    try:
+        w.ping()
+        assert w.alive()
+        w.commit("train")
+        assert "train" in w.committed_scene_ids()
+        reqs = [RenderRequest(i, "train", cam, None) for i in (1, 2)]
+        out = w.dispatch(reqs)
+        img1 = np.asarray(out[1].image)
+        assert img1.shape == (64, 64, 3) and img1.dtype == np.float32
+        # same camera -> bitwise-identical lanes, and a re-dispatch of the
+        # same request is deterministic (the retry-parity invariant on the
+        # wire: base64 round-trip is byte-exact)
+        assert np.array_equal(img1, np.asarray(out[2].image))
+        again = w.dispatch([RenderRequest(3, "train", cam, None)])
+        assert np.array_equal(img1, np.asarray(again[3].image))
+        w.kill()                              # real SIGKILL
+        assert not w.alive()
+        with pytest.raises(WorkerDied):
+            w.dispatch([RenderRequest(4, "train", cam, None)])
+    finally:
+        w.shutdown()
+        w.shutdown()                          # idempotent

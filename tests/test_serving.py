@@ -70,6 +70,23 @@ def test_queue_fifo_depth_and_backpressure():
     assert len(q) == 0 and q.try_put(_req(3))            # space freed
 
 
+def test_queue_rejections_count_into_registry():
+    """Backpressure is a first-class metrics signal: every failed put
+    attempt increments queue.rejected_total alongside the local field
+    (delta-based — the registry is process-global across tests)."""
+    from repro.obs import get_registry
+
+    before = get_registry().counter("queue.rejected_total").value
+    q = RequestQueue(maxsize=1, clock=lambda: 0.0)
+    q.put_nowait(_req(0))
+    with pytest.raises(QueueFull):
+        q.put_nowait(_req(1))
+    assert not q.try_put(_req(1))
+    assert not q.put(_req(1), timeout=0.0)
+    assert q.rejected == 3
+    assert get_registry().counter("queue.rejected_total").value == before + 3
+
+
 def test_queue_enqueue_time_stamped():
     q = RequestQueue(maxsize=4, clock=lambda: 42.0)
     q.put_nowait(_req(0))
