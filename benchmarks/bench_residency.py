@@ -1,0 +1,244 @@
+"""Residency bench: serve 2-4x more scenes than fit the device budget.
+
+The many-scene overcommit story (DESIGN.md §17), measured honestly on one
+host: commit every PAPER scene to a ``RenderServer`` whose budget holds
+only ``budget_scenes`` of them, replay a round-robin load for ``laps``
+laps (the worst case for LRU — every request touches the coldest scene),
+and compare against the identical run with no budget:
+
+  * parity: every budgeted image must be BITWISE-identical to the
+    unbudgeted run — paging must be invisible in the pixels;
+  * thrash cost: budgeted vs unbudgeted wall time, with the page-in /
+    eviction counters that explain the delta;
+  * the overcommit ratio actually served (committed MB / budget MB).
+
+Writes the schema-versioned ``BENCH_residency_<host>.json`` at the repo
+root (committed trajectory, like BENCH_gateway/BENCH_stream). ``--smoke``
+runs a tiny config and validates the schema only, writing under results/.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import re
+import time
+
+SCHEMA = "repro.bench_residency/v1"
+
+DEFAULT_SCENES = ("train", "truck", "drjohnson", "playroom",
+                  "rubble", "residence")
+DEFAULT_GAUSSIANS = 3000
+DEFAULT_LAPS = 3
+DEFAULT_BUDGET_SCENES = 2
+
+
+def _host() -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "-", platform.node() or "unknown")
+
+
+def default_out_path(host: str | None = None) -> str:
+    return f"BENCH_residency_{host or _host()}.json"
+
+
+def validate_bench(doc: dict) -> list:
+    """Schema + invariant check; returns problems (empty = valid)."""
+    errs = []
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, expected {SCHEMA!r}")
+    for key in ("host", "timestamp", "backend", "config", "unbudgeted",
+                "budgeted", "parity"):
+        if key not in doc:
+            errs.append(f"missing top-level key {key!r}")
+    cfg = doc.get("config") or {}
+    for k in ("budget_mb", "per_scene_mb", "overcommit_frac", "requests"):
+        if not isinstance(cfg.get(k), (int, float)):
+            errs.append(f"config: non-numeric {k!r}")
+    if isinstance(cfg.get("overcommit_frac"), (int, float)) and \
+            cfg["overcommit_frac"] < 2.0:
+        errs.append(
+            f"overcommit {cfg['overcommit_frac']:.1f}x below the 2x floor "
+            "— the bench is not actually overcommitting the budget")
+    for phase in ("unbudgeted", "budgeted"):
+        ph = doc.get(phase) or {}
+        for k in ("wall_s", "fps", "completed", "page_ins", "page_outs",
+                  "evictions"):
+            if not isinstance(ph.get(k), (int, float)):
+                errs.append(f"{phase}: non-numeric {k!r}")
+        if ph.get("completed") != cfg.get("requests"):
+            errs.append(f"{phase}: completed {ph.get('completed')} != "
+                        f"requests {cfg.get('requests')}")
+    if (doc.get("unbudgeted") or {}).get("page_outs", -1) != 0:
+        errs.append("unbudgeted run paged — budget accounting is broken")
+    if (doc.get("budgeted") or {}).get("evictions", 0) < 1:
+        errs.append("budgeted overcommit produced no evictions")
+    pa = doc.get("parity") or {}
+    if pa.get("mismatches", -1) != 0:
+        errs.append(f"parity: {pa.get('mismatches')} budgeted images "
+                    "diverge from the unbudgeted run")
+    if pa.get("compared", 0) < 1:
+        errs.append("parity: nothing compared")
+    return errs
+
+
+def run(
+    scenes=DEFAULT_SCENES,
+    n_gaussians: int = DEFAULT_GAUSSIANS,
+    width: int = 96,
+    height: int = 96,
+    backend: str = "reference",
+    laps: int = DEFAULT_LAPS,
+    budget_scenes: int = DEFAULT_BUDGET_SCENES,
+    max_batch: int = 4,
+    out_path: str | None = None,
+) -> dict:
+    import jax
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro import engine
+    from repro.core import orbit_cameras
+    from repro.core.gaussians import scene_like_paper
+    from repro.core.pipeline import RenderConfig
+    from repro.serving.queue import RenderRequest
+    from repro.serving.server import RenderServer
+
+    scene_ids = list(scenes)
+    cfg = RenderConfig(mode="gstg", backend=backend, span=6)
+    built = {
+        sid: scene_like_paper(jax.random.key(i), sid, n_gaussians)
+        for i, sid in enumerate(scene_ids)
+    }
+    cams = orbit_cameras(8, 4.5, width, height)
+
+    # Size the budget off the real committed cost (params + per-camera
+    # features, per device) so `budget_scenes` fit and the rest page.
+    probe = engine.open(built[scene_ids[0]], cfg)
+    st = probe.stats()
+    per_scene_mb = st["scene_mb_per_device"] + st["feature_mb_per_device"]
+    probe.close()
+    budget_mb = budget_scenes * per_scene_mb * 1.1
+    overcommit = len(scene_ids) * per_scene_mb / budget_mb
+
+    requests = laps * len(scene_ids)
+    load = [
+        (0.0, RenderRequest(i, scene_ids[i % len(scene_ids)],
+                            cams[i % len(cams)], cfg))
+        for i in range(requests)
+    ]
+
+    def serve(budget):
+        server = RenderServer(built, max_batch=max_batch, max_wait=0.0,
+                              device_budget_mb=budget)
+        for sid in scene_ids:
+            server.commit(sid, cfg)
+        # One warm dispatch compiles the (shared) program so the timed
+        # window measures paging + dispatch, not jit.
+        server.run([(0.0, RenderRequest(-1, scene_ids[0], cams[0], cfg))],
+                   realtime=False)
+        server.results.clear()
+        rs0 = dict(server.residency.stats())
+        t0 = time.perf_counter()
+        res = server.run(load, realtime=False)
+        wall = time.perf_counter() - t0
+        rs1 = server.residency.stats()
+        images = {i: np.asarray(r.image) for i, r in res.items()}
+        server.close()
+        counters = {k: rs1[k] - rs0[k]
+                    for k in ("page_ins", "page_outs", "evictions", "hits",
+                              "prefetches", "over_budget")}
+        return {
+            "wall_s": wall,
+            "fps": requests / wall,
+            "completed": len(images),
+            "resident_entries": rs1["resident_entries"],
+            **counters,
+        }, images
+
+    unbudgeted, ref_images = serve(None)
+    budgeted, paged_images = serve(budget_mb)
+
+    mismatches = sum(
+        0 if np.array_equal(paged_images[i], ref_images[i]) else 1
+        for i in ref_images
+    )
+    parity = {"compared": len(ref_images), "mismatches": mismatches}
+
+    emit("residency_overcommit",
+         budgeted["wall_s"] / requests * 1e6,
+         f"{len(scene_ids)} scenes in a {budget_scenes}-scene budget "
+         f"({overcommit:.1f}x): {budgeted['page_ins']} page-ins, "
+         f"{budgeted['evictions']} evictions, "
+         f"{unbudgeted['fps']:.1f} -> {budgeted['fps']:.1f} fps, "
+         f"{mismatches} parity mismatches")
+
+    doc = {
+        "schema": SCHEMA,
+        "host": _host(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "jax_backend": jax.default_backend(),
+        "backend": backend,
+        "config": {
+            "scenes": scene_ids,
+            "n_gaussians": n_gaussians,
+            "width": width,
+            "height": height,
+            "laps": laps,
+            "requests": requests,
+            "max_batch": max_batch,
+            "budget_scenes": budget_scenes,
+            "budget_mb": budget_mb,
+            "per_scene_mb": per_scene_mb,
+            "overcommit_frac": overcommit,
+        },
+        "unbudgeted": unbudgeted,
+        "budgeted": budgeted,
+        "parity": parity,
+        "paging_penalty_frac":
+            (budgeted["wall_s"] - unbudgeted["wall_s"])
+            / unbudgeted["wall_s"],
+    }
+    errs = validate_bench(doc)
+    if errs:
+        raise AssertionError("BENCH document invalid: " + "; ".join(errs))
+    out = out_path or default_out_path()
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    emit("bench_residency_written", 0.0, out)
+    return doc
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, schema-only validation, writes under "
+                         "results/ (never clobbers the committed BENCH)")
+    ap.add_argument("--gaussians", type=int, default=None)
+    ap.add_argument("--laps", type=int, default=None)
+    ap.add_argument("--backend", default="reference")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        import os
+
+        os.makedirs("results", exist_ok=True)
+        run(
+            scenes=DEFAULT_SCENES[:4],
+            n_gaussians=args.gaussians or 300,
+            width=64, height=64,
+            laps=args.laps or 2,
+            budget_scenes=1,
+            backend=args.backend,
+            out_path="results/BENCH_residency_smoke.json",
+        )
+    else:
+        run(
+            n_gaussians=args.gaussians or DEFAULT_GAUSSIANS,
+            laps=args.laps or DEFAULT_LAPS,
+            backend=args.backend,
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,6 +26,7 @@ def main() -> None:
         bench_boundaries,
         bench_gateway,
         bench_render_walltime,
+        bench_residency,
         bench_scene_scale,
         bench_serving,
         bench_sharing,
@@ -45,6 +46,7 @@ def main() -> None:
         ("scene_scale", bench_scene_scale.run),
         ("stream_reuse", bench_stream.run),
         ("gateway_fleet", bench_gateway.run),
+        ("residency_overcommit", bench_residency.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -110,6 +110,25 @@ REPRO_TRACE=1 python -m repro.launch.render_serve --backend reference \
 python scripts/validate_trace.py \
     results/trace_stream_smoke.json results/metrics_stream_smoke.json
 
+# Residency smoke (DESIGN.md §17): 3 scenes on the 2-virtual-device server
+# under a budget that holds only ONE of them — commits succeed anyway
+# (over-budget commits evict cold scenes instead of failing fast), the
+# round-robin load thrashes the LRU, and --parity-check exits non-zero on
+# ANY image that is not BITWISE-identical to the replicated unbudgeted
+# path (paging must be invisible in the pixels). validate_trace.py
+# (residency mode) cross-checks the residency/page_in|page_out span
+# counts against the residency.* counters.
+echo "== residency smoke serve: 3 scenes in a 1-scene budget, bitwise parity =="
+REPRO_TRACE=1 python -m repro.launch.render_serve --backend reference \
+    --devices 2 --requests 12 --rate 200 --gaussians 500 \
+    --scenes train,truck,drjohnson --resolutions 96x96 \
+    --max-batch 2 --max-wait 0.05 --no-realtime --parity-check \
+    --device-budget-mb 0.1 \
+    --trace-json results/trace_residency_smoke.json \
+    --metrics-json results/metrics_residency_smoke.json
+python scripts/validate_trace.py \
+    results/trace_residency_smoke.json results/metrics_residency_smoke.json
+
 # Measured per-stage bench smoke (DESIGN.md §14): tiny scene through the
 # timing=True engine path -> BENCH_stages schema validation.
 echo "== bench_stages smoke: measured per-stage spans, schema valid =="

@@ -15,7 +15,11 @@ Cross-checks the three observability surfaces one ``repro.launch
   * trace <-> metrics <-> summary consistency: completed requests and
     dispatched batches must agree between the request/serve spans, the
     ``serving.*`` counters + latency histogram, and the stats summary
-    embedded under the trace's ``"summary"`` key.
+    embedded under the trace's ``"summary"`` key;
+  * residency paging (DESIGN.md §17): ``residency/page_in|page_out``
+    span counts must equal the ``residency.page_ins_total|page_outs_total``
+    counters (span + counter are recorded in the same critical section),
+    in both serve and gateway modes.
 
 Exits non-zero listing every drift — the point is that a broken stamp,
 a lost span, or a double-counted metric fails CI instead of silently
@@ -29,6 +33,38 @@ import sys
 from repro.obs import validate_chrome_trace
 
 MIN_STAGE_NAMES = 7
+
+
+def validate_residency(xs: list, counters: dict) -> list:
+    """Residency-mode checks (DESIGN.md §17): every scene page-in/-out
+    records its ``residency/*`` span and bumps its ``residency.*`` counter
+    in the same critical section, so the two surfaces must agree exactly.
+    Enforced whenever the run paged at all (any residency counter or span
+    present) — which includes every serve run, since commits page scenes
+    in even with no budget set."""
+    errs = []
+    if "residency.page_ins_total" not in counters and not any(
+        e.get("cat") == "residency" for e in xs
+    ):
+        return errs
+    for name, counter in (
+        ("residency/page_in", "residency.page_ins_total"),
+        ("residency/page_out", "residency.page_outs_total"),
+    ):
+        n_span = sum(1 for e in xs if e.get("name") == name)
+        n_counter = counters.get(counter, 0)
+        if n_span != n_counter:
+            errs.append(
+                f"{name} spans = {n_span} but counters[{counter!r}] = "
+                f"{n_counter} — a page transition lost its span or "
+                f"double-counted")
+    evictions = counters.get("residency.evictions_total", 0)
+    page_outs = counters.get("residency.page_outs_total", 0)
+    if evictions > page_outs:
+        errs.append(
+            f"counters['residency.evictions_total'] = {evictions} exceeds "
+            f"page_outs = {page_outs} — an eviction that never paged out")
+    return errs
 
 
 def validate_gateway(trace_doc: dict, metrics_doc: dict) -> list:
@@ -83,6 +119,9 @@ def validate_gateway(trace_doc: dict, metrics_doc: dict) -> list:
                         "counters['gateway.worker_deaths_total'] < 1")
         if spans.get("gateway/retry", 0) < 1:
             errs.append("summary.failovers > 0 but no gateway/retry spans")
+    # Inproc fleets page in the parent process (subprocess workers page in
+    # their own registries — both sides absent here, trivially consistent).
+    errs.extend(validate_residency(xs, counters))
     return errs
 
 
@@ -176,6 +215,7 @@ def validate(trace_doc: dict, metrics_doc: dict) -> list:
         errs.append(f"{len(missing)} request(s) have no request/device span: "
                     f"{sorted(missing)[:5]}")
 
+    errs.extend(validate_residency(xs, counters))
     return errs
 
 

@@ -7,9 +7,12 @@ the canonical :class:`~repro.sharding.scene.ShardedScene` layout), the 1-D or
 2-D render mesh, and the jit-cache keys — and commits them into a
 :class:`Renderer` handle (DESIGN.md §11):
 
-  * the scene is staged on the HOST (``shard_scene_cached`` when gaussian-
+  * the scene is staged on the HOST (``acquire_scene_layout`` when gaussian-
     sharded, so the full padded scene never allocates on one device) and
-    ``device_put`` exactly once; every subsequent call reuses the device copy;
+    ``device_put`` exactly once through a residency entry; every subsequent
+    call reuses the device copy — unless a budgeted shared manager paged it
+    out, in which case the next use pages it back in bitwise-identically
+    from the host backing store (DESIGN.md §17);
   * the handle owns a per-handle jit cache, registered with the engine-wide
     ``register_render_cache`` registry so ``render_cache_info()`` /
     ``render_cache_clear()`` and the serving cache-hit stats keep covering it;
@@ -22,9 +25,10 @@ the canonical :class:`~repro.sharding.scene.ShardedScene` layout), the 1-D or
     "threaded front-end": batching becomes an implementation detail of the
     handle, and an asyncio caller just wraps the future);
   * ``.close()`` (or the context manager) drains the worker, unregisters and
-    drops the jit cache, and evicts the handle's scene layouts from the
-    shared layout cache — the lifecycle fix for layouts that previously
-    stayed resident until the scene was garbage collected.
+    drops the jit cache, and releases the handle's refcounted residency
+    entry and scene-layout reference — shared state (the host layout, the
+    committed device copy) frees when the LAST handle over it closes, never
+    under another open handle's feet.
 
 The handle is intentionally a COMMIT of (scene, config): per-request knobs
 that change the compiled program (mode, backend, capacities, scene_shards,
@@ -73,10 +77,11 @@ from repro.launch.mesh import make_render_mesh, render_mesh_shards
 from repro.obs import emit_request_spans, get_registry, get_tracer
 from repro.serving.bucketing import BucketingScheduler, padded_size
 from repro.serving.queue import QueueClosed, RequestQueue
+from repro.residency import ResidencyManager
 from repro.serving.sharded import (
-    evict_scene_layouts,
+    acquire_scene_layout,
     pad_camera_batch,
-    shard_scene_cached,
+    release_scene_layout,
 )
 from repro.sharding.policies import (
     camera_batch_pspec,
@@ -162,6 +167,7 @@ class Renderer:
         queue_depth: int = 64,
         tile_params: Union[None, str, tuple] = None,
         autotune_opts: Optional[dict] = None,
+        residency: Optional[ResidencyManager] = None,
         clock=time.monotonic,
     ):
         if devices is not None and mesh is not None:
@@ -207,7 +213,16 @@ class Renderer:
         else:
             n_dev = devices if devices is not None else len(jax.devices())
             phys = render_mesh_shards(n_dev, shards)
-        if device_budget_mb is not None:
+        # The effective per-device cap: an explicit device_budget_mb wins;
+        # a shared residency manager's budget otherwise. The static check
+        # below remains PER SCENE — a scene that cannot fit alone (even
+        # after shard escalation) must still fail fast; the AGGREGATE
+        # overflow across scenes is what the residency manager pages
+        # against (DESIGN.md §17).
+        budget_mb = device_budget_mb
+        if budget_mb is None and residency is not None:
+            budget_mb = residency.budget_mb
+        if budget_mb is not None:
             # Per-device budget model (DESIGN.md §12): persistent scene
             # parameters at 1/phys PLUS the transient per-camera projected
             # features — N/phys ONLY under the resolved 'psum' strategy
@@ -231,13 +246,13 @@ class Renderer:
                 scene_shards == "auto"
                 and mesh is None
                 and self._source is not None
-                and model(shards, phys) > device_budget_mb
+                and model(shards, phys) > budget_mb
             ):
                 for d in range(max(shards, 1), n_dev + 1):
-                    if n_dev % d == 0 and model(d, d) <= device_budget_mb:
+                    if n_dev % d == 0 and model(d, d) <= budget_mb:
                         shards, phys = d, d
                         break
-            if model(shards, phys) > device_budget_mb:
+            if model(shards, phys) > budget_mb:
                 layout = f"{phys}-way sharded" if phys > 1 else "replicated"
                 fdiv = self._feature_div(cfg, shards, phys)
                 raise ValueError(
@@ -245,7 +260,7 @@ class Renderer:
                     f"{layout} ({scene_mb / phys:.2f} MB parameters + "
                     f"{self._feature_mb(scene, shards) / fdiv:.2f} MB "
                     f"per-camera projected features at N/{fdiv}), over the "
-                    f"{device_budget_mb} MB budget — raise scene_shards or "
+                    f"{budget_mb} MB budget — raise scene_shards or "
                     f"the device count"
                 )
 
@@ -273,16 +288,28 @@ class Renderer:
             )
         self._mesh = mesh
 
-        # Commit: host-staged layout when sharded, then ONE device_put.
+        # Stream-session registry BEFORE the commit: the residency entry's
+        # dynamic-cost callback (frontend_cache_mb) may run during the
+        # eager page-in below.
+        self._worker_lock = threading.Lock()
+        self._streams: List[Any] = []
+
+        # Commit: host-staged layout when sharded (refcounted — the
+        # layout survives until the LAST handle over it closes), then
+        # registration with the residency manager (DESIGN.md §17). The
+        # eager acquire below IS the one device_put the commit promises;
+        # under a budgeted shared manager the scene may later page out and
+        # back in bitwise-identically through the host backing store.
         staged = scene
+        self._layout_ref = None
         if shards > 1 and isinstance(scene, GaussianScene):
-            staged = shard_scene_cached(scene, shards)
+            staged = acquire_scene_layout(scene, shards)
+            self._layout_ref = (scene, shards)
         spec = (
             scene_shard_pspec(mesh)
             if isinstance(staged, ShardedScene)
             else render_replicated_pspec()
         )
-        self._scene = jax.device_put(staged, NamedSharding(mesh, spec))
         self._scene_mb_per_device = pytree_bytes(scene) / phys / 2**20
         self._feature_mb_per_device = self._feature_mb(scene, shards) / (
             self._feature_div(cfg, shards, phys)
@@ -291,6 +318,35 @@ class Renderer:
         # even though cfg.feature_gather may still read 'auto').
         self._feature_gather = self._resolved_gather(cfg, shards, phys)
         self._phys_shards = phys
+        self._residency = (
+            residency if residency is not None
+            else ResidencyManager(budget_mb=device_budget_mb)
+        )
+        self._res_entry = self._residency.register(
+            (id(scene), shards, mesh),
+            staged,
+            NamedSharding(mesh, spec),
+            self._scene_mb_per_device + self._feature_mb_per_device,
+            label=f"scene@{id(scene):#x}/D{shards}",
+        )
+        # Dynamic cost: the stream sessions' frontend caches (the budget-
+        # undercount fix) — weakref'd so the shared entry never pins the
+        # handle. release() on the LAST close drops the entry and with it
+        # every registered callback.
+        self_ref = weakref.ref(self)
+
+        def _dyn_cost(ref=self_ref):
+            h = ref()
+            return h.frontend_cache_mb() if h is not None else 0.0
+
+        self._dyn_cost = _dyn_cost
+        self._res_entry.cost_fns.append(_dyn_cost)
+        # A handle dropped WITHOUT close() must still release its residency
+        # reference, or the shared manager would pin the entry forever.
+        self._res_finalizer = weakref.finalize(
+            self, self._residency.release, self._res_entry
+        )
+        self._residency.acquire(self._res_entry)
 
         # Per-handle jit cache, visible through the engine-wide registry.
         # Registered through a weakref so the registry never pins the handle:
@@ -323,13 +379,11 @@ class Renderer:
         self._queue = RequestQueue(queue_depth, clock=clock)
         self._scheduler = BucketingScheduler(max_batch, max_wait, clock=clock)
         self._worker: Optional[threading.Thread] = None
-        self._worker_lock = threading.Lock()
         self._flush_event = threading.Event()
         self._outstanding: List[Future] = []
         self._counters = {
             "submitted": 0, "completed": 0, "batches": 0, "padded_lanes": 0,
         }
-        self._streams: List[Any] = []
         self._closed = False
 
     # -- committed-state introspection --------------------------------------
@@ -347,14 +401,52 @@ class Renderer:
         return self._cfg.scene_shards
 
     @property
+    def _scene(self):
+        """The device-resident committed scene, acquired through the
+        residency manager on every use: a no-op LRU touch while resident,
+        a bitwise-identical ``device_put`` of the host backing store after
+        a page-out (DESIGN.md §17)."""
+        entry = self._res_entry
+        if entry is None:
+            return None
+        return self._residency.acquire(entry)
+
+    @property
     def committed_scene(self):
-        """The device-resident committed scene. Pass it to another
-        ``open()`` on the same mesh/layout to SHARE the device copy —
-        ``device_put`` of an already-committed array with the same sharding
-        is a no-op, so further handles (e.g. one per config in a server)
-        add no scene HBM (serving/server.py::commit)."""
+        """The device-resident committed scene (paged in if needed).
+
+        Handles opened through ONE residency manager on the same
+        (scene, layout, mesh) share a single entry — and therefore one
+        device copy (e.g. one per config in a server adds no scene HBM,
+        serving/server.py::commit)."""
         self._check_open()
         return self._scene
+
+    @property
+    def resident(self) -> bool:
+        """Whether the committed scene is device-resident RIGHT NOW (it may
+        be paged out under a budgeted shared manager; any render pages it
+        back in transparently)."""
+        entry = self._res_entry
+        return entry is not None and entry.resident
+
+    def prefetch(self) -> bool:
+        """Page the committed scene in ahead of a render — the serving
+        tier's admission-time prefetch hook. True when a transfer actually
+        happened; a resident scene is a no-op."""
+        self._check_open()
+        return self._residency.prefetch(self._res_entry)
+
+    def frontend_cache_mb(self) -> float:
+        """Device MB held by this handle's stream sessions' frontend caches
+        (up to ``cache_frames`` FrontendResult pytrees per stream) — memory
+        the static budget model cannot see; charged against the residency
+        budget as the entry's dynamic cost."""
+        with self._worker_lock:
+            streams = list(self._streams)
+        return sum(
+            s.cache_bytes() for s in streams if not s.closed
+        ) / 2**20
 
     @property
     def closed(self) -> bool:
@@ -379,6 +471,8 @@ class Renderer:
         registry.gauge(prefix + "feature_mb_per_device").set(
             self._feature_mb_per_device)
         registry.gauge(prefix + "physical_shards").set(self._phys_shards)
+        frontend_cache_mb = self.frontend_cache_mb()
+        registry.gauge(prefix + "frontend_cache_mb").set(frontend_cache_mb)
         for k, v in self._counters.items():
             registry.gauge(prefix + k).set(v)
         return {
@@ -389,6 +483,10 @@ class Renderer:
             "physical_shards": self._phys_shards,
             "scene_mb_per_device": self._scene_mb_per_device,
             "feature_mb_per_device": self._feature_mb_per_device,
+            # The budget-undercount fix (DESIGN.md §17): live stream
+            # frontend-cache memory, charged against the residency budget.
+            "frontend_cache_mb": frontend_cache_mb,
+            "resident": self.resident,
             "feature_gather": self._feature_gather,
             "cache": self.cache_info(),
             **self._counters,
@@ -827,9 +925,10 @@ class Renderer:
     # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
-        """Drain the worker, drop + unregister the jit cache, and evict this
-        handle's scene layouts from the shared layout cache. Idempotent; the
-        handle is unusable afterwards."""
+        """Drain the worker, drop + unregister the jit cache, and release
+        this handle's residency entry and scene-layout reference (the
+        shared host layout and device copy free when the LAST handle over
+        them closes). Idempotent; the handle is unusable afterwards."""
         if self._closed:
             return
         # Streams first: their speculation workers dispatch through this
@@ -856,20 +955,32 @@ class Renderer:
         # render-cache registry entry); the aggregate engine.* counters stay.
         get_registry().drop(f"engine.{self.cache_name}.")
         self._cache_clear()
+        # Residency release: refcounted, so a second handle (or server)
+        # committed on the same (scene, layout, mesh) keeps its entry —
+        # the shared-eviction fix: close() used to call
+        # evict_scene_layouts(self._source) unconditionally, nuking
+        # layouts other open handles still referenced.
+        try:
+            self._res_entry.cost_fns.remove(self._dyn_cost)
+        except ValueError:
+            pass
+        if self._res_finalizer.detach():
+            self._residency.release(self._res_entry)
+        self._res_entry = None
+        if self._layout_ref is not None:
+            # Scoped to this handle's own (scene, D) layout reference; the
+            # cached host layout drops only when the last reference goes.
+            release_scene_layout(*self._layout_ref)
+            self._layout_ref = None
         if self._source is not None:
-            # The lifecycle fix for the stale-layout case: re-committing one
-            # scene at several shard counts used to leave every layout
-            # resident until the scene was garbage collected.
-            evict_scene_layouts(self._source)
-            # Same fix for the autotune result cache: drop this scene's
-            # in-memory entries (the persisted file keeps them, so a
-            # re-open still skips the search). Lazy import — only a process
-            # that autotuned has the cache registered/populated.
+            # Lifecycle fix for the autotune result cache: drop this
+            # scene's in-memory entries (the persisted file keeps them, so
+            # a re-open still skips the search). Lazy import — only a
+            # process that autotuned has the cache registered/populated.
             if "repro.autotune.cache" in sys.modules:
                 sys.modules["repro.autotune.cache"].evict_autotune_entries(
                     self._source
                 )
-        self._scene = None
         self._source = None
 
     def __enter__(self) -> "Renderer":
@@ -901,6 +1012,7 @@ def open(  # noqa: A001 — the module-level session verb is the API
     queue_depth: int = 64,
     tile_params: Union[None, str, tuple] = None,
     autotune_opts: Optional[dict] = None,
+    residency: Optional[ResidencyManager] = None,
 ) -> Renderer:
     """Commit ``(scene, cfg)`` and return the :class:`Renderer` handle.
 
@@ -931,6 +1043,15 @@ def open(  # noqa: A001 — the module-level session verb is the API
       ``autotune_opts`` forwards search knobs (tiles/group_factors/
       capacities/top_k/warmup/reps/verify/persist) to
       :func:`repro.autotune.autotune`.
+    * ``residency`` — a shared :class:`~repro.residency.ResidencyManager`
+      (DESIGN.md §17): handles committed through one manager share device
+      copies per (scene, layout, mesh) and page in/out against the
+      manager's budget — many scenes serve from a device that fits only a
+      few, bitwise-identically. Without it the handle gets a private
+      manager (no paging unless ``device_budget_mb`` forces it; identical
+      to the pre-residency semantics). When both are given,
+      ``device_budget_mb`` still bounds THIS scene alone; the manager's
+      budget drives aggregate paging.
 
     Use as a context manager (``with engine.open(...) as r:``) or call
     ``r.close()`` to release the committed state.
@@ -941,6 +1062,7 @@ def open(  # noqa: A001 — the module-level session verb is the API
         device_budget_mb=device_budget_mb,
         max_batch=max_batch, max_wait=max_wait, queue_depth=queue_depth,
         tile_params=tile_params, autotune_opts=autotune_opts,
+        residency=residency,
     )
 
 

@@ -52,6 +52,7 @@ import numpy as np
 from repro.core.camera import Camera
 from repro.core.pipeline import register_render_cache, unregister_render_cache
 from repro.obs import get_registry, get_tracer
+from repro.utils import pytree_bytes
 
 _STREAM_SEQ = itertools.count()
 
@@ -224,6 +225,16 @@ class StreamRenderer:
                 "currsize": len(self._cache),
                 "maxsize": self.cache_frames,
             }
+
+    def cache_bytes(self) -> int:
+        """Total DEVICE bytes held by the cached FrontendResult pytrees —
+        the memory the handle's budget model used to undercount; summed
+        into ``Renderer.frontend_cache_mb()`` and charged against the
+        residency budget (DESIGN.md §17)."""
+        with self._lock:
+            return sum(
+                pytree_bytes(e.front) for e in self._cache.values()
+            )
 
     def cache_clear(self) -> None:
         """Drop every cached frontend result and reset hit/miss counts
@@ -476,6 +487,9 @@ class StreamRenderer:
                     "maxsize": self.cache_frames,
                 },
                 "hit_rate": hits / max(hits + misses, 1),
+                "cache_bytes": sum(
+                    pytree_bytes(e.front) for e in self._cache.values()
+                ),
                 **{k: v for k, v in self._counters.items()},
             }
 

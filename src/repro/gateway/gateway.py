@@ -316,10 +316,15 @@ class RenderGateway:
 
         1. stream-sticky: a stream's frames keep hitting the worker that
            holds their frontend cache (re-pinned only when it dies);
-        2. scene-affinity: prefer workers that already committed the scene,
+        2. residency-aware placement (DESIGN.md §17): prefer the worker
+           that has the scene PAGED IN right now — a committed-but-evicted
+           copy still costs a page-in the resident worker skips. Workers
+           that do not report residency (e.g. plain stubs) fall back to
+           their committed set, collapsing this tier into the next;
+        3. scene-affinity: prefer workers that already committed the scene,
            least-loaded among them — unless the best is deeper than
            ``spill_load``, in which case load wins (spill);
-        3. least-loaded routable worker hosting the scene (stragglers are
+        4. least-loaded routable worker hosting the scene (stragglers are
            deprioritized, not excluded — a drained straggler still beats
            no worker at all).
         """
@@ -337,13 +342,21 @@ class RenderGateway:
                 return pinned
 
         def key(w):
-            # (straggler?, not-affine?, load): healthy+affine+idle first.
+            # (straggler?, not-resident?, not-affine?, load):
+            # healthy+resident+idle first.
             affine = req.scene_id in w.committed_scene_ids()
+            resident_fn = getattr(w, "resident_scene_ids", None)
+            resident = (
+                req.scene_id in resident_fn()
+                if resident_fn is not None
+                else affine
+            )
             load = self._load(w.worker_id)
             if affine and load >= self.spill_load:
-                affine = False          # pressure: spill to least-loaded
+                affine = resident = False   # pressure: spill to least-loaded
             return (
                 w.worker_id in self._stragglers,
+                not resident,
                 not affine,
                 load,
                 self._index[w.worker_id],

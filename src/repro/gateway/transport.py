@@ -124,6 +124,7 @@ class SubprocessWorker:
         self._seq = 0
         self._buf = b""
         self._committed: set = set()
+        self._resident: Optional[set] = None   # None until first report
         self._killed = False
         self.proc = subprocess.Popen(
             list(argv),
@@ -201,6 +202,8 @@ class SubprocessWorker:
                 raise WorkerDied(f"worker {self.worker_id}: {err}")
             if "committed" in rep:
                 self._committed = set(rep["committed"])
+            if "resident" in rep:
+                self._resident = set(rep["resident"])
             return rep
 
     # -- worker contract -----------------------------------------------------
@@ -213,6 +216,15 @@ class SubprocessWorker:
 
     def committed_scene_ids(self) -> set:
         return set(self._committed)
+
+    def resident_scene_ids(self) -> set:
+        """Scenes the child last reported device-resident (DESIGN.md §17).
+        Replies carry the set alongside ``committed``; before any report
+        (an old child, or no RPC yet) fall back to the committed set so
+        residency routing degrades to plain affinity."""
+        if self._resident is None:
+            return set(self._committed)
+        return set(self._resident)
 
     def commit(self, scene_id: str, cfg=None) -> None:
         """Pre-commit ``scene_id`` in the child (the child applies its own

@@ -20,6 +20,9 @@ The contract (all methods may raise :class:`WorkerDied`):
   max_batch : int           batch the gateway hands over per dispatch
   alive()                   liveness predicate (no I/O beyond a poll)
   committed_scene_ids()     scenes with a committed handle (affinity routing)
+  resident_scene_ids()      OPTIONAL: committed scenes currently paged in
+                            (residency-aware placement, DESIGN.md §17);
+                            absent -> routed on the committed set alone
   commit(scene_id, cfg)     pre-commit / failover re-commit
   dispatch(requests)        -> {request_id: result-with-.image}, blocking
   ping()                    cheap liveness round-trip (idle heartbeat)
@@ -128,6 +131,13 @@ class InprocWorker:
 
     def committed_scene_ids(self):
         return self.server.committed_scene_ids
+
+    def resident_scene_ids(self):
+        """Committed scenes currently paged IN on this worker's device
+        (DESIGN.md §17) — the gateway's residency-aware placement signal.
+        Optional in the worker contract: workers without it are routed on
+        their committed set alone."""
+        return self.server.resident_scene_ids
 
     def commit(self, scene_id: str, cfg) -> None:
         self._check_alive()

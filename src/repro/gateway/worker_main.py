@@ -126,6 +126,9 @@ def main(argv=None) -> int:
     def committed() -> list:
         return sorted(server.committed_scene_ids)
 
+    def resident() -> list:
+        return sorted(server.resident_scene_ids)
+
     def do_dispatch(msg: dict) -> dict:
         reqs = [
             RenderRequest(
@@ -184,11 +187,15 @@ def main(argv=None) -> int:
                 rep.update(do_dispatch(msg))
             elif op == "shutdown":
                 rep["committed"] = committed()
+                rep["resident"] = resident()
                 _emit(proto, rep)
                 break
             else:
                 raise ValueError(f"unknown op {op!r}")
             rep["committed"] = committed()
+            # Residency piggybacks on every reply, same as the committed
+            # set: the parent's placement data stays fresh with no extra RPC.
+            rep["resident"] = resident()
         except Exception as e:            # noqa: BLE001 — report, don't die
             rep = {"id": msg.get("id"), "ok": False,
                    "error": f"{type(e).__name__}: {e}"}

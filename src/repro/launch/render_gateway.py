@@ -55,6 +55,13 @@ def parse_args(argv=None):
     ap.add_argument("--mode", default="gstg",
                     choices=["gstg", "tile_baseline", "group_baseline"])
     ap.add_argument("--capacity", type=int, default=512)
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="per-device HBM cap forwarded to EVERY worker: "
+                         "each worker's RenderServer pages its committed "
+                         "scenes in/out LRU against this budget "
+                         "(DESIGN.md §17), and the gateway's router "
+                         "prefers workers holding the request's scene "
+                         "resident")
     ap.add_argument("--max-retries", type=int, default=3)
     ap.add_argument("--heartbeat-timeout", type=float, default=30.0)
     ap.add_argument("--kill-worker", default=None,
@@ -142,6 +149,7 @@ def main(argv=None):
                 wid, scenes, mesh=mesh,
                 max_batch=args.max_batch, max_wait=args.max_wait,
                 queue_depth=args.worker_queue_depth, scene_shards=shards,
+                device_budget_mb=args.device_budget_mb,
             )
             for wid in worker_ids
         ]
@@ -159,6 +167,8 @@ def main(argv=None):
             "--backend", args.backend,
             "--capacity", str(args.capacity),
         ]
+        if args.device_budget_mb is not None:
+            extra += ["--device-budget-mb", str(args.device_budget_mb)]
         print(f"spawning {len(worker_ids)} workers x {dpw} devices ...")
         workers = [
             SubprocessWorker(
@@ -234,6 +244,18 @@ def main(argv=None):
     )
     summary = gw.summary()
     print(gw.format())
+    if args.device_budget_mb is not None:
+        # Residency roll call: cached on the parent (subprocess replies
+        # piggyback the set), a server property for inproc — no RPC, safe
+        # even for a killed worker.
+        for w in workers:
+            try:
+                resident = sorted(w.resident_scene_ids())
+            except Exception:       # noqa: BLE001 — reporting only
+                resident = ["?"]
+            print(f"worker {w.worker_id}: "
+                  f"resident={','.join(resident) or '-'} / "
+                  f"committed={','.join(sorted(w.committed_scene_ids()))}")
 
     # -- parity ---------------------------------------------------------------
     parity_failures = 0

@@ -39,14 +39,19 @@ def parse_args(argv=None):
                          "device count to be physically sharded, otherwise "
                          "the shard axis stays logical")
     ap.add_argument("--device-budget-mb", type=float, default=None,
-                    help="refuse to serve if any scene's PER-DEVICE bytes "
-                         "exceed this budget — a simulated HBM cap counting "
-                         "the persistent scene parameters (full size "
+                    help="simulated per-device HBM cap counting the "
+                         "persistent scene parameters (full size "
                          "replicated; 1/D physically sharded) PLUS the "
-                         "transient per-camera projected features, which "
-                         "the feature-sharded gathers keep at N/D per "
-                         "device (full N replicated or with the legacy "
-                         "'flat' gather; DESIGN.md §12)")
+                         "transient per-camera projected features "
+                         "(DESIGN.md §12). A single scene over the cap "
+                         "even alone still refuses to serve; scenes that "
+                         "fit individually but not TOGETHER page in/out "
+                         "LRU through the server's residency manager "
+                         "(DESIGN.md §17) — bitwise-invisibly")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the admission-time residency prefetch "
+                         "(a queued request's paged-out scene normally "
+                         "pages back in before its dispatch)")
     ap.add_argument("--parity-check", action="store_true",
                     help="re-render every completed request on the "
                          "replicated single-camera path and require BITWISE "
@@ -223,14 +228,15 @@ def main(argv=None):
         if args.autotune else None,
         stream_cache_frames=args.stream_cache_frames,
         spec_depth=args.spec_depth,
+        prefetch=not args.no_prefetch,
     )
 
     # Pre-commit every scene through the engine handle (DESIGN.md §11): the
-    # simulated device-HBM cap is enforced by the handle at commit time —
-    # the per-device scene footprint is the full scene when replicated, 1/D
-    # when PHYSICALLY gaussian-sharded over the mesh 'model' axis (a
-    # logical-only shard axis does not reduce per-device bytes). An
-    # over-budget scene fails fast here instead of mid-stream.
+    # simulated device-HBM cap is enforced per scene at commit time — a
+    # scene over the budget even ALONE (after shard escalation) fails fast
+    # here instead of mid-stream. Scenes that fit individually but not
+    # TOGETHER do commit: the server's residency manager pages the cold
+    # ones out LRU and back in on demand (DESIGN.md §17).
     for sid in scene_ids:
         try:
             handle = server.commit(sid, cfg)
@@ -246,7 +252,8 @@ def main(argv=None):
                   f"{hs['feature_mb_per_device']:.2f} per-camera features, "
                   f"gather={hs['feature_gather']}) within "
                   f"{args.device_budget_mb} MB budget "
-                  f"(shards={hs['physical_shards']})")
+                  f"(shards={hs['physical_shards']}, "
+                  f"resident={handle.resident})")
 
     if args.streams > 0:
         print(f"serving {args.streams} streams x {args.stream_frames} frames "
@@ -260,6 +267,14 @@ def main(argv=None):
               f"scene_shards={shards})")
     results = server.run(load, realtime=not args.no_realtime)
     print(server.stats.format())
+    rs = server.residency.stats()
+    print(f"residency: page_ins={rs['page_ins']} "
+          f"page_outs={rs['page_outs']} evictions={rs['evictions']} "
+          f"hits={rs['hits']} prefetches={rs['prefetches']} "
+          f"resident={rs['resident_entries']}/{rs['entries']} "
+          f"({rs['resident_mb']:.2f} MB"
+          + (f" / {rs['budget_mb']:.2f} MB budget)" if rs["budget_mb"]
+             else ", unbudgeted)"))
     if args.streams > 0:
         # Quiesce speculation before any snapshot: in-flight spec runs
         # would otherwise race the trace/metrics dumps below.

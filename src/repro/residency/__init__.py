@@ -1,0 +1,12 @@
+"""Paged scene residency under the device budget (DESIGN.md §17).
+
+``ResidencyManager`` pages committed scene shards in and out of device
+memory against ``device_budget_mb``: host-staged layouts are the backing
+store, ``device_put`` on page-in, dropping the manager's device reference
+on page-out. ``repro.engine.Renderer`` commits through an entry here; a
+``RenderServer`` shares ONE manager across every handle so an over-budget
+commit evicts cold scenes instead of failing fast.
+"""
+from repro.residency.manager import ResidencyEntry, ResidencyManager
+
+__all__ = ["ResidencyEntry", "ResidencyManager"]

@@ -1,0 +1,293 @@
+"""The LRU residency manager: paged scene storage under a device budget.
+
+Every committed scene layout in the engine stays device-resident forever
+(PR 4/5 budget accounting is per-handle and admission-time only), so a host
+can serve at most ``device_budget_mb``-worth of scenes. This module applies
+the paged-KV-cache idiom (fixed per-signature workspaces + paged residency)
+to gaussian scene shards (DESIGN.md §17):
+
+  * ``register()`` files one :class:`ResidencyEntry` per committed
+    ``(scene identity, shard layout, mesh)`` — the HOST-staged layout
+    (numpy leaves) is kept as the paging backing store, so a page-out never
+    loses the scene and a page-in is exactly the commit's own
+    ``device_put``. Entries are refcounted: every handle over the same
+    layout shares ONE entry (and therefore one device copy — the
+    committed-scene sharing the serving tier relied on before).
+  * ``acquire()`` returns the device-resident pytree, paging it in on a
+    miss. Page-in evicts least-recently-ACQUIRED resident entries until the
+    aggregate cost fits the budget; eviction drops the manager's device
+    reference (the backing buffers free as soon as no in-flight dispatch
+    holds them — in-flight renders keep their own transient reference, so
+    paging can never corrupt a dispatch).
+  * Paging is bitwise-invisible: the backing store holds the exact bits the
+    original commit transferred, and ``device_put`` of the same bits under
+    the same sharding reproduces the same committed scene — a
+    paged-out-then-reloaded scene renders identically to one that never
+    moved (tests/test_residency.py round-robins at 2x the budget).
+  * Entry cost = the handle's static per-device model (scene params +
+    per-camera projected features, DESIGN.md §12) PLUS dynamic cost
+    callbacks — the stream sessions' frontend caches the budget model used
+    to undercount register themselves here (``Renderer.frontend_cache_mb``).
+
+Observability: ``residency.*`` counters and ``residency/page_in`` /
+``residency/page_out`` spans are recorded together in the same critical
+section, so ``scripts/validate_trace.py --residency`` can cross-check them
+exactly (the ``spec.*`` precedent from DESIGN.md §15).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.obs import get_registry, get_tracer
+
+
+def _host_backing(tree):
+    """A host (numpy) copy of a staged scene pytree — the paging backing
+    store. ``np.asarray`` passes host-staged numpy leaves through without a
+    copy (the ``shard_scene_cached`` layouts) and pulls jax.Array leaves to
+    host bit-exactly (a replicated scene built with jnp), so the backing
+    never pins device memory and page-in reproduces the original bits."""
+    return jax.tree.map(np.asarray, tree)
+
+
+class ResidencyEntry:
+    """One committed scene layout: host backing + (maybe) a device copy.
+
+    All mutation happens under the owning manager's lock; handles hold the
+    entry object itself and go through :meth:`ResidencyManager.acquire` for
+    every device use.
+    """
+
+    __slots__ = (
+        "key", "label", "backing", "sharding", "static_mb", "device",
+        "refs", "seq", "cost_fns", "page_ins",
+    )
+
+    def __init__(self, key, backing, sharding, static_mb, label):
+        self.key = key
+        self.label = label
+        self.backing = backing
+        self.sharding = sharding
+        self.static_mb = float(static_mb)
+        self.device: Any = None          # the device pytree; None = paged out
+        self.refs = 0
+        self.seq = 0                     # LRU stamp (manager clock)
+        self.page_ins = 0
+        # Dynamic per-entry cost callbacks (MB): live device memory the
+        # static model cannot see — today the handles' stream frontend
+        # caches (the budget-undercount fix). Weakref-backed so an entry
+        # never pins its handles.
+        self.cost_fns: List[Callable[[], float]] = []
+
+    @property
+    def resident(self) -> bool:
+        return self.device is not None
+
+    def cost_mb(self) -> float:
+        """Static model + dynamic callbacks, in per-device MB."""
+        extra = 0.0
+        for fn in list(self.cost_fns):
+            try:
+                extra += float(fn())
+            except Exception:            # noqa: BLE001 — a closing stream
+                pass                     # must not poison eviction decisions
+        return self.static_mb + extra
+
+
+class ResidencyManager:
+    """LRU paging of committed scenes against a per-device MB budget.
+
+    ``budget_mb=None`` never evicts (every entry stays resident once paged
+    in) but still dedupes device copies per layout — the unbudgeted default
+    behaves exactly like the pre-residency engine. Thread-safe: one lock
+    serializes register/acquire/release/eviction (device transfers are
+    serialized by the hardware anyway).
+    """
+
+    def __init__(self, budget_mb: Optional[float] = None,
+                 name: str = "residency"):
+        self.budget_mb = budget_mb
+        self.name = name
+        self._lock = threading.RLock()
+        self._entries: Dict[Any, ResidencyEntry] = {}
+        self._seq = 0
+        self._counters = {
+            "page_ins": 0, "page_outs": 0, "evictions": 0,
+            "hits": 0, "prefetches": 0, "over_budget": 0,
+        }
+
+    # -- registration / lifecycle -------------------------------------------
+
+    def register(
+        self,
+        key,
+        staged,
+        sharding,
+        static_mb: float,
+        label: Optional[str] = None,
+    ) -> ResidencyEntry:
+        """File (or ref-share) the entry for ``key``; does NOT page in.
+
+        A second handle over the same layout gets the SAME entry (refs+1) —
+        that is what keeps two configs over one scene at one scene copy.
+        ``static_mb`` takes the max across registrants (configs may resolve
+        different feature-gather divisors; the conservative cost wins).
+        """
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                entry = ResidencyEntry(
+                    key, _host_backing(staged), sharding, static_mb,
+                    label or repr(key),
+                )
+                self._entries[key] = entry
+            else:
+                entry.static_mb = max(entry.static_mb, float(static_mb))
+            entry.refs += 1
+            return entry
+
+    def release(self, entry: ResidencyEntry) -> None:
+        """Drop one reference; the last release pages out and removes the
+        entry entirely (device copy AND host backing)."""
+        with self._lock:
+            entry.refs -= 1
+            if entry.refs > 0:
+                return
+            if entry.resident:
+                self._page_out(entry, reason="release")
+            self._entries.pop(entry.key, None)
+            entry.cost_fns.clear()
+
+    # -- the paging protocol -------------------------------------------------
+
+    def acquire(self, entry: ResidencyEntry):
+        """The device-resident scene for ``entry``, paging in on a miss.
+
+        Every render path calls this — a resident acquire is an LRU touch
+        plus a counter (no device work)."""
+        with self._lock:
+            self._seq += 1
+            entry.seq = self._seq
+            if entry.resident:
+                self._counters["hits"] += 1
+                get_registry().counter("residency.hits_total").inc()
+                return entry.device
+            return self._page_in(entry)
+
+    def prefetch(self, entry: ResidencyEntry) -> bool:
+        """Admission-time page-in: warm the scene before its dispatch
+        arrives. True when a transfer actually happened (resident scenes
+        are a cheap no-op that does NOT touch LRU order — a queued request
+        must not shield a cold scene from eviction forever)."""
+        with self._lock:
+            if entry.resident:
+                return False
+            self._counters["prefetches"] += 1
+            get_registry().counter("residency.prefetch_total").inc()
+            self._seq += 1
+            entry.seq = self._seq
+            self._page_in(entry)
+            return True
+
+    def _page_in(self, entry: ResidencyEntry):
+        """Lock held. Evict LRU-cold residents until ``entry`` fits, then
+        transfer the backing store to the committed sharding."""
+        registry = get_registry()
+        tracer = get_tracer()
+        if self.budget_mb is not None:
+            need = entry.cost_mb()
+            while self._resident_mb() + need > self.budget_mb:
+                victim = min(
+                    (e for e in self._entries.values()
+                     if e.resident and e is not entry),
+                    key=lambda e: e.seq,
+                    default=None,
+                )
+                if victim is None:
+                    # Nothing left to evict: the single active scene (plus
+                    # its live stream caches) exceeds the budget on its
+                    # own. Rendering must proceed — count the violation
+                    # instead of deadlocking the dispatch.
+                    self._counters["over_budget"] += 1
+                    registry.counter("residency.over_budget_total").inc()
+                    break
+                self._evict(victim)
+        t0 = tracer.clock()
+        entry.device = jax.device_put(entry.backing, entry.sharding)
+        t1 = tracer.clock()
+        entry.page_ins += 1
+        # Counter + span in ONE critical section: the validate_trace.py
+        # residency cross-check (spans == counters) can never race.
+        self._counters["page_ins"] += 1
+        registry.counter("residency.page_ins_total").inc()
+        tracer.complete(
+            "residency/page_in", t0, t1, category="residency",
+            args={"entry": entry.label, "mb": round(entry.static_mb, 4)},
+        )
+        self._publish_gauges()
+        return entry.device
+
+    def _evict(self, entry: ResidencyEntry) -> None:
+        """Lock held. Budget eviction = a counted page-out."""
+        self._counters["evictions"] += 1
+        get_registry().counter("residency.evictions_total").inc()
+        self._page_out(entry, reason="evict")
+
+    def _page_out(self, entry: ResidencyEntry, reason: str) -> None:
+        """Lock held. Drop the manager's device reference — the explicit
+        buffer release: the manager holds the only persistent reference to
+        the committed pytree, so the device buffers free as soon as any
+        in-flight dispatch's transient reference resolves (immediately in
+        the common idle case). The host backing store stays."""
+        tracer = get_tracer()
+        t0 = tracer.clock()
+        entry.device = None
+        t1 = tracer.clock()
+        self._counters["page_outs"] += 1
+        get_registry().counter("residency.page_outs_total").inc()
+        tracer.complete(
+            "residency/page_out", t0, t1, category="residency",
+            args={"entry": entry.label, "reason": reason},
+        )
+        self._publish_gauges()
+
+    # -- accounting / introspection ------------------------------------------
+
+    def _resident_mb(self) -> float:
+        return sum(
+            e.cost_mb() for e in self._entries.values() if e.resident
+        )
+
+    def _publish_gauges(self) -> None:
+        registry = get_registry()
+        registry.gauge("residency.resident_mb").set(self._resident_mb())
+        registry.gauge("residency.resident_entries").set(
+            sum(1 for e in self._entries.values() if e.resident)
+        )
+
+    def resident_keys(self) -> list:
+        with self._lock:
+            return [e.key for e in self._entries.values() if e.resident]
+
+    def stats(self) -> dict:
+        with self._lock:
+            resident = [e for e in self._entries.values() if e.resident]
+            return {
+                "budget_mb": self.budget_mb,
+                "entries": len(self._entries),
+                "resident_entries": len(resident),
+                "resident_mb": self._resident_mb(),
+                **dict(self._counters),
+            }
+
+    def __repr__(self) -> str:
+        s = self.stats()
+        return (
+            f"<ResidencyManager {self.name} budget={self.budget_mb} "
+            f"resident={s['resident_entries']}/{s['entries']} "
+            f"page_ins={s['page_ins']} page_outs={s['page_outs']}>"
+        )

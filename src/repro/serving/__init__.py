@@ -20,6 +20,8 @@ _LAZY = {
     "render_batch_sharded": "repro.serving.sharded",
     "pad_camera_batch": "repro.serving.sharded",
     "shard_scene_cached": "repro.serving.sharded",
+    "acquire_scene_layout": "repro.serving.sharded",
+    "release_scene_layout": "repro.serving.sharded",
     "evict_scene_layouts": "repro.serving.sharded",
     "RenderServer": "repro.serving.server",
     "RequestResult": "repro.serving.server",

@@ -28,6 +28,7 @@ counters (serving/stats.py).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
@@ -36,6 +37,7 @@ import numpy as np
 from repro.core.gaussians import GaussianScene
 from repro.core.pipeline import CameraBatch, render_cache_info
 from repro.obs import emit_request_spans, get_tracer
+from repro.residency import ResidencyManager
 from repro.serving.bucketing import Bucket, BucketingScheduler, padded_size
 from repro.serving.queue import RenderRequest, RequestQueue
 from repro.serving.stats import ServingStats
@@ -61,9 +63,12 @@ class RenderServer:
     Requests choose their own layout via ``cfg.scene_shards`` — it is part
     of the bucket signature, so replicated and sharded dispatches of the
     same scene never mix in a batch; a request's shard count must be 1 or
-    match the server's mesh. ``device_budget_mb`` is forwarded to every
-    handle commit (``engine.open``): a scene whose per-device parameter
-    bytes exceed it refuses to commit. ``autotune=True`` opens every handle
+    match the server's mesh. ``device_budget_mb`` seeds the server's
+    :class:`~repro.residency.ResidencyManager` (DESIGN.md §17): scenes
+    that fit individually but not together page in/out LRU against the
+    budget (bitwise-invisibly) instead of refusing to commit — only a
+    scene too big to fit even alone still fails fast; ``prefetch=False``
+    disables the admission-time page-in. ``autotune=True`` opens every handle
     with ``tile_params='auto'`` (DESIGN.md §13): the first dispatch of each
     (scene, config) pays a tuning sweep — or hits the persisted autotune
     cache — and serves the tuned tiling from then on (``autotune_opts`` is
@@ -86,6 +91,7 @@ class RenderServer:
         stream_cache_frames: int = 32,
         spec_depth: int = 2,
         speculate: bool = True,
+        prefetch: bool = True,
         clock=time.monotonic,
     ):
         self.scenes = dict(scenes)
@@ -97,13 +103,28 @@ class RenderServer:
         self.stream_cache_frames = stream_cache_frames
         self.spec_depth = spec_depth
         self.speculate = speculate
+        self.prefetch = prefetch
         self._clock = clock
         self.queue = RequestQueue(queue_depth, clock=clock)
         self.scheduler = BucketingScheduler(max_batch, max_wait, clock=clock)
         self.stats = ServingStats()
         self.results: Dict[int, RequestResult] = {}
+        # ONE residency manager for every handle this server opens
+        # (DESIGN.md §17): device copies dedupe per (scene, layout, mesh)
+        # — the committed-scene sharing across configs — and, under a
+        # device_budget_mb, an over-budget commit evicts cold scenes
+        # instead of failing fast (a single scene that cannot fit even
+        # alone still raises from engine.open).
+        self.residency = ResidencyManager(
+            budget_mb=device_budget_mb, name="server"
+        )
+        # The server lock: commit()/stream_for()/close() all mutate the
+        # handle registry — without it, commit() could hand out a handle
+        # while close() tears the map down, leaking its jit cache and
+        # scene layouts. Reentrant: stream_for -> commit nests.
+        self._lock = threading.RLock()
+        self._server_closed = False
         self._renderers: Dict[Tuple[str, object], object] = {}
-        self._committed: Dict[Tuple[str, int], object] = {}
         # Stream sessions (DESIGN.md §15): one StreamRenderer per
         # (scene, cfg, stream_id), opened lazily on the stream's first
         # frame over the shared committed handle; the handle's close()
@@ -151,7 +172,25 @@ class RenderServer:
         ok = self.queue.try_put(req)
         if not ok:
             self.stats.count_rejected()
+        elif self.prefetch:
+            self._prefetch(req)
         return ok
+
+    def _prefetch(self, req: RenderRequest) -> None:
+        """Admission-time prefetch (DESIGN.md §17): if the admitted
+        request's scene is already committed but paged out, page it back
+        in NOW so the dispatch that follows finds it resident. Only
+        already-committed handles are touched — admission stays cheap and
+        raise-free (a first-time scene pays its commit at dispatch, as
+        before)."""
+        with self._lock:
+            handle = self._renderers.get((req.scene_id, req.cfg))
+            if handle is None or handle.closed or handle.resident:
+                return
+            try:
+                handle.prefetch()
+            except Exception:       # noqa: BLE001 — prefetch is advisory;
+                pass                # the dispatch path surfaces real errors
 
     # -- committed handles --------------------------------------------------
 
@@ -160,54 +199,66 @@ class RenderServer:
         """Scenes with at least one committed handle — the gateway tier's
         scene-affinity signal (route to the worker already holding the
         scene on device before paying a commit elsewhere)."""
-        return frozenset(sid for sid, _cfg in self._renderers)
+        with self._lock:
+            return frozenset(sid for sid, _cfg in self._renderers)
+
+    @property
+    def resident_scene_ids(self) -> frozenset:
+        """Committed scenes whose device copy is resident RIGHT NOW (not
+        paged out by the residency manager) — the gateway tier's
+        residency-aware placement signal: a resident worker serves the
+        request without paying a page-in."""
+        with self._lock:
+            return frozenset(
+                sid for (sid, _cfg), h in self._renderers.items()
+                if not h.closed and h.resident
+            )
 
     def commit(self, scene_id: str, cfg):
         """The shared engine handle for ``(scene_id, cfg)``, opened on first
-        use. Public so drivers can pre-commit scenes before taking load — an
-        over-budget scene then fails fast here instead of mid-stream
-        (``device_budget_mb`` is enforced by ``engine.open``).
+        use. Public so drivers can pre-commit scenes before taking load — a
+        scene too big to fit the budget even ALONE still fails fast here
+        (``engine.open`` raises); scenes that fit individually but not
+        together page in and out through the server's residency manager
+        instead of failing (DESIGN.md §17).
 
-        Handles are per (scene, config) — the compiled programs differ — but
-        the committed DEVICE scene is shared per (scene, layout): further
-        handles are opened on the first handle's ``committed_scene``, so two
-        configs over one scene cost one scene copy, not two."""
-        key = (scene_id, cfg)
-        handle = self._renderers.get(key)
-        if handle is None:
-            from repro import engine
+        Handles are per (scene, config) — the compiled programs differ —
+        but the committed DEVICE scene is shared per (scene, layout): the
+        residency manager dedupes entries, so two configs over one scene
+        cost one scene copy, not two. Raises RuntimeError after close()."""
+        with self._lock:
+            if self._server_closed:
+                raise RuntimeError("RenderServer is closed")
+            key = (scene_id, cfg)
+            handle = self._renderers.get(key)
+            if handle is None:
+                from repro import engine
 
-            shards = getattr(cfg, "scene_shards", 1)
-            scene = self._committed.get(
-                (scene_id, shards), self.scenes[scene_id]
-            )
-            handle = engine.open(
-                scene, cfg,
-                mesh=self.mesh,
-                device_budget_mb=self.device_budget_mb,
-                tile_params="auto" if self.autotune else None,
-                autotune_opts=self.autotune_opts,
-            )
-            self._committed.setdefault(
-                (scene_id, handle.scene_shards), handle.committed_scene
-            )
-            self._renderers[key] = handle
-        return handle
+                handle = engine.open(
+                    self.scenes[scene_id], cfg,
+                    mesh=self.mesh,
+                    residency=self.residency,
+                    tile_params="auto" if self.autotune else None,
+                    autotune_opts=self.autotune_opts,
+                )
+                self._renderers[key] = handle
+            return handle
 
     def stream_for(self, req: RenderRequest):
         """The stream session serving ``req``'s (scene, cfg, stream_id),
         opened on first use over the shared committed handle."""
-        key = (req.scene_id, req.cfg, req.stream_id)
-        stream = self._streams.get(key)
-        if stream is None or stream.closed:
-            handle = self.commit(req.scene_id, req.cfg)
-            stream = handle.open_stream(
-                cache_frames=self.stream_cache_frames,
-                spec_depth=self.spec_depth,
-                speculate=self.speculate,
-            )
-            self._streams[key] = stream
-        return stream
+        with self._lock:
+            key = (req.scene_id, req.cfg, req.stream_id)
+            stream = self._streams.get(key)
+            if stream is None or stream.closed:
+                handle = self.commit(req.scene_id, req.cfg)
+                stream = handle.open_stream(
+                    cache_frames=self.stream_cache_frames,
+                    spec_depth=self.spec_depth,
+                    speculate=self.speculate,
+                )
+                self._streams[key] = stream
+            return stream
 
     def stream_stats(self) -> Dict[str, dict]:
         """Per-stream session counters keyed by registry cache name."""
@@ -367,14 +418,17 @@ class RenderServer:
     # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
-        """Close every committed handle (evicting their jit caches and scene
-        layouts — each handle also closes its stream sessions). The server
-        can keep admitting afterwards — handles reopen lazily — but a
-        shutdown path should not rely on that."""
-        while self._renderers:
-            self._renderers.pop(next(iter(self._renderers))).close()
-        self._committed.clear()
-        self._streams.clear()
+        """Close every committed handle (releasing their jit caches, scene
+        layouts, and residency entries — each handle also closes its
+        stream sessions). TERMINAL: a later ``commit()`` raises
+        RuntimeError — the server lock makes close-vs-commit a clean
+        ordering instead of a race that could hand out a handle the
+        teardown never closes (leaked jit cache + layouts). Idempotent."""
+        with self._lock:
+            self._server_closed = True
+            while self._renderers:
+                self._renderers.pop(next(iter(self._renderers))).close()
+            self._streams.clear()
 
     def __enter__(self) -> "RenderServer":
         return self
@@ -420,6 +474,10 @@ class RenderServer:
                 self._pump_queue()
                 if not self.queue.try_put(req):
                     self.stats.count_rejected()
+                elif self.prefetch:
+                    self._prefetch(req)
+            elif self.prefetch:
+                self._prefetch(req)
             if realtime:
                 self.step()
         self.drain()

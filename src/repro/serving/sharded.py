@@ -16,7 +16,10 @@ free-function entry:
     padded/sharded layout per (scene identity, D), registered with
     ``core.pipeline.register_render_cache`` so ``render_cache_clear()`` /
     ``render_cache_info()`` cover it and the server's cache-hit stats stay
-    truthful; ``evict_scene_layouts`` is the handle-lifecycle eviction hook;
+    truthful; handles hold layouts through the refcounted
+    ``acquire_scene_layout``/``release_scene_layout`` pair (a layout frees
+    when its LAST handle closes — never under another open handle), and
+    ``evict_scene_layouts`` drops a scene's unreferenced layouts;
   * ``render_batch_sharded`` — a DeprecationWarning shim delegating to the
     module-default handle, bitwise-identical to the handle path by
     construction.
@@ -68,6 +71,7 @@ def pad_camera_batch(batch: CameraBatch, target: int) -> CameraBatch:
 
 _LAYOUT_CACHE_MAX = 16
 _layout_cache: dict = {}           # (id(scene), D) -> ShardedScene
+_layout_refs: dict = {}            # (id(scene), D) -> open-handle refcount
 _layout_stats = {"hits": 0, "misses": 0}
 
 
@@ -108,24 +112,65 @@ def shard_scene_cached(scene: GaussianScene, num_shards: int) -> ShardedScene:
         return hit
     _layout_stats["misses"] += 1
     out = shard_scene_host(scene, num_shards)
-    while len(_layout_cache) >= _LAYOUT_CACHE_MAX:
-        _layout_cache.pop(next(iter(_layout_cache)))
+    if len(_layout_cache) >= _LAYOUT_CACHE_MAX:
+        # Capacity eviction skips REFERENCED layouts (an open handle's
+        # backing store must not vanish under it); the cache may exceed
+        # its nominal max while that many handles are open — bounded by
+        # the open-handle count, not unbounded growth.
+        for k in list(_layout_cache):
+            if len(_layout_cache) < _LAYOUT_CACHE_MAX:
+                break
+            if _layout_refs.get(k, 0) <= 0:
+                _layout_cache.pop(k)
     _layout_cache[key] = out
-    weakref.finalize(scene, _layout_cache.pop, key, None)
+    weakref.finalize(scene, _drop_layout_key, key)
     return out
 
 
-def evict_scene_layouts(scene: GaussianScene) -> int:
-    """Drop EVERY cached layout of ``scene``, at any shard count.
+def _drop_layout_key(key) -> None:
+    """Scene-GC finalizer: with the source scene gone no handle can hold a
+    layout reference legitimately — drop both maps (id() may be recycled)."""
+    _layout_cache.pop(key, None)
+    _layout_refs.pop(key, None)
 
-    The lifecycle hook ``repro.engine.Renderer.close()`` calls: before it,
-    re-committing one scene at a different ``scene_shards`` left the old
-    layout resident until the scene itself was garbage collected (the
-    weakref finalizer is per-scene, not per-layout). Returns the number of
-    layouts evicted; the finalizers registered by ``shard_scene_cached``
-    tolerate the missing keys."""
+
+def acquire_scene_layout(scene: GaussianScene, num_shards: int):
+    """``shard_scene_cached`` plus a reference: the layout stays cached (and
+    exempt from capacity eviction) until every acquirer releases.
+
+    The shared-eviction fix: ``Renderer.close()`` used to call
+    :func:`evict_scene_layouts` unconditionally, nuking layouts still
+    referenced by OTHER open handles committed on the same scene; handles
+    now acquire here and release exactly their own ``(scene, D)`` entry.
+    """
+    out = shard_scene_cached(scene, num_shards)
+    key = (id(scene), int(num_shards))
+    _layout_refs[key] = _layout_refs.get(key, 0) + 1
+    return out
+
+
+def release_scene_layout(scene: GaussianScene, num_shards: int) -> bool:
+    """Drop one reference on ``(scene, num_shards)``; the LAST release
+    evicts the cached layout. True when the layout was actually dropped."""
+    key = (id(scene), int(num_shards))
+    remaining = _layout_refs.get(key, 0) - 1
+    if remaining > 0:
+        _layout_refs[key] = remaining
+        return False
+    _layout_refs.pop(key, None)
+    return _layout_cache.pop(key, None) is not None
+
+
+def evict_scene_layouts(scene: GaussianScene) -> int:
+    """Drop every UNREFERENCED cached layout of ``scene``, at any shard
+    count (explicit cache hygiene for code that staged layouts outside a
+    handle). Layouts still referenced by open handles survive — use
+    :func:`release_scene_layout` for those. Returns the eviction count."""
     sid = id(scene)
-    keys = [k for k in _layout_cache if k[0] == sid]
+    keys = [
+        k for k in _layout_cache
+        if k[0] == sid and _layout_refs.get(k, 0) <= 0
+    ]
     for k in keys:
         _layout_cache.pop(k, None)
     return len(keys)

@@ -165,17 +165,43 @@ def test_handle_close_empties_registry(tiny_scene, base_cfg):
     r.close()                                       # idempotent
 
 
-def test_close_evicts_every_layout_of_the_scene(tiny_scene, base_cfg):
-    """The stale-entry fix: committing one scene at SEVERAL shard counts
-    used to leave every layout resident until the scene was garbage
-    collected; close() now evicts them all."""
-    from repro.serving.sharded import shard_scene_cached
+def test_close_releases_only_own_layout(tiny_scene, base_cfg):
+    """close() releases exactly this handle's own (scene, D) layout
+    reference. Other layouts of the scene are NOT nuked implicitly any
+    more (the shared-eviction fix) — they stay until explicit
+    evict_scene_layouts()/capacity eviction/scene GC."""
+    from repro.serving.sharded import evict_scene_layouts, shard_scene_cached
 
     render_cache_clear()
     r = engine.open(tiny_scene, base_cfg, scene_shards=2)
-    shard_scene_cached(tiny_scene, 3)   # a second layout of the SAME scene
+    shard_scene_cached(tiny_scene, 3)   # a second, UNREFERENCED layout
     assert render_cache_info()["scene_layout"]["currsize"] == 2
     r.close()
+    # The handle's own (scene, 2) entry is gone; the unreferenced bare
+    # layout survives until explicitly evicted.
+    assert render_cache_info()["scene_layout"]["currsize"] == 1
+    assert evict_scene_layouts(tiny_scene) == 1
+    assert render_cache_info()["scene_layout"]["currsize"] == 0
+
+
+def test_close_keeps_layout_shared_with_other_open_handle(
+    tiny_scene, base_cfg
+):
+    """Regression (two handles, one scene): closing one handle must not
+    evict the host layout the OTHER open handle still references —
+    close() used to call evict_scene_layouts(scene) unconditionally,
+    nuking every layout of the scene."""
+    render_cache_clear()
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+    a = engine.open(tiny_scene, base_cfg, scene_shards=2)
+    b = engine.open(tiny_scene, base_cfg, scene_shards=2)
+    assert render_cache_info()["scene_layout"]["currsize"] == 1
+    a.close()
+    assert render_cache_info()["scene_layout"]["currsize"] == 1, (
+        "closing one handle evicted a layout another open handle references"
+    )
+    b.render(cam)                       # the survivor still renders
+    b.close()
     assert render_cache_info()["scene_layout"]["currsize"] == 0
 
 

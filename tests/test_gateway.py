@@ -458,3 +458,103 @@ def test_subprocess_worker_transport_roundtrip_and_sigkill():
     finally:
         w.shutdown()
         w.shutdown()                          # idempotent
+
+
+def test_route_prefers_resident_over_merely_committed():
+    # Residency-aware placement (DESIGN.md §17): both workers committed the
+    # scene, but only one still holds it paged IN — that one serves without
+    # paying a page-in, so it wins even from a higher index. Residency is a
+    # preference with the same spill rule as affinity, not a pin.
+    class ResidencyStub(StubWorker):
+        def __init__(self, worker_id, scene_ids, *, committed=(),
+                     resident=()):
+            super().__init__(worker_id, scene_ids, committed=committed)
+            self._resident = set(resident)
+
+        def resident_scene_ids(self):
+            return set(self._resident)
+
+    w0 = ResidencyStub("w0", ["a"], committed=["a"], resident=[])
+    w1 = ResidencyStub("w1", ["a"], committed=["a"], resident=["a"])
+    gw = RenderGateway([w0, w1], spill_load=2)
+    assert gw._pick_worker(_req(1, "a")) == "w1"
+    # at spill depth residency is demoted along with affinity
+    gw._inbox["w1"].extend([_req(98), _req(99)])
+    assert gw._pick_worker(_req(2, "a")) == "w0"
+    gw.close()
+
+
+def test_route_without_resident_signal_falls_back_to_affinity():
+    # Plain StubWorker has no resident_scene_ids(): the router must treat
+    # resident == committed (the optional-contract fallback), keeping the
+    # pre-residency ordering bit-for-bit.
+    w0 = StubWorker("w0", ["a"])
+    w1 = StubWorker("w1", ["a"], committed=["a"])
+    gw = RenderGateway([w0, w1])
+    assert gw._pick_worker(_req(1, "a")) == "w1"
+    gw.close()
+
+
+@pytest.mark.slow
+def test_dead_worker_paged_out_scene_repages_on_survivor():
+    """A scene committed-but-paged-OUT on a worker that dies must complete
+    on the survivor: failover re-routes, the survivor pages the scene in
+    under ITS OWN budget (evicting its cold scene), and the pixels are
+    bitwise-identical to an unbudgeted direct run."""
+    import jax
+    import numpy as np
+
+    from repro import engine
+    from repro.core import orbit_cameras
+    from repro.core.gaussians import scene_like_paper
+    from repro.core.pipeline import RenderConfig
+    from repro.gateway.worker import InprocWorker
+
+    scene_ids = ["train", "truck"]
+    built = {
+        sid: scene_like_paper(jax.random.key(i), sid, 300)
+        for i, sid in enumerate(scene_ids)
+    }
+    cams = orbit_cameras(2, 4.5, 64, 64)
+    cfg = RenderConfig(mode="gstg", backend="reference", span=6)
+
+    probe = engine.open(built["train"], cfg)
+    st = probe.stats()
+    cost = st["scene_mb_per_device"] + st["feature_mb_per_device"]
+    probe.close()
+    budget = 1.5 * cost                     # fits ONE of the two scenes
+
+    warm_ids = iter(range(-1, -100, -1))
+
+    def warm(w):
+        # Warming train then truck leaves truck resident and train paged
+        # out on a budget this tight (and pre-compiles both programs).
+        for sid in scene_ids:
+            w.dispatch([RenderRequest(next(warm_ids), sid, cams[0], cfg)])
+        return w
+
+    w0 = warm(InprocWorker("w0", built, max_batch=4,
+                           device_budget_mb=budget))
+    w1 = warm(InprocWorker("w1", built, max_batch=4,
+                           device_budget_mb=budget))
+    assert "train" in w0.committed_scene_ids()
+    assert "train" not in w0.resident_scene_ids()
+
+    gw = RenderGateway([w0, w1], retry_backoff_s=0.005)
+    gw.kill_worker("w0")
+    res = gw.run([(0.0, RenderRequest(1, "train", cams[1], cfg))])
+    assert len(res) == 1 and not gw.failed, f"failed: {gw.failed}"
+    assert res[1].worker_id == "w1"
+    assert gw.counts["failovers"] == 1
+    assert "train" in w1.resident_scene_ids(), (
+        "survivor served the failover without paging the scene in"
+    )
+
+    ref = InprocWorker("ref", built, max_batch=4)   # no budget: never pages
+    direct = ref.dispatch([RenderRequest(99, "train", cams[1], cfg)])[99]
+    assert np.array_equal(
+        np.asarray(direct.image), np.asarray(res[1].image)
+    ), "re-paged failover render diverged from the unbudgeted direct run"
+    assert ref.server.residency.stats()["page_outs"] == 0
+    ref.shutdown()
+    gw.close()

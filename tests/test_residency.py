@@ -1,0 +1,305 @@
+"""Paged scene residency under the device budget (DESIGN.md §17).
+
+Manager-level unit tests (LRU paging, refcounts, budget eviction) plus the
+engine/serving integration invariants: paging is bitwise-invisible (a
+thrash workload at 2x the budget renders identically to an unbudgeted
+run), ``residency.*`` counters match the ``residency/*`` trace spans, the
+stream frontend caches are charged against the budget (the undercount
+fix), and an over-budget server commit evicts cold scenes instead of
+failing fast.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import make_camera, orbit_cameras, random_scene
+from repro.core.pipeline import RenderConfig
+from repro.obs import get_registry
+from repro.residency import ResidencyManager
+
+
+@pytest.fixture()
+def res_cfg():
+    return RenderConfig(
+        tile=16, group=64, group_capacity=256, tile_capacity=256
+    )
+
+
+def _counter(name: str) -> int:
+    return get_registry().snapshot()["counters"].get(name, 0)
+
+
+# ---------------------------------------------------------------------------
+# manager unit tests (plain pytrees — no engine involvement)
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed: int):
+    rng = np.random.default_rng(seed)
+    return {"x": rng.standard_normal((64, 3)).astype(np.float32)}
+
+
+def test_manager_register_acquire_release():
+    mgr = ResidencyManager(budget_mb=None)
+    entry = mgr.register("k", _tree(0), None, static_mb=1.0)
+    assert not entry.resident
+    dev = mgr.acquire(entry)
+    assert entry.resident
+    assert np.array_equal(np.asarray(dev["x"]), _tree(0)["x"])
+    # A resident acquire is a hit (same object, no new transfer).
+    assert mgr.acquire(entry) is dev
+    s = mgr.stats()
+    assert s["page_ins"] == 1 and s["hits"] == 1 and s["page_outs"] == 0
+    mgr.release(entry)
+    assert mgr.stats()["entries"] == 0
+    assert mgr.stats()["page_outs"] == 1       # release pages out
+
+
+def test_manager_shared_entry_refcount():
+    """Two registrants of one key share ONE entry (and device copy); the
+    entry survives until the LAST release."""
+    mgr = ResidencyManager()
+    a = mgr.register("k", _tree(1), None, static_mb=1.0)
+    b = mgr.register("k", _tree(1), None, static_mb=2.0)
+    assert a is b
+    assert a.static_mb == 2.0                  # conservative max
+    assert mgr.acquire(a) is mgr.acquire(b)
+    mgr.release(a)
+    assert mgr.stats()["entries"] == 1         # still referenced
+    assert a.resident
+    mgr.release(b)
+    assert mgr.stats()["entries"] == 0
+
+
+def test_manager_lru_eviction_against_budget():
+    """Page-in past the budget evicts the least-recently-acquired resident;
+    a re-acquire of the victim pages it back in (evicting in turn)."""
+    mgr = ResidencyManager(budget_mb=2.5)
+    ea = mgr.register("a", _tree(2), None, static_mb=1.0)
+    eb = mgr.register("b", _tree(3), None, static_mb=1.0)
+    ec = mgr.register("c", _tree(4), None, static_mb=1.0)
+    mgr.acquire(ea)
+    mgr.acquire(eb)
+    assert ea.resident and eb.resident
+    mgr.acquire(ec)                            # over budget: evict LRU = a
+    assert not ea.resident and eb.resident and ec.resident
+    assert mgr.stats()["evictions"] == 1
+    mgr.acquire(eb)                            # touch b: c becomes LRU
+    mgr.acquire(ea)                            # page a back: evicts c
+    assert ea.resident and eb.resident and not ec.resident
+    assert mgr.stats()["page_ins"] == 4 and mgr.stats()["evictions"] == 2
+    for e in (ea, eb, ec):
+        mgr.release(e)
+
+
+def test_manager_single_entry_over_budget_still_serves():
+    """With nothing left to evict, the active entry pages in anyway (the
+    dispatch must proceed) and the violation is counted."""
+    mgr = ResidencyManager(budget_mb=0.5)
+    e = mgr.register("big", _tree(5), None, static_mb=1.0)
+    assert mgr.acquire(e) is not None
+    assert e.resident
+    assert mgr.stats()["over_budget"] == 1
+    mgr.release(e)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: bitwise-invisible paging + counters == spans
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_thrash_round_robin_bitwise_and_counters_match_spans(
+    res_cfg, jit_render_fn
+):
+    """Commit 4 scenes at 2x the budget and render round-robin for two
+    laps: every image is bitwise-identical to an unbudgeted (stateless)
+    render, eviction actually happened, and the residency counters match
+    the residency/* trace spans exactly."""
+    from repro.obs import Tracer, get_tracer, set_tracer
+
+    scenes = [random_scene(__import__("jax").random.key(10 + i), 200,
+                           extent=2.5) for i in range(4)]
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+
+    # Size the budget off the real committed cost: fits 2 of 4 scenes.
+    probe = engine.open(scenes[0], res_cfg)
+    st = probe.stats()
+    cost = st["scene_mb_per_device"] + st["feature_mb_per_device"]
+    probe.close()
+    budget = 2.2 * cost
+
+    refs = [np.asarray(jit_render_fn(s, cam, res_cfg).image) for s in scenes]
+
+    c0 = {k: _counter(f"residency.{k}_total")
+          for k in ("page_ins", "page_outs")}
+    prev = set_tracer(Tracer(enabled=True))
+    try:
+        mgr = ResidencyManager(budget_mb=budget, name="thrash")
+        handles = [
+            engine.open(s, res_cfg, residency=mgr) for s in scenes
+        ]
+        assert mgr.stats()["resident_entries"] <= 2
+        for lap in range(2):
+            for i, h in enumerate(handles):
+                img = np.asarray(h.render(cam).image)
+                assert np.array_equal(img, refs[i]), (
+                    f"scene {i} lap {lap} diverged after paging"
+                )
+        s = mgr.stats()
+        assert s["page_outs"] > 0, "thrash at 2x budget never evicted"
+        assert s["page_ins"] > len(handles), "no scene ever paged back in"
+        assert s["resident_mb"] <= budget + 1e-9
+
+        # counters == spans (the validate_trace.py residency contract)
+        names = [e.name for e in get_tracer().events()]
+        assert names.count("residency/page_in") == (
+            _counter("residency.page_ins_total") - c0["page_ins"]
+        )
+        assert names.count("residency/page_out") == (
+            _counter("residency.page_outs_total") - c0["page_outs"]
+        )
+        for h in handles:
+            h.close()
+        assert mgr.stats()["entries"] == 0
+    finally:
+        set_tracer(prev)
+
+
+def test_open_via_manager_single_scene_over_budget_raises(res_cfg):
+    """The per-scene fail-fast is preserved under a shared manager: a
+    scene that cannot fit the budget even ALONE still refuses to commit
+    (paging cannot help — there would be nothing to evict)."""
+    scene = random_scene(__import__("jax").random.key(3), 200, extent=2.5)
+    mgr = ResidencyManager(budget_mb=1e-4)
+    with pytest.raises(ValueError, match="over the"):
+        engine.open(scene, res_cfg, residency=mgr)
+
+
+# ---------------------------------------------------------------------------
+# the budget-undercount fix: stream frontend caches are charged
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_cache_counted_against_budget(tiny_scene, res_cfg):
+    """Regression: stream sessions' frontend caches hold device memory the
+    budget model used to ignore — they now surface in
+    Renderer.stats()['frontend_cache_mb'] and in the residency entry's
+    dynamic cost (what eviction decisions see)."""
+    with engine.open(tiny_scene, res_cfg) as h:
+        assert h.stats()["frontend_cache_mb"] == 0.0
+        stream = h.open_stream(cache_frames=4, speculate=False)
+        for cam in orbit_cameras(3, 4.5, 64, 64):
+            stream.render(cam)
+        mb = h.stats()["frontend_cache_mb"]
+        assert mb > 0.0, "cached FrontendResults invisible to the budget"
+        assert mb == pytest.approx(stream.cache_bytes() / 2**20)
+        assert stream.stats()["cache_bytes"] == stream.cache_bytes()
+        # The entry's dynamic cost — the number eviction compares against
+        # the budget — includes the cache on top of the static model.
+        entry = h._res_entry
+        assert entry.cost_mb() == pytest.approx(entry.static_mb + mb)
+        stream.close()
+        assert h.stats()["frontend_cache_mb"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serving integration: evict-instead-of-fail + admission prefetch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_server_overbudget_commit_evicts_instead_of_failing(
+    tiny_scene, res_cfg
+):
+    """A server budgeted for ~1 scene commits and serves 3: commits evict
+    cold scenes (never ValueError), every request completes bitwise-equal
+    to an unbudgeted run, and the eviction counters are nonzero."""
+    import jax
+
+    from repro.serving.queue import RenderRequest
+    from repro.serving.server import RenderServer
+
+    scenes = {
+        f"s{i}": random_scene(jax.random.key(20 + i), 200, extent=2.5)
+        for i in range(3)
+    }
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+    probe = engine.open(scenes["s0"], res_cfg)
+    st = probe.stats()
+    cost = st["scene_mb_per_device"] + st["feature_mb_per_device"]
+    probe.close()
+
+    load = [
+        (0.0, RenderRequest(i, f"s{i % 3}", cam, res_cfg))
+        for i in range(6)
+    ]
+    with RenderServer(scenes, device_budget_mb=1.5 * cost,
+                      max_batch=2, max_wait=0.0) as budgeted:
+        res = budgeted.run(load, realtime=False)
+        assert sorted(res) == list(range(6))
+        s = budgeted.residency.stats()
+        assert s["evictions"] > 0 and s["page_outs"] > 0
+        assert len(budgeted.resident_scene_ids) <= len(
+            budgeted.committed_scene_ids
+        )
+        images = {i: res[i].image for i in res}
+
+    load2 = [
+        (0.0, RenderRequest(i, f"s{i % 3}", cam, res_cfg))
+        for i in range(6)
+    ]
+    with RenderServer(scenes, max_batch=2, max_wait=0.0) as unbudgeted:
+        ref = unbudgeted.run(load2, realtime=False)
+        assert unbudgeted.residency.stats()["page_outs"] == 0
+        for i in ref:
+            assert np.array_equal(images[i], ref[i].image), (
+                f"request {i}: paged serving diverged from unbudgeted"
+            )
+
+
+def test_server_admission_prefetch_pages_in(tiny_scene, res_cfg):
+    """An admitted request for a committed-but-paged-out scene pages it
+    back in at admission (before its dispatch), counted as a prefetch."""
+    import jax
+
+    from repro.serving.queue import RenderRequest
+    from repro.serving.server import RenderServer
+
+    scenes = {
+        "a": tiny_scene,
+        "b": random_scene(jax.random.key(30), 200, extent=2.5),
+    }
+    cam = make_camera((0.0, 1.0, 4.5), (0, 0, 0), 64, 64)
+    probe = engine.open(scenes["a"], res_cfg)
+    st = probe.stats()
+    cost = st["scene_mb_per_device"] + st["feature_mb_per_device"]
+    probe.close()
+
+    server = RenderServer(scenes, device_budget_mb=1.5 * cost)
+    try:
+        server.commit("a", res_cfg)
+        server.commit("b", res_cfg)            # evicts a (budget fits one)
+        assert server.resident_scene_ids == frozenset({"b"})
+        pre = server.residency.stats()["prefetches"]
+        assert server.submit(RenderRequest(0, "a", cam, res_cfg))
+        assert "a" in server.resident_scene_ids, (
+            "admission did not prefetch the paged-out scene"
+        )
+        assert server.residency.stats()["prefetches"] == pre + 1
+    finally:
+        server.close()
+
+
+def test_server_close_is_terminal(tiny_scene, res_cfg):
+    from repro.serving.server import RenderServer
+
+    server = RenderServer({"scene": tiny_scene})
+    server.commit("scene", res_cfg)
+    server.close()
+    assert server._renderers == {}
+    with pytest.raises(RuntimeError, match="closed"):
+        server.commit("scene", res_cfg)
+    server.close()                             # idempotent

@@ -537,3 +537,38 @@ def test_render_serve_cli_multi_device(tmp_path):
     assert snap["schema"] == "repro.metrics/v1"
     assert snap["counters"]["serving.requests_total"] == 6
     assert snap["histograms"]["serving.latency_s"]["count"] == 6
+
+
+def test_server_close_vs_commit_race_leaves_registry_empty(
+    tiny_scene, serving_cfg
+):
+    """close() racing commit() must never leak a handle: the server lock
+    orders them — a commit that wins the lock opens a handle close() then
+    tears down; one that loses raises RuntimeError. Either way the handle
+    registry is empty after close and every handle handed out is closed."""
+    import threading
+
+    from repro.serving.server import RenderServer
+
+    for _attempt in range(3):
+        server = RenderServer({"scene": tiny_scene})
+        handles, barrier = [], threading.Barrier(3)
+
+        def committer():
+            barrier.wait()
+            try:
+                handles.append(server.commit("scene", serving_cfg))
+            except RuntimeError:
+                pass                     # lost the race: commit after close
+
+        threads = [threading.Thread(target=committer) for _ in range(2)]
+        for t in threads:
+            t.start()
+        barrier.wait()
+        server.close()
+        for t in threads:
+            t.join()
+        assert server._renderers == {}, "close() left a handle registered"
+        assert all(h.closed for h in handles), "a raced commit leaked"
+        with pytest.raises(RuntimeError, match="closed"):
+            server.commit("scene", serving_cfg)
